@@ -1,0 +1,138 @@
+"""Fig. 6 analogue: end-to-end serving across policies x workloads x models.
+
+Legacy (fixed-pipeline, static full-machine SP) vs GF-DiT policies
+(FCFS-SP1, SRTF-SP1, SRTF-SPmax, EDF) on the short and foreground-burst
+traces for both the image and video models.  Metrics: throughput, mean
+latency, P95 latency, SLO attainment (failures count as violations).
+
+Simulation-driven (paper §5.5: the simulator is an execution backend for
+the same policy interface; fidelity measured in sim_fidelity.py).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.dit_models import DIT_IMAGE, DIT_VIDEO
+from repro.core.cost_model import CostModel
+from repro.core.policies import make_policy
+from repro.core.scheduler import ControlPlane
+from repro.core.simulator import SimBackend
+from repro.diffusion.adapters import convert_request
+from repro.diffusion.workloads import foreground_burst_trace, short_trace
+
+RESULTS = Path(__file__).parent / "results"
+
+POLICIES = ["legacy", "fcfs-sp1", "srtf-sp1", "srtf-spmax", "edf"]
+NUM_RANKS = 4
+STEPS = 25
+
+
+def _trace(model: str, workload: str):
+    cost = CostModel()
+    if workload == "short":
+        return short_trace(model, cost, duration=120, load=0.85,
+                           num_ranks=NUM_RANKS, steps=STEPS, seed=7)
+    # heavier burst pressure (paper calibrates per-platform "comparable
+    # serving pressure"; its A100 foreground-burst drives Legacy to 37%
+    # completion)
+    return foreground_burst_trace(model, cost, duration=240, load=1.05,
+                                  num_ranks=NUM_RANKS, steps=STEPS,
+                                  seed=11)
+
+
+def _metrics_with_timeout(cp, timeout: float) -> dict:
+    """Paper §6.1: requests exceeding the loose client timeout are failures
+    and SLO violations; latency stats cover completed requests only."""
+    lat, done, slo_miss = [], 0, 0
+    total = len(cp.requests)
+    span = 0.0
+    for req in cp.requests.values():
+        t = (req.done_time - req.arrival) if req.done_time is not None \
+            else None
+        if t is None or t > timeout:
+            slo_miss += 1
+            continue
+        done += 1
+        lat.append(t)
+        span = max(span, req.done_time)
+        if req.deadline is not None and req.done_time > req.deadline:
+            slo_miss += 1
+    lat_s = sorted(lat)
+    return {
+        "completed": done, "failed": total - done,
+        "throughput_rps": done / span if span else 0.0,
+        "mean_latency_s": sum(lat) / len(lat) if lat else float("nan"),
+        "p95_latency_s": (lat_s[int(0.95 * (len(lat_s) - 1))]
+                          if lat_s else float("nan")),
+        "slo_attainment": 1.0 - slo_miss / total if total else 1.0,
+        "makespan_s": span,
+    }
+
+
+def run() -> dict:
+    out = {}
+    for model_cfg in (DIT_IMAGE, DIT_VIDEO):
+        model = model_cfg.name
+        for workload in ("short", "burst"):
+            for pol in POLICIES:
+                cost = CostModel()
+                cp = ControlPlane(NUM_RANKS, make_policy(pol, NUM_RANKS),
+                                  cost, SimBackend(cost, jitter=0.05))
+                trace = _trace(model, workload)
+                for r in trace:
+                    cp.submit(r, convert_request(r, model_cfg))
+                cp.run()
+                # loose client timeout ~ paper ratio (25-50x S-class
+                # standalone service time)
+                from repro.diffusion.workloads import \
+                    standalone_service_time
+                timeout = 12 * standalone_service_time(
+                    model, "M", CostModel(), STEPS)
+                out[f"{model}|{workload}|{pol}"] = _metrics_with_timeout(
+                    cp, timeout)
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "policies_e2e.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def rows(data: dict):
+    out = []
+    # headline improvement numbers vs Legacy (paper: 6.01x thr, -95% mean
+    # latency, -90% SLO violations)
+    best = {"thr": 0.0, "lat": 0.0, "slo": 0.0}
+    for model in ("dit-image", "dit-video"):
+        for workload in ("short", "burst"):
+            leg = data[f"{model}|{workload}|legacy"]
+            for pol in POLICIES:
+                m = data[f"{model}|{workload}|{pol}"]
+                out.append((f"policies.{model}.{workload}.{pol}.mean_lat",
+                            m["mean_latency_s"] * 1e6,
+                            f"slo={m['slo_attainment']:.3f}"
+                            f";thr={m['throughput_rps']:.4f}"
+                            f";p95={m['p95_latency_s']:.1f}"))
+                if pol != "legacy" and leg["throughput_rps"] > 0:
+                    best["thr"] = max(best["thr"], m["throughput_rps"]
+                                      / leg["throughput_rps"])
+                    if leg["mean_latency_s"] > 0:
+                        best["lat"] = max(
+                            best["lat"], 1 - m["mean_latency_s"]
+                            / leg["mean_latency_s"])
+                    leg_viol = 1 - leg["slo_attainment"]
+                    if leg_viol > 0:
+                        best["slo"] = max(
+                            best["slo"],
+                            1 - (1 - m["slo_attainment"]) / leg_viol)
+    out.append(("policies.best_throughput_gain_x", best["thr"] * 1e6,
+                "paper_6.01x"))
+    out.append(("policies.best_mean_latency_reduction", best["lat"] * 1e6,
+                "paper_95pct"))
+    out.append(("policies.best_slo_violation_reduction", best["slo"] * 1e6,
+                "paper_90pct"))
+    return out
+
+
+if __name__ == "__main__":
+    d = run()
+    for name, us, derived in rows(d):
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,104 @@
+"""Deliverable (g): 3-term roofline per (arch x shape) from the dry-run.
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs/bytes come from the depth-extrapolated cost extraction (XLA's
+cost_analysis counts scan bodies once — see launch/dryrun.py); collective
+bytes are parsed from optimized HLO.  cost_analysis reports PER-DEVICE
+numbers on SPMD modules, so terms divide by bandwidth only (the "chips x"
+division already happened in partitioning).
+
+MODEL_FLOPS = 6 N D (dense) or 6 N_active D (MoE) tokens-processed model
+flops; the ratio MODEL_FLOPS/HLO_FLOPs measures how much compiled compute
+is useful (remat/recompute waste shows up here; ~1/4 is expected for
+remat=full training: fwd 2ND + bwd 4ND + remat 2ND per token).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+
+RESULTS = Path(__file__).parent / "results"
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 4 * 50e9            # 4 links/chip x ~50 GB/s (2D torus, bidir)
+CHIPS = 256                  # single-pod 16x16
+
+
+def load_cells(path: Path | None = None) -> list[dict]:
+    path = path or RESULTS / "dryrun_single.json"
+    if not path.exists():
+        return []
+    return [r for r in json.loads(path.read_text()) if r["ok"]]
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    n_active = cfg.param_count(active_only=True)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch
+
+
+def analyze(cells: list[dict]) -> list[dict]:
+    out = []
+    for r in cells:
+        coll_bytes = sum(r["collective_bytes"].values())
+        compute_s = r["flops"] / PEAK_FLOPS
+        memory_s = r["hlo_bytes"] / HBM_BW
+        coll_s = coll_bytes / ICI_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": coll_s}
+        dominant = max(terms, key=terms.get)
+        bound = max(terms.values())
+        mf = model_flops(r["arch"], r["shape"]) / CHIPS   # per device
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant,
+            "model_flops_per_dev": mf,
+            "useful_ratio": mf / r["flops"] if r["flops"] else 0.0,
+            # fraction of roofline-bound time that is compute: how close
+            # the cell is to being compute-limited (the perf score axis)
+            "roofline_fraction": compute_s / bound if bound else 0.0,
+            "per_device_memory_gb": r["per_device_memory_bytes"] / 2**30,
+        })
+    return out
+
+
+def run() -> dict:
+    cells = load_cells()
+    table = analyze(cells)
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "roofline.json").write_text(json.dumps(table, indent=1))
+    return {"table": table}
+
+
+def rows(data: dict):
+    out = []
+    for row in data["table"]:
+        out.append((
+            f"roofline.{row['arch']}.{row['shape']}",
+            row["compute_s"] * 1e6,
+            f"dom={row['dominant']};mem_s={row['memory_s']:.2e};"
+            f"coll_s={row['collective_s']:.2e};"
+            f"useful={row['useful_ratio']:.2f};"
+            f"roofline_frac={row['roofline_fraction']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    d = run()
+    for name, us, derived in rows(d):
+        print(f"{name},{us:.1f},{derived}")

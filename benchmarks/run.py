@@ -1,0 +1,43 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (arrival_scaling, gfc_collectives, group_setup,
+                            migration_overhead, overhead_fcfs_sp4,
+                            policies_e2e, roofline, sim_fidelity,
+                            stage_scaling)
+    suites = [
+        ("group_setup(Table1)", group_setup),
+        ("policies_e2e(Fig6)", policies_e2e),
+        ("gfc_collectives(Fig9)", gfc_collectives),
+        ("arrival_scaling(Fig10)", arrival_scaling),
+        ("sim_fidelity(Fig11)", sim_fidelity),
+        ("stage_scaling(Fig3)", stage_scaling),
+        ("migration_overhead(S5.3)", migration_overhead),
+        ("overhead_fcfs_sp4(Fig8)", overhead_fcfs_sp4),
+        ("roofline(deliverable_g)", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in suites:
+        try:
+            data = mod.run()
+            for name, us, derived in mod.rows(data):
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:   # noqa: BLE001
+            failures += 1
+            print(f"{label},nan,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

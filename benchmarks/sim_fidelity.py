@@ -1,0 +1,144 @@
+"""Fig. 11 analogue: simulator vs REAL thread-runtime SLO attainment.
+
+The same trace + the same policy objects run (a) under the cost-model
+simulator and (b) on the thread backend with real JAX compute; the
+simulator's cost model is first calibrated from profiled task costs on
+this container (exactly the paper's methodology: "the simulator replays
+the exact request trace and policy logic using measured stage costs").
+Paper: <= 4.7 pp divergence.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.core.cost_model import CostModel
+from repro.core.policies import make_policy
+from repro.core.scheduler import ControlPlane
+from repro.core.simulator import SimBackend
+from repro.diffusion.adapters import convert_request
+from repro.diffusion.pipeline import DiTPipeline
+from repro.diffusion.workloads import make_request
+from repro.serving.engine import ServingEngine
+
+RESULTS = Path(__file__).parent / "results"
+# the real-runtime leg runs ONE worker: this host has one core, so
+# concurrent workers would dilate wall-clock 4x versus the simulator's
+# parallel-rank model (multi-rank semantics are validated bit-exactly in
+# tests/test_serving_engine.py). Ordering policies still differ.
+NUM_RANKS = 1
+POLICIES = ["fcfs-sp1", "srtf-sp1", "edf"]
+
+
+def _profile_costs(cfg) -> CostModel:
+    """Measure REAL reduced-model stage costs (the paper's methodology:
+    "using measured stage costs") -> calibrated cost model."""
+    cost = CostModel()
+    pipe = DiTPipeline(cfg, seed=0)
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models import dit as dit_mod, text_encoder, vae
+    for cls, res in (("S", 128), ("M", 256)):
+        n_tok = (res // 8 // cfg.dit.patch_size) ** 2
+        pd = cfg.dit.patch_size ** 2 * cfg.dit.in_channels
+        x = jnp.zeros((1, n_tok, pd))
+        txt = jnp.zeros((1, 77, cfg.dit.cond_dim))
+        t = jnp.array([500.0])
+
+        def timeit(fn, reps=3):
+            jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(fn())
+            return (time.perf_counter() - t0) / reps
+
+        dt = timeit(lambda: dit_mod.forward_sp_tokens(
+            pipe.dit_params, x, t, txt, cfg, pos_offset=0, n_total=n_tok,
+            kv_gather=lambda k, v: (k, v)))
+        toks = jnp.zeros((1, 77), jnp.int32)
+        enc = timeit(lambda: text_encoder.encode(
+            pipe.txt_params, toks, pipe.txt_cfg, dtype=jnp.float32))
+        hl = res // 8
+        lat = jnp.zeros((1, 1, hl, hl, cfg.dit.in_channels))
+        dec = timeit(lambda: vae.decode(pipe.vae_params, lat, cfg), reps=2)
+        for deg in (1, 2, 4):
+            # SP shards tokens but (1-core host) adds per-rank dispatch;
+            # measured SP1 cost is the right per-task estimate here
+            cost.table[cost._key("dit-image", "denoise", n_tok, deg)] = dt
+            cost.table[cost._key("dit-image", "decode", n_tok, deg)] = dec
+        cost.table[cost._key("dit-image", "encode", n_tok, 1)] = enc
+    return cost
+
+
+def _mini_trace(cost: CostModel, n: int = 12):
+    reqs, t = [], 0.0
+    for i in range(n):
+        cls = "S" if i % 3 else "M"
+        res = 128 if cls == "S" else 256
+        n_tok = (res // 16) ** 2
+        service = (cost.estimate("dit-image", "encode", n_tok, 1)
+                   + 4 * cost.estimate("dit-image", "denoise", n_tok, 1)
+                   + cost.estimate("dit-image", "decode", n_tok, 1))
+        r = make_request("dit-image", cls, arrival=t, cost=cost, steps=4)
+        r.height = r.width = res
+        # moderate single-queue load; class-dependent tightness so some
+        # requests are at risk and policy ordering matters
+        r.deadline = t + (2.5 if cls == "S" else 4.0) * service + 0.3
+        reqs.append(r)
+        t += service * 0.75
+    return reqs
+
+
+def run() -> dict:
+    import dataclasses
+    cfg = DIT_IMAGE.reduced()
+    out = {}
+    for pol_name in POLICIES:
+        cost = _profile_costs(cfg)
+        trace0 = _mini_trace(cost)
+        # --- real thread runtime (calibrates `cost` online from measured
+        # task durations, §5.1)
+        eng = ServingEngine(cfg, make_policy(pol_name, NUM_RANKS),
+                            NUM_RANKS, cost=cost)
+        real = eng.serve([dataclasses.replace(r) for r in trace0],
+                         timeout=180)
+        eng.shutdown()
+        # --- simulator replays the EXACT trace + policy logic using the
+        # stage costs measured during the real run (paper Fig. 11 method)
+        calibrated = eng.cp.cost
+        cp = ControlPlane(NUM_RANKS, make_policy(pol_name, NUM_RANKS),
+                          calibrated, SimBackend(calibrated))
+        for r in trace0:
+            cp.submit(dataclasses.replace(r, task_ids=[]),
+                      convert_request(r, cfg))
+        cp.run()
+        sim = cp.metrics()
+        out[pol_name] = {
+            "real_slo": real["slo_attainment"],
+            "sim_slo": sim["slo_attainment"],
+            "gap_pp": abs(real["slo_attainment"]
+                          - sim["slo_attainment"]) * 100,
+            "real_mean_lat": real["mean_latency_s"],
+            "sim_mean_lat": sim["mean_latency_s"],
+        }
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "sim_fidelity.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def rows(data: dict):
+    out = []
+    for pol, m in data.items():
+        out.append((f"sim_fidelity.{pol}.gap", m["gap_pp"] * 1e4,
+                    f"real={m['real_slo']:.3f};sim={m['sim_slo']:.3f};"
+                    f"paper<=4.7pp"))
+    return out
+
+
+if __name__ == "__main__":
+    d = run()
+    for name, us, derived in rows(d):
+        print(f"{name},{us:.1f},{derived}")

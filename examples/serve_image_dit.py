@@ -1,0 +1,46 @@
+"""End-to-end serving driver (deliverable b): batched requests through the
+REAL GF-DiT runtime — thread workers, GFC sequence parallelism, layout
+migration — on a reduced image DiT, producing decoded images.
+
+    PYTHONPATH=src python examples/serve_image_dit.py
+"""
+import numpy as np
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.core.policies import make_policy
+from repro.core.trajectory import Request
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    cfg = DIT_IMAGE.reduced()
+    engine = ServingEngine(cfg, make_policy("edf", 4), num_ranks=4)
+
+    classes = {"S": 128, "M": 192, "L": 256}
+    requests = []
+    for i in range(6):
+        cls = "SML"[i % 3]
+        res = classes[cls]
+        requests.append(Request(
+            id=f"req-{i}", model="dit-image", height=res, width=res,
+            frames=1, steps=4, arrival=i * 0.3,
+            deadline=i * 0.3 + 120.0, size_class=cls))
+
+    print(f"serving {len(requests)} requests on 4 ranks (EDF policy)...")
+    metrics = engine.serve(requests, timeout=600)
+    for k, v in metrics.items():
+        print(f"  {k}: {v:.3f}" if isinstance(v, float) else f"  {k}: {v}")
+
+    for req in requests[:2]:
+        px = engine.result_pixels(req)
+        print(f"{req.id}: decoded image {px.shape}, "
+              f"range [{px.min():.2f}, {px.max():.2f}]")
+        np.save(f"/tmp/{req.id}_pixels.npy", px)
+    elastic = {len(ev["ranks"]) for ev in engine.cp.events
+               if ev["ev"] == "dispatch"}
+    print(f"group sizes used across tasks: {sorted(elastic)}")
+    engine.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from repro.configs.base import (ModelConfig, MoEConfig, MLAConfig, SSMConfig,
+                                DiTConfig, ShapeCell, SHAPES,
+                                cell_is_applicable)
+from repro.configs.registry import ASSIGNED_ARCHS, get_config, list_archs
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "DiTConfig",
+    "ShapeCell", "SHAPES", "cell_is_applicable", "ASSIGNED_ARCHS",
+    "get_config", "list_archs",
+]

@@ -1,0 +1,102 @@
+"""Profiled cost model (paper §2.2, §5.5).
+
+Costs are indexed by (model, task kind, shape bucket, parallel degree).
+Entries come from three sources, in priority order:
+  1. online calibration — measured task durations reported by the executor
+     (§5.1 "calibrate the runtime cost model with measured task durations");
+  2. profiled seed table — measured offline on this container (benchmarks
+     write it);
+  3. analytical fallback — roofline-style estimate from task FLOPs and an
+     SP efficiency curve (mirrors the paper's Fig. 3 shapes: large tasks
+     scale well, small tasks are communication-bound).
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+# Reference throughputs for the analytical fallback (arbitrary units
+# calibrated so one denoise step of a 1024x1024 image at SP1 ~ 1.0 s,
+# matching the scale of the paper's H20 measurements).
+_REF_TOKEN_RATE = 4.0e6          # DiT tokens^1.x per second per rank
+_ENCODE_COST = 0.12              # text encode: effectively single-rank
+_DECODE_PER_MPIX = 0.35          # VAE decode per megapixel(-frame)
+
+
+def sp_efficiency(degree: int, tokens: int) -> float:
+    """Parallel efficiency of sequence parallelism (Fig. 3b shape):
+    large token counts amortize collectives; small ones don't."""
+    if degree == 1:
+        return 1.0
+    comm = 1.0 + 0.35 * (degree - 1) * (4096 / max(tokens, 256)) ** 0.5
+    return 1.0 / comm
+
+
+@dataclass
+class CostModel:
+    table: dict = field(default_factory=dict)   # key -> seconds
+    calibration: dict = field(default_factory=dict)
+    ema: float = 0.5
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _key(model: str, kind: str, tokens: int, degree: int) -> str:
+        bucket = 1 << max(0, int(math.log2(max(tokens, 1))))
+        return f"{model}|{kind}|{bucket}|{degree}"
+
+    # ------------------------------------------------------------------
+    def estimate(self, model: str, kind: str, tokens: int,
+                 degree: int) -> float:
+        key = self._key(model, kind, tokens, degree)
+        if key in self.calibration:
+            return self.calibration[key]
+        if key in self.table:
+            return self.table[key]
+        return self.analytical(model, kind, tokens, degree)
+
+    def analytical(self, model: str, kind: str, tokens: int,
+                   degree: int) -> float:
+        if kind == "encode":
+            return _ENCODE_COST
+        if kind == "decode":
+            base = _DECODE_PER_MPIX * (tokens / 4096)
+            eff = sp_efficiency(degree, tokens)
+            return base / (degree * eff) + 0.01
+        # denoise: attention ~ tokens^2/flops but MLP dominates until long
+        scale = 2.2 if model.endswith("video") else 1.0
+        work = scale * (tokens / 4096) ** 1.35
+        eff = sp_efficiency(degree, tokens)
+        return max(work / (degree * eff), 1e-4) + 0.004 * (degree > 1)
+
+    # ------------------------------------------------------------------
+    def observe(self, model: str, kind: str, tokens: int, degree: int,
+                seconds: float):
+        """Online calibration from measured durations (EMA)."""
+        key = self._key(model, kind, tokens, degree)
+        old = self.calibration.get(key)
+        self.calibration[key] = (seconds if old is None
+                                 else self.ema * seconds +
+                                 (1 - self.ema) * old)
+
+    # ------------------------------------------------------------------
+    def request_remaining(self, model: str, graph, degree: int = 1) -> float:
+        """Remaining trajectory work of a request at `degree` (for SRTF)."""
+        total = 0.0
+        for t in graph.remaining_tasks():
+            total += self.estimate(model, t.kind,
+                                   t.meta.get("tokens", 4096), degree)
+        return total
+
+    # ------------------------------------------------------------------
+    def save(self, path: str | Path):
+        Path(path).write_text(json.dumps(
+            {"table": self.table, "calibration": self.calibration}))
+
+    @classmethod
+    def load(cls, path: str | Path) -> "CostModel":
+        d = json.loads(Path(path).read_text())
+        return cls(table=d.get("table", {}),
+                   calibration=d.get("calibration", {}))

@@ -1,0 +1,134 @@
+"""Thread execution backend (paper §5.1 execution plane).
+
+Workers are threads (rank = thread); model executors run REAL JAX compute
+on token shards with GFC collectives inside (sequence parallelism), so the
+distributed semantics — dynamic groups, per-layer subgroup all-gathers,
+layout migration — are executed faithfully.  Wall-clock speedup is not
+observable on this 1-core container (documented in DESIGN.md §8); the
+simulator supplies calibrated timing, and this backend supplies
+correctness + overhead measurements.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import traceback
+from typing import Any, Optional
+
+from repro.core.gfc import GroupFreeComm
+from repro.core.migration import execute_migration, plan_migration
+from repro.core.scheduler import Completion
+from repro.core.trajectory import (ExecutionLayout, RequestGraph,
+                                   TrajectoryTask)
+
+
+class ThreadBackend:
+    """One worker thread per rank + a completion queue.
+
+    ``adapter`` must provide
+        execute(task, layout, rank, comm, graph) -> None
+    which runs this rank's share of the task (GFC rendezvous inside) and,
+    on the leader rank, installs output artifact data.
+    """
+
+    def __init__(self, adapter, num_ranks: int,
+                 comm: Optional[GroupFreeComm] = None):
+        self.adapter = adapter
+        self.num_ranks = num_ranks
+        self.comm = comm or GroupFreeComm(num_ranks)
+        self._queues: list[queue.Queue] = [queue.Queue()
+                                           for _ in range(num_ranks)]
+        self._completions: queue.Queue = queue.Queue()
+        self._stop = False
+        self.errors: list[str] = []
+        self._threads = [
+            threading.Thread(target=self._worker, args=(r,), daemon=True)
+            for r in range(num_ranks)]
+        for t in self._threads:
+            t.start()
+        self._pending: dict[str, dict] = {}
+        self._lock = threading.Lock()
+
+    def attach(self, plane):
+        self.plane = plane
+
+    # ------------------------------------------------------------------
+    def _worker(self, rank: int):
+        while not self._stop:
+            try:
+                job = self._queues[rank].get(timeout=0.01)
+            except queue.Empty:
+                continue
+            task, layout, graph, t_dispatch, desc = job
+            try:
+                self.adapter.execute(task, layout, rank, self.comm, graph,
+                                     desc)
+                err = None
+            except Exception as e:   # noqa: BLE001
+                err = f"{type(e).__name__}: {e}"
+                self.errors.append(f"rank {rank} task {task.id}: {err}\n"
+                                   + traceback.format_exc())
+            with self._lock:
+                st = self._pending[task.id]
+                st["done"] += 1
+                if err:
+                    st["err"] = err
+                if st["done"] == layout.degree:
+                    del self._pending[task.id]
+                    now = time.monotonic() - self.t0
+                    self._completions.put(Completion(
+                        task.id, now, now - t_dispatch,
+                        failed_ranks=() if not st.get("err") else
+                        tuple(layout.ranks),
+                        seq=task.meta.get("_seq", 0)))
+
+    # ------------------------------------------------------------------
+    def dispatch(self, task: TrajectoryTask, layout: ExecutionLayout,
+                 graph: RequestGraph, now: float):
+        if not hasattr(self, "t0"):
+            self.t0 = time.monotonic()
+        # layout-aware migration of input artifacts (§5.3): move data from
+        # the producer layout to this task's layout before dispatch
+        for aid in task.inputs:
+            art = graph.artifacts[aid]
+            if art.data is not None and art.layout is not None and \
+                    art.layout.ranks != layout.ranks:
+                entries = plan_migration(art.fields, art.layout, layout)
+                execute_migration(self.comm, art, layout, entries)
+        # the control plane creates ONE descriptor all ranks share (§4.3)
+        desc = self.comm.register_group(layout.ranks)
+        # pre-create output artifact rank slots (ranks fill their own)
+        for aid in task.outputs:
+            art = graph.artifacts[aid]
+            if art.data is None:
+                art.data = {r: {} for r in layout.ranks}
+        with self._lock:
+            self._pending[task.id] = {"done": 0}
+        t_dispatch = time.monotonic() - self.t0
+        for r in layout.ranks:
+            self._queues[r].put((task, layout, graph, t_dispatch, desc))
+
+    # ------------------------------------------------------------------
+    def peek(self) -> Optional[float]:
+        try:
+            c = self._completions.get(timeout=0.005)
+            self._completions.put(c)   # put back
+            return c.finish_time
+        except queue.Empty:
+            return None
+
+    def poll(self) -> list[Completion]:
+        out = []
+        try:
+            out.append(self._completions.get(timeout=0.005))
+            while True:
+                out.append(self._completions.get_nowait())
+        except queue.Empty:
+            pass
+        return out
+
+    def shutdown(self):
+        self._stop = True
+        for t in self._threads:
+            t.join(timeout=1.0)

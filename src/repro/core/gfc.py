@@ -1,0 +1,291 @@
+"""Group-free collectives (paper §4).
+
+Faithful implementation of the paper's protocol over a shared-memory
+multi-rank runtime (threads = ranks, numpy buffers = symmetric memory):
+
+* one WORLD-level setup at construction (symmetric buffer plane + per-edge
+  signal slots) — paid once, like the paper's symmetric-buffer registration;
+* a dynamic subgroup is a :class:`GroupDescriptor` — pure metadata (ordered
+  ranks, group id, local index); registration is O(µs), no communicator;
+* collective-instance agreement is Algorithm 1: per ordered rank edge,
+  double-buffered signal slots selected by a local per-edge phase bit, with
+  tokens (session, group, epoch) detecting stale/mismatched observations;
+* correctness relies on *pairwise-consistent ordering* (§4.2), enforced by
+  the centralized control plane + per-rank ordered submission.  The
+  ``num_slots=1`` degenerate mode reproduces the Fig. 5(b) collision failure
+  (used by property tests to show double buffering is necessary), and
+  ``strict`` mode detects overwrite-before-consume violations.
+
+Backend-aware execution (§4.5): payloads are staged into the symmetric
+plane in chunks; the backend selector picks chunk sizes per message-size
+range from a microbenchmark table.
+
+Hardware adaptation note (DESIGN.md §2): on a real TPU deployment the
+expensive per-group state is the compiled XLA executable, not a NCCL
+communicator — see ``core/executable_cache.py`` for the compile-once-per-
+group-shape realization and ``core/grouped.py`` for the zero-recompile
+membership-as-data realization.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class GroupDescriptor:
+    """Logical group: ordered ranks + runtime group id (metadata only)."""
+    gid: int
+    ranks: tuple[int, ...]
+
+    def local_index(self, rank: int) -> int:
+        return self.ranks.index(rank)
+
+    @property
+    def size(self) -> int:
+        return len(self.ranks)
+
+
+@dataclass
+class _Slot:
+    token: Optional[tuple] = None
+    consumed: bool = True
+
+
+class OrderingViolation(RuntimeError):
+    """A signal token was overwritten before its peer consumed it."""
+
+
+@dataclass
+class BackendChoice:
+    name: str                       # "staged" | "direct"
+    chunk_bytes: int
+
+
+class BackendSelector:
+    """Message-size -> (backend, chunk size), populated from microbenchmarks
+    (paper §4.5).  Defaults mirror the paper's regimes: small payloads go
+    direct (one copy), large payloads use chunked staging so local staging
+    overlaps remote movement."""
+
+    def __init__(self, table: Optional[list[tuple[int, BackendChoice]]] = None):
+        self.table = table or [
+            (1 << 16, BackendChoice("direct", 0)),          # <64 KiB
+            (1 << 22, BackendChoice("staged", 1 << 18)),    # <4 MiB: 256 KiB
+            (1 << 62, BackendChoice("staged", 1 << 20)),    # else: 1 MiB
+        ]
+
+    def choose(self, nbytes: int) -> BackendChoice:
+        for limit, choice in self.table:
+            if nbytes < limit:
+                return choice
+        return self.table[-1][1]
+
+
+class GroupFreeComm:
+    """World-level symmetric plane + GFC protocol (threads = ranks)."""
+
+    def __init__(self, world_size: int, *, num_slots: int = 2,
+                 strict: bool = True, session: int = 0,
+                 selector: Optional[BackendSelector] = None):
+        self.world_size = world_size
+        self.num_slots = num_slots
+        self.strict = strict
+        self.session = session
+        self.selector = selector or BackendSelector()
+        self._cv = threading.Condition()
+        # per ordered edge (src, dst): signal slots + local phase bit at src
+        self._slots: dict[tuple[int, int], list[_Slot]] = {
+            (s, d): [_Slot() for _ in range(num_slots)]
+            for s in range(world_size) for d in range(world_size) if s != d}
+        self._phase: dict[tuple[int, int], int] = {
+            e: 0 for e in self._slots}
+        # symmetric staging buffers: (gid, epoch, src_rank) -> payload
+        self._stage: dict[tuple[int, int, int], Any] = {}
+        # per-rank per-group local epoch counters
+        self._epoch: dict[tuple[int, int], int] = {}
+        self._gids = itertools.count()
+        self.violations: list[str] = []
+        self.stats = {"registrations": 0, "collectives": 0,
+                      "bytes_staged": 0, "reg_seconds": 0.0}
+
+    # ------------------------------------------------------------------
+    # group registration: METADATA ONLY (the paper's ~60 us operation)
+    # ------------------------------------------------------------------
+    def register_group(self, ranks: tuple[int, ...]) -> GroupDescriptor:
+        t0 = time.perf_counter()
+        desc = GroupDescriptor(gid=next(self._gids), ranks=tuple(ranks))
+        self.stats["registrations"] += 1
+        self.stats["reg_seconds"] += time.perf_counter() - t0
+        return desc
+
+    # ------------------------------------------------------------------
+    # Algorithm 1: per-edge flip agreement
+    # ------------------------------------------------------------------
+    def _token(self, desc: GroupDescriptor, epoch: int) -> tuple:
+        return (self.session, desc.gid, epoch)
+
+    def _publish(self, edge: tuple[int, int], slot_idx: int, token: tuple):
+        with self._cv:
+            slot = self._slots[edge][slot_idx]
+            if self.strict and not slot.consumed:
+                msg = (f"edge {edge} slot {slot_idx}: token {slot.token} "
+                       f"overwritten by {token} before consumption")
+                self.violations.append(msg)
+                raise OrderingViolation(msg)
+            slot.token = token
+            slot.consumed = False
+            self._cv.notify_all()
+
+    def _observe(self, edge: tuple[int, int], slot_idx: int, token: tuple,
+                 timeout: float = 30.0):
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            slot = self._slots[edge][slot_idx]
+            while slot.token != token:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"edge {edge} slot {slot_idx}: waiting {token}, "
+                        f"holds {slot.token} (deadlock or ordering bug)")
+                self._cv.wait(remaining)
+            slot.consumed = True
+            self._cv.notify_all()
+
+    def barrier(self, desc: GroupDescriptor, rank: int) -> int:
+        """Pairwise flip agreement for one collective instance.
+
+        Returns the instance epoch.  Must be called by every rank of the
+        group, in pairwise-consistent order across groups.
+        """
+        key = (rank, desc.gid)
+        epoch = self._epoch.get(key, 0)
+        self._epoch[key] = epoch + 1
+        tau = self._token(desc, epoch)
+        slots_used: dict[int, int] = {}
+        for p in desc.ranks:
+            if p == rank:
+                continue
+            e = (rank, p)
+            s = self._phase[e]
+            slots_used[p] = s
+            self._phase[e] = (s + 1) % self.num_slots   # flip
+            self._publish(e, s, tau)
+        for p in desc.ranks:
+            if p == rank:
+                continue
+            self._observe((p, rank), slots_used[p], tau)
+        self.stats["collectives"] += 1
+        return epoch
+
+    # ------------------------------------------------------------------
+    # staging + data movement
+    # ------------------------------------------------------------------
+    def _stage_put(self, desc, epoch: int, rank: int, payload):
+        chunks = self._chunk(payload)
+        with self._cv:
+            self._stage[(desc.gid, epoch, rank)] = payload
+            if hasattr(payload, "nbytes"):
+                self.stats["bytes_staged"] += payload.nbytes
+            self._cv.notify_all()
+        return chunks
+
+    def _chunk(self, payload):
+        """Chunked staging (overlap model; functional path copies whole)."""
+        if not hasattr(payload, "nbytes"):
+            return 1
+        choice = self.selector.choose(payload.nbytes)
+        if choice.name == "direct" or choice.chunk_bytes == 0:
+            return 1
+        return max(1, -(-payload.nbytes // choice.chunk_bytes))
+
+    def _stage_get(self, desc, epoch: int, rank: int, timeout: float = 30.0):
+        key = (desc.gid, epoch, rank)
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while key not in self._stage:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(f"stage buffer {key} never published")
+                self._cv.wait(remaining)
+            return self._stage[key]
+
+    def _prune(self, desc, epoch: int):
+        """Free buffers older than epoch-2 (double-buffer lifetime)."""
+        with self._cv:
+            stale = [k for k in self._stage
+                     if k[0] == desc.gid and k[1] < epoch - 1]
+            for k in stale:
+                del self._stage[k]
+
+    # ------------------------------------------------------------------
+    # collectives (issued by every member rank)
+    # ------------------------------------------------------------------
+    def all_gather(self, desc: GroupDescriptor, rank: int,
+                   shard: np.ndarray, axis: int = 0) -> np.ndarray:
+        shard = np.asarray(shard)
+        epoch = self._epoch.get((rank, desc.gid), 0)
+        self._stage_put(desc, epoch, rank, shard)     # stage local input
+        self.barrier(desc, rank)                      # Algorithm 1
+        parts = [self._stage_get(desc, epoch, p) for p in desc.ranks]
+        self._prune(desc, epoch)
+        return np.concatenate(parts, axis=axis)
+
+    def all_to_all(self, desc: GroupDescriptor, rank: int,
+                   shards: list[np.ndarray]) -> list[np.ndarray]:
+        assert len(shards) == desc.size
+        epoch = self._epoch.get((rank, desc.gid), 0)
+        self._stage_put(desc, epoch, rank,
+                        [np.asarray(s) for s in shards])
+        self.barrier(desc, rank)
+        my_idx = desc.local_index(rank)
+        out = [self._stage_get(desc, epoch, p)[my_idx] for p in desc.ranks]
+        self._prune(desc, epoch)
+        return out
+
+    def all_reduce(self, desc: GroupDescriptor, rank: int,
+                   x: np.ndarray, op: str = "sum") -> np.ndarray:
+        epoch = self._epoch.get((rank, desc.gid), 0)
+        self._stage_put(desc, epoch, rank, np.asarray(x))
+        self.barrier(desc, rank)
+        parts = [self._stage_get(desc, epoch, p) for p in desc.ranks]
+        self._prune(desc, epoch)
+        acc = np.stack(parts)
+        return {"sum": acc.sum(0), "max": acc.max(0),
+                "mean": acc.mean(0)}[op]
+
+    def broadcast(self, desc: GroupDescriptor, rank: int,
+                  x: Optional[np.ndarray], root_local: int = 0) -> np.ndarray:
+        epoch = self._epoch.get((rank, desc.gid), 0)
+        root_rank = desc.ranks[root_local]
+        if rank == root_rank:
+            self._stage_put(desc, epoch, rank, np.asarray(x))
+        else:
+            # non-roots still advance their epoch implicitly via barrier
+            pass
+        self.barrier(desc, rank)
+        out = self._stage_get(desc, epoch, root_rank)
+        self._prune(desc, epoch)
+        return out
+
+    def send(self, desc: GroupDescriptor, rank: int, x: np.ndarray):
+        """P2P send over a logical pair group (migration path, §5.3)."""
+        assert desc.size == 2 and rank in desc.ranks
+        epoch = self._epoch.get((rank, desc.gid), 0)
+        self._stage_put(desc, epoch, rank, np.asarray(x))
+        self.barrier(desc, rank)
+        self._prune(desc, epoch)
+
+    def recv(self, desc: GroupDescriptor, rank: int) -> np.ndarray:
+        assert desc.size == 2 and rank in desc.ranks
+        epoch = self._epoch.get((rank, desc.gid), 0)
+        peer = desc.ranks[0] if desc.ranks[1] == rank else desc.ranks[1]
+        self.barrier(desc, rank)
+        out = self._stage_get(desc, epoch, peer)
+        self._prune(desc, epoch)
+        return out

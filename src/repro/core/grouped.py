@@ -1,0 +1,55 @@
+"""TPU-native GFC #2: membership-as-data grouped collectives.
+
+Compile ONE world-level program at boot whose subgroup structure is an
+*input tensor* (per-rank group ids), so forming any subgroup never triggers
+a recompile — the strongest possible realization of "group formation is
+metadata" under XLA's static-collective constraint.
+
+Trade-off (recorded in DESIGN.md): data movement runs over the world axis
+(all-gather world + mask / one-hot-masked psum), so bandwidth is wasted by
+a factor world/group versus a native subgroup collective.  For DiT serving
+artifacts (MBs) on ICI this is cheap; the executable-cache path
+(executable_cache.py) is preferred for large payloads and this path for
+high-churn small groups — the backend selector picks per §4.5.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def build_grouped_ops(mesh: Mesh, axis: str = "g") -> dict[str, Callable]:
+    """World-compiled grouped collectives; group_ids is data, not code."""
+
+    def grouped_all_reduce(x, group_ids):
+        """x: (world, ...) sharded; out[r] = sum over ranks with same id."""
+        def body(xs, gs):
+            idx = jax.lax.axis_index(axis)
+            my_gid = gs[0]
+            all_x = jax.lax.all_gather(xs, axis)          # (W, 1, ...)
+            all_g = jax.lax.all_gather(gs, axis)          # (W, 1)
+            mask = (all_g[:, 0] == my_gid).astype(x.dtype)
+            extra = (1,) * (all_x.ndim - 2)
+            return (all_x[:, 0] * mask.reshape(-1, *extra)).sum(0)[None]
+        return jax.shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
+                             out_specs=P(axis), check_vma=False)(x, group_ids)
+
+    def grouped_all_gather(x, group_ids):
+        """out[r] = world-stacked x with non-group rows zeroed (caller
+        compacts by its descriptor order)."""
+        def body(xs, gs):
+            my_gid = gs[0]
+            all_x = jax.lax.all_gather(xs, axis)
+            all_g = jax.lax.all_gather(gs, axis)
+            mask = (all_g[:, 0] == my_gid).astype(x.dtype)
+            extra = (1,) * (all_x.ndim - 2)
+            return (all_x[:, 0] * mask.reshape(-1, *extra))[None]
+        return jax.shard_map(body, mesh=mesh, in_specs=(P(axis), P(axis)),
+                             out_specs=P(axis), check_vma=False)(x, group_ids)
+
+    return {"all_reduce": grouped_all_reduce,
+            "all_gather": grouped_all_gather}

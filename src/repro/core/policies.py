@@ -1,0 +1,192 @@
+"""Scheduling policies (paper §5.4 + Legacy baseline §6.2).
+
+All policies speak the same interface: observe a SchedulerView, return
+(task, execution layout) decisions.  They differ ONLY in task ranking and
+layout choice — dependency tracking, dispatch, dynamic groups, and
+migration live in the runtime, which is the paper's central design claim.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.scheduler import Decision, Policy, SchedulerView
+from repro.core.trajectory import ExecutionLayout
+
+
+def _contiguous(free: list[int], k: int) -> Optional[tuple[int, ...]]:
+    """Pick k free ranks (ordered)."""
+    if len(free) < k:
+        return None
+    return tuple(free[:k])
+
+
+class LegacyPolicy(Policy):
+    """Native fixed-pipeline execution with static parallelism (§6.2):
+    requests run one at a time, atomically, over the full machine."""
+    name = "legacy"
+
+    def __init__(self, sp_degree: Optional[int] = None):
+        self.sp_degree = sp_degree
+        self._active: Optional[str] = None
+
+    def schedule(self, view: SchedulerView) -> list[Decision]:
+        k = self.sp_degree or view.num_ranks
+        if view.running:                      # machine-wide serial pipeline
+            return []
+        # oldest admitted request first; stick to it until it finishes
+        ready = sorted(view.ready, key=lambda tr: (tr[1].arrival, tr[0].id))
+        if not ready:
+            return []
+        if self._active is not None:
+            for t, req, g in ready:
+                if req.id == self._active and not g.is_done():
+                    break
+            else:
+                self._active = None
+        if self._active is None:
+            self._active = ready[0][1].id
+        for t, req, g in ready:
+            if req.id == self._active:
+                ranks = _contiguous(view.free_ranks, min(k, view.num_ranks))
+                if ranks is None:
+                    return []
+                return [Decision(t.id, ExecutionLayout(ranks))]
+        return []
+
+
+class FCFSPolicy(Policy):
+    """FCFS with workload-aware group assignment (§5.4): the cluster is
+    partitioned into fixed groups; each ready task goes to the feasible
+    group with the lowest estimated queued workload."""
+    name = "fcfs"
+
+    def __init__(self, group_size: int = 1):
+        self.group_size = group_size
+        self._backlog: dict[tuple[int, ...], float] = {}
+
+    def schedule(self, view: SchedulerView) -> list[Decision]:
+        g = self.group_size
+        groups = [tuple(range(i, i + g))
+                  for i in range(0, view.num_ranks - g + 1, g)]
+        for gr in groups:
+            self._backlog.setdefault(gr, 0.0)
+        free = set(view.free_ranks)
+        avail = [gr for gr in groups if all(r in free for r in gr)]
+        if not avail:
+            return []
+        out = []
+        ready = sorted(view.ready, key=lambda tr: (tr[1].arrival, tr[0].id))
+        for t, req, gph in ready:
+            if not avail:
+                break
+            best = min(avail, key=lambda gr: self._backlog[gr])
+            est = view.cost.estimate(req.model, t.kind,
+                                     t.meta.get("tokens", 4096), g)
+            self._backlog[best] += est
+            avail.remove(best)
+            out.append(Decision(t.id, ExecutionLayout(best)))
+        # decay backlog estimates so they track completed work
+        for gr in groups:
+            self._backlog[gr] *= 0.98
+        return out
+
+
+class SRTFPolicy(Policy):
+    """SRTF with per-rank local queues (§5.4): requests are pinned to the
+    feasible rank-group with least queued work; each group orders its local
+    tasks by shortest remaining trajectory work."""
+    name = "srtf"
+
+    def __init__(self, sp_degree: int = 1):
+        self.sp_degree = sp_degree
+        self._home: dict[str, tuple[int, ...]] = {}
+        self._backlog: dict[tuple[int, ...], float] = {}
+
+    def schedule(self, view: SchedulerView) -> list[Decision]:
+        g = self.sp_degree if self.sp_degree > 0 else view.num_ranks
+        groups = [tuple(range(i, i + g))
+                  for i in range(0, view.num_ranks - g + 1, g)]
+        for gr in groups:
+            self._backlog.setdefault(gr, 0.0)
+        # assign new requests to least-loaded group
+        for t, req, gph in view.ready:
+            if req.id not in self._home:
+                best = min(groups, key=lambda gr: self._backlog[gr])
+                self._home[req.id] = best
+                self._backlog[best] += view.cost.request_remaining(
+                    req.model, gph, g)
+        free = set(view.free_ranks)
+        out = []
+        # per group: pick the ready task of the request with the shortest
+        # remaining trajectory work
+        for gr in groups:
+            if not all(r in free for r in gr):
+                continue
+            cands = [(t, req, gph) for t, req, gph in view.ready
+                     if self._home.get(req.id) == gr]
+            if not cands:
+                continue
+            t, req, gph = min(
+                cands, key=lambda trg: view.cost.request_remaining(
+                    trg[1].model, trg[2], g))
+            out.append(Decision(t.id, ExecutionLayout(gr)))
+            free -= set(gr)
+        return out
+
+
+class EDFPolicy(Policy):
+    """EDF with best-fit parallelism (§5.4): order by deadline; choose the
+    smallest SP degree predicted to finish the request by its deadline,
+    escalating at trajectory boundaries when a request is at risk."""
+    name = "edf"
+
+    def __init__(self, max_degree: Optional[int] = None,
+                 candidate_degrees: Optional[list[int]] = None):
+        self.max_degree = max_degree
+        self.candidates = candidate_degrees
+
+    def schedule(self, view: SchedulerView) -> list[Decision]:
+        maxd = self.max_degree or view.num_ranks
+        cands = self.candidates or \
+            [d for d in (1, 2, 4, 8, 16, 32) if d <= maxd]
+        ready = sorted(view.ready,
+                       key=lambda tr: (tr[1].deadline if tr[1].deadline
+                                       is not None else math.inf,
+                                       tr[1].arrival))
+        free = list(view.free_ranks)
+        out = []
+        for t, req, gph in ready:
+            if not free:
+                break
+            feasible = [d for d in cands if d <= len(free)]
+            if not feasible:
+                continue
+            choice = feasible[-1]          # largest, if nothing meets SLO
+            if req.deadline is None:
+                choice = feasible[0]
+            else:
+                for d in feasible:         # smallest that meets deadline
+                    eta = view.now + view.cost.request_remaining(
+                        req.model, gph, d)
+                    if eta <= req.deadline:
+                        choice = d
+                        break
+            ranks = tuple(free[:choice])
+            free = free[choice:]
+            out.append(Decision(t.id, ExecutionLayout(ranks)))
+        return out
+
+
+def make_policy(name: str, num_ranks: int) -> Policy:
+    """Registry used by benchmarks/examples (--policy flag)."""
+    table = {
+        "legacy": lambda: LegacyPolicy(),
+        "fcfs-sp1": lambda: FCFSPolicy(group_size=1),
+        "fcfs-sp4": lambda: FCFSPolicy(group_size=min(4, num_ranks)),
+        "srtf-sp1": lambda: SRTFPolicy(sp_degree=1),
+        "srtf-spmax": lambda: SRTFPolicy(sp_degree=num_ranks),
+        "edf": lambda: EDFPolicy(),
+    }
+    return table[name]()

@@ -1,0 +1,223 @@
+"""Event-driven control plane (paper §5.1).
+
+The control plane owns request admission, trajectory task graphs,
+dependency state, artifact metadata, resource availability, and policy
+invocation.  Execution backends (simulator | thread workers) share this
+scheduler verbatim — the paper's key claim that the simulator is "an
+alternative execution backend for the same trajectory abstraction".
+
+Dispatch completion is separated from device completion: `dispatch()`
+returns after CPU-side preparation; the backend reports device completion
+events asynchronously, at which point artifacts materialize, resources
+free, and the policy is re-invoked.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from repro.core.cost_model import CostModel
+from repro.core.trajectory import (Artifact, ExecutionLayout, Request,
+                                   RequestGraph, TrajectoryTask)
+
+
+@dataclass
+class Completion:
+    task_id: str
+    finish_time: float
+    duration: float
+    failed_ranks: tuple[int, ...] = ()
+    seq: int = 0                    # dispatch sequence (stale-event guard)
+
+
+@dataclass
+class SchedulerView:
+    """What a policy is allowed to observe (paper §3.2)."""
+    now: float
+    ready: list[tuple[TrajectoryTask, Request, RequestGraph]]
+    free_ranks: list[int]
+    num_ranks: int
+    cost: CostModel
+    running: dict[str, tuple[TrajectoryTask, ExecutionLayout]]
+
+
+@dataclass
+class Decision:
+    task_id: str
+    layout: ExecutionLayout
+
+
+class Policy:
+    name = "base"
+
+    def schedule(self, view: SchedulerView) -> list[Decision]:
+        raise NotImplementedError
+
+
+class ControlPlane:
+    def __init__(self, num_ranks: int, policy: Policy, cost: CostModel,
+                 backend, *, dispatch_overhead: float = 0.0):
+        self.num_ranks = num_ranks
+        self.policy = policy
+        self.cost = cost
+        self.backend = backend
+        self.dispatch_overhead = dispatch_overhead
+        self.graphs: dict[str, RequestGraph] = {}
+        self.requests: dict[str, Request] = {}
+        self.running: dict[str, tuple[TrajectoryTask, ExecutionLayout]] = {}
+        self.free_ranks: set[int] = set(range(num_ranks))
+        self.now = 0.0
+        self.events: list[dict] = []        # trace for benchmarks
+        backend.attach(self)
+
+    # ------------------------------------------------------------------
+    def submit(self, request: Request, graph: RequestGraph):
+        self.requests[request.id] = request
+        self.graphs[request.id] = graph
+        self.events.append({"t": self.now, "ev": "arrival",
+                            "req": request.id})
+
+    # ------------------------------------------------------------------
+    def _view(self) -> SchedulerView:
+        ready = []
+        for rid, g in self.graphs.items():
+            req = self.requests[rid]
+            if req.arrival > self.now or req.failed:
+                continue
+            for t in g.ready_tasks():
+                ready.append((t, req, g))
+        return SchedulerView(now=self.now, ready=ready,
+                             free_ranks=sorted(self.free_ranks),
+                             num_ranks=self.num_ranks, cost=self.cost,
+                             running=dict(self.running))
+
+    # ------------------------------------------------------------------
+    def _validate(self, d: Decision, view: SchedulerView) -> bool:
+        if d.task_id in self.running:
+            return False
+        if any(r not in self.free_ranks for r in d.layout.ranks):
+            return False
+        return True
+
+    # ------------------------------------------------------------------
+    def schedule_point(self):
+        """Invoke the policy and dispatch its decisions."""
+        view = self._view()
+        if not view.ready or not view.free_ranks:
+            return
+        for d in self.policy.schedule(view):
+            if not self._validate(d, view):
+                continue
+            task = None
+            for t, req, g in view.ready:
+                if t.id == d.task_id:
+                    task = t
+                    graph = g
+                    break
+            if task is None:
+                continue
+            task.state = "running"
+            task.layout = d.layout
+            task.dispatch_time = self.now
+            task.meta["_seq"] = task.meta.get("_seq", 0) + 1
+            self.free_ranks -= set(d.layout.ranks)
+            self.running[task.id] = (task, d.layout)
+            self.events.append({"t": self.now, "ev": "dispatch",
+                                "task": task.id, "kind": task.kind,
+                                "ranks": list(d.layout.ranks)})
+            self.backend.dispatch(task, d.layout, graph, self.now)
+            view = self._view()     # refresh free ranks for next decision
+            if not view.free_ranks:
+                break
+
+    # ------------------------------------------------------------------
+    def on_completion(self, c: Completion):
+        if c.task_id not in self.running:
+            return                  # stale event from a failed dispatch
+        task = self.running[c.task_id][0]
+        if c.seq and c.seq != task.meta.get("_seq", 0):
+            return                  # completion of a superseded dispatch
+        task, layout = self.running.pop(c.task_id)
+        self.now = max(self.now, c.finish_time)
+        task.state = "done"
+        task.complete_time = c.finish_time
+        self.free_ranks |= set(layout.ranks)
+        graph = self.graphs[task.request_id]
+        for aid in task.outputs:
+            art = graph.artifacts[aid]
+            art.materialized = True
+            if art.layout is None:
+                art.layout = layout
+        # online cost-model calibration (§5.1)
+        self.cost.observe(self.requests[task.request_id].model, task.kind,
+                          task.meta.get("tokens", 4096), layout.degree,
+                          c.duration)
+        req = self.requests[task.request_id]
+        if graph.is_done() and req.done_time is None:
+            req.done_time = c.finish_time
+            self.events.append({"t": self.now, "ev": "request_done",
+                                "req": req.id})
+
+    def fail_task(self, task_id: str, requeue: bool = True):
+        """Worker failure: the trajectory task graph is the unit of
+        recovery — re-enqueue the task; its input artifacts are intact."""
+        task, layout = self.running.pop(task_id)
+        self.free_ranks |= set(layout.ranks)
+        if requeue:
+            task.state = "pending"
+            task.layout = None
+        else:
+            self.requests[task.request_id].failed = True
+
+    # ------------------------------------------------------------------
+    def _next_arrival(self) -> Optional[float]:
+        future = [r.arrival for r in self.requests.values()
+                  if r.arrival > self.now and not r.failed]
+        return min(future) if future else None
+
+    def run(self, until: float = float("inf"), max_events: int = 10 ** 7):
+        """Main loop: schedule, then advance time to the next completion or
+        arrival event, whichever is earlier (virtual-clock backends)."""
+        for _ in range(max_events):
+            if self.now >= until:
+                break
+            self.schedule_point()
+            na = self._next_arrival()
+            nc = self.backend.peek()
+            if nc is not None and (na is None or nc <= na):
+                for c in self.backend.poll():
+                    self.on_completion(c)
+            elif na is not None:
+                self.now = na
+            else:
+                break
+        return self
+
+    # ------------------------------------------------------------------
+    def metrics(self) -> dict:
+        lat, done, failed = [], 0, 0
+        total = len(self.requests)
+        slo_miss = 0
+        for req in self.requests.values():
+            if req.done_time is not None:
+                done += 1
+                lat.append(req.done_time - req.arrival)
+                if req.deadline is not None and req.done_time > req.deadline:
+                    slo_miss += 1
+            else:
+                failed += 1
+                slo_miss += 1       # unfinished counts as violation (§6.1)
+        lat_sorted = sorted(lat)
+        span = max((r.done_time for r in self.requests.values()
+                    if r.done_time), default=0.0)
+        return {
+            "completed": done,
+            "failed": failed,
+            "throughput_rps": done / span if span else 0.0,
+            "mean_latency_s": sum(lat) / len(lat) if lat else float("nan"),
+            "p95_latency_s": (lat_sorted[int(0.95 * (len(lat_sorted) - 1))]
+                              if lat_sorted else float("nan")),
+            "slo_attainment": 1.0 - slo_miss / total if total else 1.0,
+            "makespan_s": span,
+        }

@@ -1,0 +1,147 @@
+"""Reschedulable trajectory tasks + logical artifacts (paper §3.1).
+
+A diffusion request becomes a placement-agnostic *trajectory task graph*:
+nodes are independently schedulable tasks (encode / denoise-step / decode),
+edges are artifact dependencies.  Completing a task produces a semantically
+complete state, so the runtime may change placement/parallelism at every
+boundary.
+
+Artifacts record *dependency and semantic role*, not physical layout; the
+same artifact may later be materialized replicated or sequence-sharded
+depending on the layouts of its producer and consumer (§5.3 migration).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+_ids = itertools.count()
+
+
+def fresh_id(prefix: str) -> str:
+    return f"{prefix}-{next(_ids)}"
+
+
+# ---------------------------------------------------------------------------
+# Artifacts
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FieldSpec:
+    """One field of a logical artifact (codec-reported)."""
+    kind: str                       # "sharded" | "replicated" | "meta"
+    global_shape: tuple[int, ...] = ()
+    dtype: str = "float32"
+    shard_axis: int = 0             # axis sharded under SP layouts
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.global_shape:
+            n *= d
+        itemsize = {"float32": 4, "bfloat16": 2, "float16": 2,
+                    "int32": 4}.get(self.dtype, 4)
+        return n * itemsize
+
+
+@dataclass
+class Artifact:
+    """Logical artifact: a dependency edge with a semantic role."""
+    id: str
+    request_id: str
+    role: str                       # "text_embeds"|"latent"|"sched"|"output"
+    fields: dict[str, FieldSpec] = field(default_factory=dict)
+    # materialization (set when the producer completes)
+    layout: Optional["ExecutionLayout"] = None
+    data: Optional[dict] = None     # rank -> {field: np.ndarray shard}
+    materialized: bool = False
+
+    @property
+    def nbytes(self) -> int:
+        return sum(f.nbytes for f in self.fields.values()
+                   if f.kind != "meta")
+
+
+# ---------------------------------------------------------------------------
+# Execution layouts (paper §3.2)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ExecutionLayout:
+    """Ordered logical execution group + parallel specification."""
+    ranks: tuple[int, ...]          # ordered global ranks
+    parallel: str = "sp"            # "sp" (sequence parallel) | "single"
+
+    @property
+    def degree(self) -> int:
+        return len(self.ranks)
+
+    def __post_init__(self):
+        assert len(set(self.ranks)) == len(self.ranks), "duplicate ranks"
+
+
+# ---------------------------------------------------------------------------
+# Trajectory tasks
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TrajectoryTask:
+    id: str
+    request_id: str
+    kind: str                       # "encode" | "denoise" | "decode"
+    step_index: int = -1            # denoise step number
+    inputs: list[str] = field(default_factory=list)    # artifact ids
+    outputs: list[str] = field(default_factory=list)
+    # shape metadata for cost estimation (model-adapter supplied)
+    meta: dict[str, Any] = field(default_factory=dict)
+    # runtime state
+    state: str = "pending"          # pending|ready|running|done
+    layout: Optional[ExecutionLayout] = None
+    dispatch_time: float = -1.0
+    complete_time: float = -1.0
+
+
+@dataclass
+class Request:
+    """An incoming generation request (paper §6.1 workload classes)."""
+    id: str
+    model: str                      # "dit-image" | "dit-video"
+    height: int
+    width: int
+    frames: int = 1                 # 1 -> image
+    steps: int = 50
+    arrival: float = 0.0
+    deadline: Optional[float] = None
+    size_class: str = "M"           # S | M | L
+    # filled by converter
+    task_ids: list[str] = field(default_factory=list)
+    done_time: Optional[float] = None
+    failed: bool = False
+
+
+@dataclass
+class RequestGraph:
+    """Tasks + artifacts of one request, with dependency state."""
+    request: Request
+    tasks: dict[str, TrajectoryTask]
+    artifacts: dict[str, Artifact]
+
+    def ready_tasks(self) -> list[TrajectoryTask]:
+        out = []
+        for t in self.tasks.values():
+            if t.state != "pending":
+                continue
+            if all(self.artifacts[a].materialized for a in t.inputs):
+                out.append(t)
+        return out
+
+    def total_tasks(self) -> int:
+        return len(self.tasks)
+
+    def remaining_tasks(self) -> list[TrajectoryTask]:
+        return [t for t in self.tasks.values() if t.state != "done"]
+
+    def is_done(self) -> bool:
+        return all(t.state == "done" for t in self.tasks.values())

@@ -1,0 +1,115 @@
+"""Model adapters (paper §5.2): request converter + task executors +
+artifact codecs behind a narrow interface, so policies never see model
+internals and new pipelines only add an adapter.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.trajectory import (Artifact, ExecutionLayout, FieldSpec,
+                                   Request, RequestGraph, TrajectoryTask,
+                                   fresh_id)
+
+
+# ---------------------------------------------------------------------------
+# Request converter: request -> trajectory task graph (§5.2)
+# ---------------------------------------------------------------------------
+
+def convert_request(req: Request, cfg: ModelConfig) -> RequestGraph:
+    """encode -> denoise_0..denoise_{n-1} -> decode, linked by artifacts."""
+    dc = cfg.dit
+    f = req.frames
+    f_lat = max(1, (f + 3) // 4) if f > 1 else 1
+    h_lat, w_lat = req.height // 8, req.width // 8
+    n_tok = f_lat * (h_lat // dc.patch_size) * (w_lat // dc.patch_size)
+    patch_dim = dc.patch_size * dc.patch_size * dc.in_channels
+
+    artifacts: dict[str, Artifact] = {}
+    tasks: dict[str, TrajectoryTask] = {}
+
+    def art(role: str, fields: dict[str, FieldSpec]) -> Artifact:
+        a = Artifact(id=fresh_id("art"), request_id=req.id, role=role,
+                     fields=fields)
+        artifacts[a.id] = a
+        return a
+
+    txt = art("text_embeds", {
+        "embeds": FieldSpec("replicated", (77, dc.cond_dim), "float32"),
+    })
+    enc = TrajectoryTask(id=fresh_id("task"), request_id=req.id,
+                         kind="encode", outputs=[txt.id],
+                         meta={"tokens": n_tok})
+    tasks[enc.id] = enc
+
+    prev_latent = art("latent", {
+        "latent": FieldSpec("sharded", (n_tok, patch_dim), "float32", 0),
+        "sigma": FieldSpec("meta"),
+    })
+    # the initial noisy latent is produced by the encode task (latent prep)
+    enc.outputs.append(prev_latent.id)
+
+    for step in range(req.steps):
+        nxt = art("latent", {
+            "latent": FieldSpec("sharded", (n_tok, patch_dim), "float32", 0),
+            "sigma": FieldSpec("meta"),
+        })
+        t = TrajectoryTask(id=fresh_id("task"), request_id=req.id,
+                           kind="denoise", step_index=step,
+                           inputs=[txt.id, prev_latent.id],
+                           outputs=[nxt.id],
+                           meta={"tokens": n_tok, "step": step,
+                                 "latent_shape": (f_lat, h_lat, w_lat,
+                                                  dc.in_channels)})
+        tasks[t.id] = t
+        prev_latent = nxt
+
+    out = art("output", {
+        "pixels": FieldSpec("replicated",
+                            (f_lat, h_lat * 8, w_lat * 8, 3), "float32"),
+    })
+    dec = TrajectoryTask(id=fresh_id("task"), request_id=req.id,
+                         kind="decode", inputs=[prev_latent.id],
+                         outputs=[out.id],
+                         meta={"tokens": n_tok})
+    tasks[dec.id] = dec
+    req.task_ids = list(tasks)
+    return RequestGraph(request=req, tasks=tasks, artifacts=artifacts)
+
+
+# ---------------------------------------------------------------------------
+# Artifact codecs (§5.2): layout views for the migration planner
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FieldView:
+    """Per-rank ownership of one artifact field under a layout."""
+    kind: str
+    global_shape: tuple[int, ...]
+    shard_axis: int
+    # rank -> (offset, size) along shard_axis
+    slices: dict[int, tuple[int, int]]
+
+
+def field_view(spec: FieldSpec, layout: ExecutionLayout) -> FieldView:
+    """Equal contiguous split along shard_axis (replicated -> every rank
+    owns the full range)."""
+    if spec.kind != "sharded" or layout.degree == 1:
+        full = spec.global_shape[spec.shard_axis] if spec.global_shape \
+            else 0
+        return FieldView(spec.kind, spec.global_shape, spec.shard_axis,
+                         {r: (0, full) for r in layout.ranks})
+    n = spec.global_shape[spec.shard_axis]
+    k = layout.degree
+    base, rem = divmod(n, k)
+    slices = {}
+    off = 0
+    for i, r in enumerate(layout.ranks):
+        size = base + (1 if i < rem else 0)
+        slices[r] = (off, size)
+        off += size
+    return FieldView("sharded", spec.global_shape, spec.shard_axis, slices)

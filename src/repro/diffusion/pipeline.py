@@ -1,0 +1,155 @@
+"""DiT serving pipeline: the model-executor side of the adapter (§5.2).
+
+Holds real (reduced-size) JAX weights for the text encoder, DiT denoiser,
+and VAE decoder, and executes trajectory tasks per-rank with GFC
+collectives inside (sequence-parallel denoising).  Used by the thread
+backend for faithful distributed-semantics runs; the simulator uses only
+the cost model.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.gfc import GroupDescriptor, GroupFreeComm
+from repro.core.trajectory import (ExecutionLayout, RequestGraph,
+                                   TrajectoryTask)
+from repro.diffusion import schedule
+from repro.diffusion.adapters import field_view
+from repro.models import dit, text_encoder, vae
+from repro.models.layers import split_params
+
+
+def _req_seed(request_id: str) -> int:
+    return int(hashlib.sha1(request_id.encode()).hexdigest()[:8], 16)
+
+
+class DiTPipeline:
+    """Executable DiT pipeline with reduced weights (CPU-runnable)."""
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0):
+        assert cfg.family == "dit"
+        self.cfg = cfg
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 3)
+        self.dit_params, _ = split_params(dit.init(ks[0], cfg))
+        self.txt_cfg = text_encoder.encoder_config(
+            cfg.dit.cond_dim, vocab=512).reduced(
+            d_model=cfg.dit.cond_dim, num_heads=4, num_kv_heads=4,
+            head_dim=cfg.dit.cond_dim // 4, d_ff=cfg.dit.cond_dim * 2)
+        self.txt_params, _ = split_params(
+            text_encoder.init(ks[1], self.txt_cfg))
+        self.vae_params, _ = split_params(vae.init(ks[2], cfg, hidden=32))
+
+    # ------------------------------------------------------------------
+    # adapter interface: execute this rank's share of a trajectory task
+    # ------------------------------------------------------------------
+    def execute(self, task: TrajectoryTask, layout: ExecutionLayout,
+                rank: int, comm: GroupFreeComm, graph: RequestGraph,
+                desc: GroupDescriptor):
+        if task.kind == "encode":
+            if rank == layout.ranks[0]:
+                self._encode(task, layout, graph)
+        elif task.kind == "denoise":
+            self._denoise(task, layout, rank, comm, graph, desc)
+        elif task.kind == "decode":
+            if rank == layout.ranks[0]:
+                self._decode(task, layout, graph)
+        else:
+            raise ValueError(task.kind)
+
+    # ------------------------------------------------------------------
+    def _encode(self, task, layout, graph):
+        req = graph.request
+        seed = _req_seed(req.id)
+        key = jax.random.PRNGKey(seed)
+        # synthetic prompt tokens derived from the request id (length 77
+        # matches the converter's declared text_embeds field shape)
+        toks = jax.random.randint(key, (1, 77), 0, self.txt_cfg.vocab_size)
+        embeds = text_encoder.encode(self.txt_params, toks, self.txt_cfg,
+                                     dtype=jnp.float32)[0]     # (Lt, cond)
+        txt_art = graph.artifacts[task.outputs[0]]
+        # replicated field: every rank of this layout holds a copy (a
+        # same-layout successor consumes without migration)
+        for r in layout.ranks:
+            txt_art.data[r]["embeds"] = np.asarray(embeds)
+
+        # initial noisy latent (latent preparation is part of encode stage)
+        lat_art = graph.artifacts[task.outputs[1]]
+        n_tok, patch_dim = lat_art.fields["latent"].global_shape
+        noise = jax.random.normal(jax.random.fold_in(key, 1),
+                                  (n_tok, patch_dim), jnp.float32)
+        sigmas = schedule.flow_sigmas(req.steps)
+        full = np.asarray(noise) * sigmas[0]
+        view = field_view(lat_art.fields["latent"], layout)
+        for r in layout.ranks:
+            off, size = view.slices[r]
+            lat_art.data[r]["latent"] = full[off:off + size]
+            lat_art.data[r]["sigma"] = np.float32(sigmas[0])
+
+    # ------------------------------------------------------------------
+    def _denoise(self, task, layout, rank, comm, graph, desc):
+        req = graph.request
+        txt_art = graph.artifacts[task.inputs[0]]
+        lat_art = graph.artifacts[task.inputs[1]]
+        out_art = graph.artifacts[task.outputs[0]]
+        txt = txt_art.data[rank]["embeds"]
+        x_shard = lat_art.data[rank]["latent"]                 # (N_loc, pd)
+        spec = lat_art.fields["latent"]
+        view = field_view(spec, layout)
+        off, size = view.slices[rank]
+        n_total = spec.global_shape[0]
+
+        sigmas = schedule.flow_sigmas(req.steps)
+        step = task.meta["step"]
+        sigma_now = float(sigmas[step])
+        sigma_next = float(sigmas[step + 1]) if step + 1 < req.steps else 0.0
+        t = jnp.array([schedule.timestep_of_sigma(sigma_now)], jnp.float32)
+
+        if layout.degree == 1:
+            def kv_gather(k, v):
+                return k, v
+        else:
+            def kv_gather(k, v):
+                K = comm.all_gather(desc, rank, np.asarray(k), axis=1)
+                V = comm.all_gather(desc, rank, np.asarray(v), axis=1)
+                return jnp.asarray(K), jnp.asarray(V)
+
+        v_shard = dit.forward_sp_tokens(
+            self.dit_params, jnp.asarray(x_shard)[None], t,
+            jnp.asarray(txt)[None], self.cfg, pos_offset=off,
+            n_total=n_total, kv_gather=kv_gather)[0]
+        new_x = schedule.flow_step(jnp.asarray(x_shard), v_shard,
+                                   sigma_now, sigma_next)
+        out_art.data[rank]["latent"] = np.asarray(new_x)
+        out_art.data[rank]["sigma"] = np.float32(sigma_next)
+
+    # ------------------------------------------------------------------
+    def _decode(self, task, layout, graph):
+        lat_art = graph.artifacts[task.inputs[0]]
+        out_art = graph.artifacts[task.outputs[0]]
+        leader = layout.ranks[0]
+        # the latent may be sharded over this task's layout (multi-rank
+        # decode layouts); assemble in rank order
+        if lat_art.layout is not None and lat_art.layout.degree > 1:
+            tokens = np.concatenate(
+                [lat_art.data[r]["latent"] for r in lat_art.layout.ranks],
+                axis=0)
+        else:
+            tokens = lat_art.data[leader]["latent"]           # (N, pd) full
+        f, h, w, c = task.meta.get("latent_shape") or \
+            self._infer_latent_shape(graph)
+        lat = dit.unpatchify(jnp.asarray(tokens)[None],
+                             (1, f, h, w, c), self.cfg.dit.patch_size)
+        pixels = vae.decode(self.vae_params, lat, self.cfg)[0]
+        out_art.data[leader]["pixels"] = np.asarray(pixels)
+
+    def _infer_latent_shape(self, graph):
+        req = graph.request
+        f = max(1, (req.frames + 3) // 4) if req.frames > 1 else 1
+        return (f, req.height // 8, req.width // 8, self.cfg.dit.in_channels)

@@ -1,0 +1,129 @@
+"""Paper §6.1 workloads: S/M/L request classes, arrival traces, SLOs.
+
+Wan2.2 (dit-video)  S/M/L: 480x832x49f / 480x832x81f / 720x1280x81f
+Qwen-Image (dit-image) S/M/L: 512 / 1024 / 1536 px squares
+SLO: deadline = arrival + alpha_c * T_c (profiled standalone service time),
+alpha = 2.0/2.5/3.5 (video), 1.5/2.0/6.0 (image), + fixed allowance.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.cost_model import CostModel
+from repro.core.trajectory import Request, fresh_id
+
+CLASSES = {
+    "dit-video": {
+        "S": dict(height=480, width=832, frames=49),
+        "M": dict(height=480, width=832, frames=81),
+        "L": dict(height=720, width=1280, frames=81),
+    },
+    "dit-image": {
+        "S": dict(height=512, width=512, frames=1),
+        "M": dict(height=1024, width=1024, frames=1),
+        "L": dict(height=1536, width=1536, frames=1),
+    },
+}
+
+SLO_ALPHA = {
+    "dit-video": {"S": 2.0, "M": 2.5, "L": 3.5},
+    "dit-image": {"S": 1.5, "M": 2.0, "L": 6.0},
+}
+SLO_ALLOWANCE = {"dit-video": 5.0, "dit-image": 1.0}
+
+
+def request_tokens(model: str, cls: str, patch: int = 2,
+                   steps: int = 50) -> int:
+    c = CLASSES[model][cls]
+    f = c["frames"]
+    f_lat = max(1, (f + 3) // 4) if f > 1 else 1
+    return f_lat * (c["height"] // 8 // patch) * (c["width"] // 8 // patch)
+
+
+def standalone_service_time(model: str, cls: str, cost: CostModel,
+                            steps: int = 50, degree: int = 1) -> float:
+    """Profiled single-request service time T_c (for SLO deadlines)."""
+    tok = request_tokens(model, cls)
+    t = cost.estimate(model, "encode", tok, 1)
+    t += steps * cost.estimate(model, "denoise", tok, degree)
+    t += cost.estimate(model, "decode", tok, degree)
+    return t
+
+
+def make_request(model: str, cls: str, arrival: float, cost: CostModel,
+                 steps: int = 50) -> Request:
+    c = CLASSES[model][cls]
+    t_c = standalone_service_time(model, cls, cost, steps)
+    deadline = arrival + SLO_ALPHA[model][cls] * t_c + SLO_ALLOWANCE[model]
+    return Request(id=fresh_id("req"), model=model, height=c["height"],
+                   width=c["width"], frames=c["frames"], steps=steps,
+                   arrival=arrival, deadline=deadline, size_class=cls)
+
+
+# ---------------------------------------------------------------------------
+# Traces (Fig. 7): "short" mixed-arrival and "foreground-burst"
+# ---------------------------------------------------------------------------
+
+def _lcg(seed: int):
+    state = seed or 1
+
+    def rand():
+        nonlocal state
+        state = (1103515245 * state + 12345) % (1 << 31)
+        return state / (1 << 31)
+    return rand
+
+
+def short_trace(model: str, cost: CostModel, *, duration: float = 120.0,
+                load: float = 0.7, num_ranks: int = 4, steps: int = 50,
+                seed: int = 7) -> list[Request]:
+    """Compact mixed-arrival period: Poisson arrivals, class mix
+    60/30/10 S/M/L, rate calibrated to `load` x estimated capacity."""
+    rand = _lcg(seed)
+    mix = [("S", 0.6), ("M", 0.3), ("L", 0.1)]
+    mean_t = sum(w * standalone_service_time(model, c, cost, steps)
+                 for c, w in mix)
+    rate = load * num_ranks / mean_t          # requests/s at target load
+    out, t = [], 0.0
+    while t < duration:
+        t += -math.log(max(rand(), 1e-9)) / rate
+        u, cls = rand(), "L"
+        acc = 0.0
+        for c, w in mix:
+            acc += w
+            if u <= acc:
+                cls = c
+                break
+        out.append(make_request(model, cls, t, cost, steps))
+    return out
+
+
+def foreground_burst_trace(model: str, cost: CostModel, *,
+                           duration: float = 120.0, load: float = 0.5,
+                           num_ranks: int = 4, steps: int = 50,
+                           seed: int = 11) -> list[Request]:
+    """Bursts of short requests arriving while longer requests are in
+    flight: background M/L Poisson stream + periodic dense S bursts."""
+    rand = _lcg(seed)
+    out: list[Request] = []
+    # background stream of M/L
+    mean_t = 0.5 * (standalone_service_time(model, "M", cost, steps)
+                    + standalone_service_time(model, "L", cost, steps))
+    rate = load * num_ranks / mean_t * 0.5
+    t = 0.0
+    while t < duration:
+        t += -math.log(max(rand(), 1e-9)) / rate
+        out.append(make_request(model, "M" if rand() < 0.6 else "L", t,
+                                cost, steps))
+    # foreground bursts: every ~duration/4, a burst of short requests
+    burst_times = [duration * f for f in (0.15, 0.4, 0.65, 0.85)]
+    t_s = standalone_service_time(model, "S", cost, steps)
+    for bt in burst_times:
+        n_burst = max(3, int(num_ranks * 2))
+        for i in range(n_burst):
+            out.append(make_request(model, "S", bt + i * t_s * 0.05,
+                                    cost, steps))
+    out.sort(key=lambda r: r.arrival)
+    return out

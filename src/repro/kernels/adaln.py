@@ -1,0 +1,65 @@
+"""Fused adaLN-Zero modulate Pallas TPU kernel.
+
+The paper's DiT blocks apply (LN -> scale/shift modulate -> gate ->
+residual add) six tensor-wide passes per block per denoise step.  Unfused,
+each pass round-trips the (B, N, D) activation through HBM; this kernel
+fuses LN + modulate + gated-residual into ONE pass: a (block_n, D) token
+tile is loaded to VMEM once, normalized with an in-tile reduction, scaled,
+gated and accumulated, saving 3 HBM round-trips of the activation per
+application.
+
+TARGET: TPU.  VALIDATED with interpret=True vs ref.adaln_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adaln_kernel(x_ref, shift_ref, scale_ref, gate_ref, res_ref, o_ref, *,
+                  eps: float):
+    """One (batch, n-block) program.
+
+    x_ref/res_ref/o_ref: (block_n, D) VMEM tiles
+    shift/scale/gate:    (1, D) per-batch modulation rows
+    """
+    x = x_ref[...].astype(jnp.float32)
+    mu = x.mean(axis=1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=1, keepdims=True)
+    ln = (x - mu) * jax.lax.rsqrt(var + eps)
+    mod = ln * (1.0 + scale_ref[...].astype(jnp.float32)[None, :]) \
+        + shift_ref[...].astype(jnp.float32)[None, :]
+    out = res_ref[...].astype(jnp.float32) \
+        + gate_ref[...].astype(jnp.float32)[None, :] * mod
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "eps", "interpret"))
+def adaln_modulate(x, shift, scale, gate, residual, *, block_n: int = 128,
+                   eps: float = 1e-6, interpret: bool = True):
+    """Fused LN+modulate+gate+residual.
+
+    x/residual: (B, N, D); shift/scale/gate: (B, D).
+    N must be a multiple of block_n (callers pad).
+    """
+    b, n, d = x.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (b, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_adaln_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_n, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((None, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((None, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((None, block_n, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_n, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, d), x.dtype),
+        interpret=interpret,
+    )(x, shift, scale, gate, residual)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = False):
+    """q: (B, Sq, H, d); k/v: (B, Sk, KV, d). fp32 softmax."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool),
+                        k=k.shape[1] - sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def adaln_ref(x, shift, scale, gate, residual, *, eps: float = 1e-6):
+    """Fused adaLN-Zero modulate: LN(x)*(1+scale)+shift, gated residual add.
+
+    x/residual: (B, N, D); shift/scale/gate: (B, D).
+    Returns residual + gate * (LN(x) * (1 + scale) + shift).
+    """
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    ln = (xf - mu) * jax.lax.rsqrt(var + eps)
+    mod = ln * (1.0 + scale.astype(jnp.float32)[:, None]) \
+        + shift.astype(jnp.float32)[:, None]
+    out = residual.astype(jnp.float32) \
+        + gate.astype(jnp.float32)[:, None] * mod
+    return out.astype(x.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, *, chunk: int = 0):
+    """Sequential (non-chunked) SSD recurrence oracle.
+
+    x: (b, l, h, p); dt: (b, l, h); A: (h,); B/C: (b, l, n).
+    Returns (y (b, l, h, p), final_state (b, h, p, n)).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp               # (b,h,p),(b,h),(b,n),(b,n)
+        dA = jnp.exp(dtt * A[None])         # (b,h)
+        dBx = jnp.einsum("bn,bhp->bhpn", Bt, xt * dtt[..., None])
+        state = state * dA[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Ct, state)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, ys = jax.lax.scan(
+        step, init,
+        (x.swapaxes(0, 1), dt.swapaxes(0, 1), B.swapaxes(0, 1),
+         C.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), final

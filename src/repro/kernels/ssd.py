@@ -1,0 +1,103 @@
+"""Mamba2 SSD (state-space dual) chunked-scan Pallas TPU kernel.
+
+Per (batch, head) program: iterate chunks sequentially, carrying the
+(p x n) state in VMEM.  Within each chunk the dual "attention" form runs
+on the MXU: scores = C B^T masked by the segment-sum decay, plus the
+carried-state contribution — the chunk never leaves VMEM between the four
+contractions.  Chunk length 128 aligns the MXU contraction dims.
+
+TARGET: TPU.  VALIDATED with interpret=True vs ref.ssd_ref (sequential
+recurrence oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                chunk: int):
+    """One (batch, head) program over all chunks.
+
+    x_ref:  (L, p)   dt_ref: (L, 1)   a_ref: (1, 1) scalar A (negative)
+    b_ref:  (L, n)   c_ref:  (L, n)
+    y_ref:  (L, p)   state_ref: (p, n) final state output
+    """
+    L, p = x_ref.shape
+    n = b_ref.shape[1]
+    num_chunks = L // chunk
+    A = a_ref[0, 0].astype(jnp.float32)
+    tril = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def body(ci, state):
+        sl = pl.ds(ci * chunk, chunk)
+        x = x_ref[sl, :].astype(jnp.float32)            # (c, p)
+        dt = dt_ref[sl, :].astype(jnp.float32)[:, 0]    # (c,)
+        B = b_ref[sl, :].astype(jnp.float32)            # (c, n)
+        C = c_ref[sl, :].astype(jnp.float32)            # (c, n)
+        dA = dt * A                                     # (c,) log-decay
+        cum = jnp.cumsum(dA)                            # (c,)
+        xb = x * dt[:, None]
+        # intra-chunk: decay(i,j) = exp(cum_i - cum_j) for i >= j.
+        # mask BEFORE exp: upper-triangle seg is positive and can overflow
+        # f32 (exp(inf)*0 = NaN) for long chunks.
+        seg = cum[:, None] - cum[None, :]
+        decay = jnp.exp(jnp.where(tril > 0, seg, -1e30))
+        scores = (C @ B.T) * decay                      # (c, c) MXU
+        y = scores @ xb                                 # (c, p) MXU
+        # inter-chunk: contribution of carried state
+        y += jnp.exp(cum)[:, None] * (C @ state.T)      # (c,n)@(n,p)
+        y_ref[sl, :] = y.astype(y_ref.dtype)
+        # chunk-final state update
+        dstate = jnp.exp(cum[-1] - cum)                 # (c,)
+        new_state = (xb * dstate[:, None]).T @ B        # (p, n) MXU
+        return state * jnp.exp(cum[-1]) + new_state
+
+    state = jnp.zeros((p, n), jnp.float32)
+    state = jax.lax.fori_loop(0, num_chunks, body, state)
+    state_ref[...] = state.astype(state_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = True):
+    """x: (b, l, h, p); dt: (b, l, h); A: (h,); B/C: (b, l, n).
+
+    Returns (y (b, l, h, p), final_state (b, h, p, n)).
+    l must be a multiple of `chunk` (callers pad).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, l, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, l, 1)
+    af = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h, 1, 1)
+    bf = jnp.repeat(B[:, None], h, axis=1).reshape(b * h, l, n)
+    cf = jnp.repeat(C[:, None], h, axis=1).reshape(b * h, l, n)
+
+    grid = (b * h,)
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, l, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, l, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, 1, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, l, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, l, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, l, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, p, n), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, l, p), x.dtype),
+            jax.ShapeDtypeStruct((b * h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+    return (y.reshape(b, h, l, p).transpose(0, 2, 1, 3),
+            state.reshape(b, h, p, n))

@@ -1,0 +1,397 @@
+import os
+_DEV_COUNT = os.environ.get("REPRO_DEVICE_COUNT", "512")
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_DEV_COUNT} "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each live cell this builds abstract params/opt/caches (ShapeDtypeStruct,
+zero allocation), jits the appropriate step with production shardings,
+``.lower().compile()``s it, and records memory/cost analysis + the HLO
+collective schedule for the roofline (benchmarks/roofline.py consumes the
+JSON this writes).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES, ASSIGNED_ARCHS, cell_is_applicable,
+                           get_config)
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.models.layers import split_params
+from repro.sharding import (SERVE_RULES, TRAIN_RULES, activation_sharding,
+                            spec_for, tree_param_specs)
+from repro.serving.serve_loop import (input_specs, make_prefill_step,
+                                      make_serve_step)
+from repro.training.optimizer import AdamWState, adamw_init
+from repro.training.train_loop import make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+# TPU v5e hardware constants (roofline)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2, "u16": 2, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op, dtype, dims = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        out[op] = out.get(op, 0) + size * nbytes
+    return out
+
+
+def _abstract_params(cfg: ModelConfig):
+    model = get_model(cfg)
+    spec_tree = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), cfg))
+    return split_params(spec_tree)
+
+
+def _batch_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _batch_spec(tree, mesh, rules, seq_axis=None):
+    """Shard the leading batch dim of every array leaf; 2nd dim optionally."""
+    ba = _batch_axes(mesh)
+
+    def one(x):
+        if not hasattr(x, "shape") or x.ndim == 0:
+            return NamedSharding(mesh, P())
+        parts: list[Any] = [None] * x.ndim
+        bsz = 1
+        for a in ba:
+            bsz *= mesh.shape[a]
+        if x.shape[0] % bsz == 0:
+            parts[0] = ba
+        if seq_axis is not None and x.ndim > 1 and \
+                x.shape[1] % mesh.shape[seq_axis] == 0 and x.shape[1] > 1:
+            parts[1] = seq_axis
+        return NamedSharding(mesh, P(*parts))
+    return jax.tree.map(one, tree)
+
+
+def cache_sharding_for(cfg: ModelConfig, cache_tree, mesh, batch: int):
+    """Explicit sharding for each cache leaf based on its shape signature."""
+    ba = _batch_axes(mesh)
+    bsz = 1
+    for a in ba:
+        bsz *= mesh.shape[a]
+    msz = mesh.shape["model"]
+
+    def one(x):
+        parts: list[Any] = [None] * x.ndim
+        for i, d in enumerate(x.shape):
+            if d == batch and batch % bsz == 0 and ba not in parts:
+                parts[i] = ba
+                # the dim right after batch is sequence (kv len) when large
+                j = i + 1
+                if j < x.ndim and x.shape[j] % msz == 0 and \
+                        x.shape[j] >= msz and x.shape[j] > 1:
+                    parts[j] = "model"
+                break
+        return NamedSharding(mesh, P(*parts))
+    return jax.tree.map(one, cache_tree)
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    error: str = ""
+    compile_s: float = 0.0
+    flops: float = 0.0
+    hlo_bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+    per_device_memory_bytes: float = 0.0
+    output_bytes: float = 0.0
+
+
+def _make_mesh(multi_pod: bool):
+    dev_mesh = os.environ.get("REPRO_DRYRUN_MESH")
+    if dev_mesh:                      # test override, e.g. "2,4" or "2,2,2"
+        shape_t = tuple(int(x) for x in dev_mesh.split(","))
+        axes = ("pod", "data", "model")[-len(shape_t):]
+        return jax.make_mesh(shape_t, axes), "x".join(map(str, shape_t))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return mesh, ("2x16x16" if multi_pod else "16x16")
+
+
+def apply_variant(cfg: ModelConfig, variant: str) -> ModelConfig:
+    """Perf-iteration config transforms (EXPERIMENTS.md SPerf)."""
+    import dataclasses as _dc
+    if variant == "ssd_bf16" and cfg.ssm is not None:
+        return cfg.with_(ssm=_dc.replace(cfg.ssm, intra_dtype="bfloat16"))
+    if variant == "ssd_bf16_hb16" and cfg.ssm is not None:
+        return cfg.with_(ssm=_dc.replace(cfg.ssm, intra_dtype="bfloat16",
+                                         head_block=16))
+    if variant.startswith("ssd_chunk") and cfg.ssm is not None:
+        return cfg.with_(ssm=_dc.replace(cfg.ssm,
+                                         chunk=int(variant[9:])))
+    return cfg
+
+
+def _lower_cell(cfg: ModelConfig, cell: ShapeCell, mesh, remat: str,
+                variant: str):
+    """Shared lowering path for the deliverable compile AND cost variants."""
+    cfg = apply_variant(cfg, variant)
+    values, axes = _abstract_params(cfg)
+    if "serve_bf16" in variant and cell.kind != "train":
+        # store serving weights in bf16: halves ALL weight-read traffic
+        # (decode is weight-read-bound at small batch) — SPerf iteration
+        values = jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct(v.shape, jnp.bfloat16)
+            if v.dtype == jnp.dtype("float32") else v, values)
+    rules = dict(TRAIN_RULES if cell.kind == "train" else SERVE_RULES)
+    pspecs = tree_param_specs(values, axes, rules, mesh)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    ishape = input_specs(cfg, cell)
+
+    with mesh:
+        with activation_sharding(mesh, rules):
+            if cell.kind == "train":
+                bsz = 1
+                for a in _batch_axes(mesh):
+                    bsz *= mesh.shape[a]
+                step = make_train_step(cfg, remat=remat, moe_groups=bsz)
+                opt_abs = jax.eval_shape(adamw_init, values)
+                opt_shard = AdamWState(
+                    step=NamedSharding(mesh, P()), m=pshard, v=pshard)
+                batch_shard = _batch_spec(ishape["batch"], mesh, rules)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(pshard, opt_shard, batch_shard),
+                    out_shardings=(pshard, opt_shard, None))
+                return jitted.lower(values, opt_abs, ishape["batch"])
+            if cell.kind == "prefill":
+                step = make_prefill_step(cfg)
+                cache_shard = cache_sharding_for(
+                    cfg, ishape["cache"], mesh, cell.global_batch)
+                tok_shard = _batch_spec(ishape["tokens"], mesh, rules)
+                args = [values, ishape["tokens"]]
+                in_sh = [pshard, tok_shard]
+                if cfg.family == "encdec":
+                    args.append(ishape["frames"])
+                    in_sh.append(_batch_spec(ishape["frames"], mesh, rules))
+                if cfg.family == "vlm":
+                    args.append(ishape["patches"])
+                    in_sh.append(_batch_spec(ishape["patches"], mesh, rules))
+                args.append(ishape["cache"])
+                in_sh.append(cache_shard)
+                jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                                 out_shardings=(None, cache_shard))
+                return jitted.lower(*args)
+            # decode
+            step = make_serve_step(
+                cfg, mla_absorbed=("mla_absorbed" in variant),
+                sp_decode=("sp_decode" in variant))
+            cache_shard = cache_sharding_for(
+                cfg, ishape["cache"], mesh, cell.global_batch)
+            tok_shard = _batch_spec(ishape["tokens"], mesh, rules)
+            pos_shard = _batch_spec(ishape["pos"], mesh, rules)
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, tok_shard, cache_shard, pos_shard),
+                out_shardings=(None, cache_shard))
+            return jitted.lower(values, ishape["tokens"], ishape["cache"],
+                                ishape["pos"])
+
+
+def depth_variants(cfg: ModelConfig):
+    """(cfg@1unit, cfg@2units, n_units) for linear depth extrapolation.
+
+    XLA's cost_analysis counts while-loop bodies ONCE, so flops/bytes/
+    collectives are measured on small fully-unrolled variants and
+    extrapolated: total = g(1) + (units - 1) * (g(2) - g(1)).
+    """
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        groups = cfg.num_layers // k
+        tail = cfg.num_layers - groups * k
+        return (cfg.with_(num_layers=k + tail, scan_unroll=True),
+                cfg.with_(num_layers=2 * k + tail, scan_unroll=True),
+                groups)
+    if cfg.family == "encdec":
+        # enc and dec layer counts are equal in the full config
+        return (cfg.with_(num_layers=1, num_encoder_layers=1,
+                          scan_unroll=True),
+                cfg.with_(num_layers=2, num_encoder_layers=2,
+                          scan_unroll=True),
+                cfg.num_layers)
+    if cfg.local_global != (0, 0):
+        p = sum(cfg.local_global)
+        return (cfg.with_(num_layers=p, scan_unroll=True),
+                cfg.with_(num_layers=2 * p, scan_unroll=True),
+                cfg.num_layers // p)
+    nd = cfg.moe.num_dense_layers if cfg.moe is not None else 0
+    return (cfg.with_(num_layers=nd + 1, scan_unroll=True),
+            cfg.with_(num_layers=nd + 2, scan_unroll=True),
+            cfg.num_layers - nd)
+
+
+def _costs_of(compiled) -> tuple[float, float, dict]:
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)), coll)
+
+
+def extract_costs(cfg: ModelConfig, cell: ShapeCell, mesh, remat: str,
+                  variant: str) -> tuple[float, float, dict]:
+    """Depth-extrapolated per-device (flops, bytes, collective_bytes)."""
+    c1, c2, units = depth_variants(cfg)
+    f1, b1, coll1 = _costs_of(_lower_cell(c1, cell, mesh, remat,
+                                          variant).compile())
+    f2, b2, coll2 = _costs_of(_lower_cell(c2, cell, mesh, remat,
+                                          variant).compile())
+    flops = f1 + (units - 1) * (f2 - f1)
+    nbytes = b1 + (units - 1) * (b2 - b1)
+    coll = {}
+    for op in set(coll1) | set(coll2):
+        v1, v2 = coll1.get(op, 0), coll2.get(op, 0)
+        coll[op] = max(0, int(v1 + (units - 1) * (v2 - v1)))
+    return flops, nbytes, coll
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             remat: str = "full", save_hlo: bool = False,
+             variant: str = "", extrapolate: bool = True) -> CellResult:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh, mesh_name = _make_mesh(multi_pod)
+    res = CellResult(arch, shape, mesh_name, ok=False)
+    t0 = time.time()
+    try:
+        # deliverable: the FULL config must lower + compile
+        lowered = _lower_cell(cfg, cell, mesh, remat, variant)
+        compiled = lowered.compile()
+        res.compile_s = time.time() - t0
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                # per-device peak from XLA buffer assignment ("proves it
+                # fits"); argument/output recorded for the report
+                res.per_device_memory_bytes = float(
+                    getattr(ma, "peak_memory_in_bytes", 0))
+                res.output_bytes = float(
+                    getattr(ma, "output_size_in_bytes", 0))
+        except Exception:
+            pass
+        if save_hlo:
+            RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+            tag = f"{arch}_{shape}_{mesh_name}"
+            (RESULTS_DIR / f"hlo_{tag}.txt").write_text(compiled.as_text())
+        if extrapolate:
+            # roofline terms from unrolled small-depth variants
+            res.flops, res.hlo_bytes, res.collective_bytes = extract_costs(
+                cfg, cell, mesh, remat, variant)
+        else:
+            res.flops, res.hlo_bytes, res.collective_bytes = _costs_of(
+                compiled)
+        res.ok = True
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        res.error = f"{type(e).__name__}: {e}"[:2000]
+        res.compile_s = time.time() - t0
+        traceback.print_exc()
+    return res
+
+
+def live_cells():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = cell_is_applicable(cfg, shape)
+            if ok:
+                yield arch, shape
+            else:
+                print(f"SKIP {arch} x {shape}: {why}", flush=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="off")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--variant", default="",
+                    help="perf variant tag, e.g. mla_absorbed")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--no-extract", action="store_true",
+                    help="skip roofline cost extraction (memory/compile only)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    pods = {"off": [False], "on": [True], "both": [False, True]}[
+        args.multi_pod]
+    cells = list(live_cells()) if args.all else [(args.arch, args.shape)]
+    results = []
+    for arch, shape in cells:
+        for mp in pods:
+            print(f"=== {arch} x {shape} x "
+                  f"{'2x16x16' if mp else '16x16'} ===", flush=True)
+            # roofline extraction is single-pod only (the multi-pod pass
+            # proves the pod axis shards; §Roofline reads single-pod cells)
+            r = run_cell(arch, shape, mp, remat=args.remat,
+                         save_hlo=args.save_hlo, variant=args.variant,
+                         extrapolate=(not mp) and not args.no_extract)
+            print(json.dumps(dataclasses.asdict(r)), flush=True)
+            results.append(dataclasses.asdict(r))
+
+    out = args.out or str(RESULTS_DIR / "dryrun.json")
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    existing = []
+    p = Path(out)
+    if p.exists():
+        existing = json.loads(p.read_text())
+        keys = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+        existing = [r for r in existing
+                    if (r["arch"], r["shape"], r["mesh"]) not in keys]
+    p.write_text(json.dumps(existing + results, indent=1))
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells compiled OK -> {out}")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod (16, 16) = 256 chips, or 2-pod (2, 16, 16) = 512 chips.
+
+    Axes: "data" carries DP/FSDP, "model" carries TP/SP/EP; "pod" (multi-pod
+    only) is pure data parallelism across pods with gradient all-reduce.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices are available — used by
+    tests and the GFC executable-cache benchmarks."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,20 @@
+"""Model zoo: family dispatch for init / forward / prefill / decode."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from repro.configs.base import ModelConfig
+
+
+def get_model(cfg: ModelConfig):
+    """Return the module implementing cfg.family."""
+    from repro.models import (dit, encdec, hybrid, ssm, transformer, vlm)
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "ssm": ssm,
+        "hybrid": hybrid,
+        "encdec": encdec,
+        "vlm": vlm,
+        "dit": dit,
+    }[cfg.family]

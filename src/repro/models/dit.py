@@ -1,0 +1,261 @@
+"""Latent Diffusion Transformer (DiT, arXiv:2212.09748) — the paper's model.
+
+adaLN-Zero blocks with self-attention over latent tokens + cross-attention
+to text conditioning (PixArt-style), supporting image (F=1) and video
+(F>1) latents.  The fused modulate op has a Pallas kernel in
+``kernels/adaln.py``; this module is the jnp path / oracle.
+
+Token layout: latents (B, F, H, W, C) -> patchify p x p spatial ->
+(B, F*(H/p)*(W/p), p*p*C) -> linear embed -> N tokens.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ParamSpec, pspec, pzeros, pones
+from repro.sharding.ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def timestep_embedding(t, dim: int, max_period: float = 10000.0):
+    """Sinusoidal timestep embedding. t: (B,) float in [0, 1000]."""
+    half = dim // 2
+    freqs = jnp.exp(-np.log(max_period) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def pos_embedding(n_tokens: int, dim: int):
+    """1D sincos position embedding over flattened latent tokens."""
+    pos = jnp.arange(n_tokens, dtype=jnp.float32)
+    half = dim // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    args = pos[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# adaLN-Zero modulate (jnp oracle; Pallas kernel in kernels/adaln.py)
+# ---------------------------------------------------------------------------
+
+def modulate(x, shift, scale):
+    """x: (B, N, D); shift/scale: (B, D)."""
+    return x * (1.0 + scale[:, None]) + shift[:, None]
+
+
+# ---------------------------------------------------------------------------
+# DiT block
+# ---------------------------------------------------------------------------
+
+def dit_block_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "attn": L.attention_init(ks[0], cfg),
+        "cross": L.attention_init(ks[1], cfg),
+        "mlp": L.swiglu_init(ks[2], d, cfg.d_ff),
+        # adaLN-Zero: 6*d modulation from conditioning; zero-init output
+        "ada_w": pzeros((d, 6 * d), ("embed", "mlp")),
+        "ada_b": pzeros((6 * d,), (None,)),
+    }
+
+
+def dit_block_apply(p, x, c, txt, cfg: ModelConfig, *, sp_axis=None):
+    """x: (B, N, D) latent tokens; c: (B, D) adaLN cond; txt: (B, Lt, D)."""
+    mods = jnp.einsum("bd,dk->bk", jax.nn.silu(c),
+                      p["ada_w"].astype(x.dtype)) + p["ada_b"].astype(x.dtype)
+    sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mods, 6, axis=-1)
+
+    h = _ln(x)
+    h = modulate(h, sh_a, sc_a)
+    attn, _ = L.attention_apply(p["attn"], h, cfg, causal=False,
+                                use_rope=False)
+    x = x + g_a[:, None] * attn
+
+    # cross-attention to text conditioning (not modulated, PixArt-style)
+    h = _ln(x)
+    ca, _ = L.attention_apply(p["cross"], h, cfg, causal=False, kv_x=txt,
+                              use_rope=False)
+    x = x + ca
+
+    h = _ln(x)
+    h = modulate(h, sh_m, sc_m)
+    x = x + g_m[:, None] * L.swiglu_apply(p["mlp"], h)
+    return x
+
+
+def _ln(x, eps: float = 1e-6):
+    """Parameter-free LayerNorm (adaLN supplies scale/shift)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Full DiT
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig):
+    dc = cfg.dit
+    d = cfg.d_model
+    patch_in = dc.patch_size * dc.patch_size * dc.in_channels
+    ks = jax.random.split(key, 8)
+    blocks = [dit_block_init(jax.random.fold_in(ks[0], i), cfg)
+              for i in range(cfg.num_layers)]
+    return {
+        "x_embed": pspec(ks[1], (patch_in, d), (None, "embed")),
+        "t_mlp1": pspec(ks[2], (256, d), (None, "embed")),
+        "t_mlp2": pspec(ks[3], (d, d), ("embed", "embed")),
+        "txt_proj": pspec(ks[4], (dc.cond_dim, d), (None, "embed")),
+        "blocks": L.stack_layer_params(blocks),
+        "final_ada_w": pzeros((d, 2 * d), ("embed", "mlp")),
+        "final_ada_b": pzeros((2 * d,), (None,)),
+        "final_out": pzeros((d, patch_in), ("embed", None)),
+    }
+
+
+def patchify(latents, patch: int):
+    """(B, F, H, W, C) -> (B, F*(H/p)*(W/p), p*p*C)."""
+    b, f, h, w, c = latents.shape
+    x = latents.reshape(b, f, h // patch, patch, w // patch, patch, c)
+    x = x.transpose(0, 1, 2, 4, 3, 5, 6)
+    return x.reshape(b, f * (h // patch) * (w // patch),
+                     patch * patch * c)
+
+
+def unpatchify(tokens, shape, patch: int):
+    b, f, h, w, c = shape
+    x = tokens.reshape(b, f, h // patch, w // patch, patch, patch, c)
+    x = x.transpose(0, 1, 2, 4, 3, 5, 6)
+    return x.reshape(b, f, h, w, c)
+
+
+def forward(params, latents, t, txt_embeds, cfg: ModelConfig, *,
+            dtype=jnp.bfloat16, remat: str = "none"):
+    """Denoiser forward: predicts velocity/noise for latent input.
+
+    latents: (B, F, H, W, C); t: (B,) timesteps; txt_embeds: (B, Lt, cond_dim)
+    """
+    dc = cfg.dit
+    shape = latents.shape
+    x = patchify(latents, dc.patch_size).astype(dtype)
+    x = jnp.einsum("bnp,pd->bnd", x, params["x_embed"].astype(dtype))
+    x = x + pos_embedding(x.shape[1], cfg.d_model).astype(dtype)[None]
+
+    t_emb = timestep_embedding(t, 256)
+    c = jnp.einsum("bk,kd->bd", t_emb, params["t_mlp1"].astype(dtype))
+    c = jnp.einsum("bd,de->be", jax.nn.silu(c),
+                   params["t_mlp2"].astype(dtype))
+    txt = jnp.einsum("blk,kd->bld", txt_embeds.astype(dtype),
+                     params["txt_proj"].astype(dtype))
+    # t_emb is fp32; keep the conditioning in compute dtype so the scan
+    # carry dtype is stable under bf16 training
+    c = (c + txt.mean(axis=1)).astype(dtype)
+
+    def body(h, p_l):
+        h = constrain(h, "act_batch", "act_seq", None)
+        return dit_block_apply(p_l, h, c, txt, cfg), None
+    fn = jax.checkpoint(body) if remat == "full" else body
+    x, _ = jax.lax.scan(fn, x, params["blocks"],
+                        unroll=True if cfg.scan_unroll else 1)
+
+    mods = jnp.einsum("bd,dk->bk", jax.nn.silu(c),
+                      params["final_ada_w"].astype(dtype)) \
+        + params["final_ada_b"].astype(dtype)
+    sh, sc = jnp.split(mods, 2, axis=-1)
+    x = modulate(_ln(x), sh, sc)
+    x = jnp.einsum("bnd,dp->bnp", x, params["final_out"].astype(dtype))
+    return unpatchify(x.astype(jnp.float32), shape, dc.patch_size)
+
+
+def latent_shape(cfg: ModelConfig, height: int, width: int,
+                 frames: int = 0) -> tuple[int, int, int, int]:
+    """(F, H_lat, W_lat, C) for a pixel-space request (8x VAE downsample)."""
+    dc = cfg.dit
+    f = frames if frames else dc.latent_frames
+    # video VAE: 4x temporal downsample (Wan-style), 8x spatial
+    f_lat = max(1, (f + 3) // 4) if f > 1 else 1
+    return (f_lat, height // 8, width // 8, dc.in_channels)
+
+
+def token_count(cfg: ModelConfig, height: int, width: int,
+                frames: int = 0) -> int:
+    f, h, w, c = latent_shape(cfg, height, width, frames)
+    p = cfg.dit.patch_size
+    return f * (h // p) * (w // p)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel forward (paper's SP layout, executed over GFC)
+# ---------------------------------------------------------------------------
+
+def forward_sp_tokens(params, tok_shard, t, txt_embeds, cfg: ModelConfig, *,
+                      pos_offset: int, n_total: int, kv_gather,
+                      dtype=jnp.float32):
+    """Denoiser forward over a TOKEN SHARD under sequence parallelism.
+
+    tok_shard: (1, N_local, patch_dim) — this rank's patchified tokens.
+    kv_gather(k, v) -> (K, V) gathers key/value over the token axis across
+    the execution group (GFC all-gather in the thread runtime; identity at
+    SP1).  Queries stay local, so compute is token-sharded while attention
+    sees the full sequence — the paper's elastic SP layout.
+
+    Returns the velocity prediction for the local token shard
+    (1, N_local, patch_dim).
+    """
+    x = jnp.einsum("bnp,pd->bnd", tok_shard.astype(dtype),
+                   params["x_embed"].astype(dtype))
+    pe = pos_embedding(n_total, cfg.d_model).astype(dtype)
+    x = x + pe[pos_offset:pos_offset + x.shape[1]][None]
+
+    t_emb = timestep_embedding(t, 256)
+    c = jnp.einsum("bk,kd->bd", t_emb, params["t_mlp1"].astype(dtype))
+    c = jnp.einsum("bd,de->be", jax.nn.silu(c), params["t_mlp2"].astype(dtype))
+    txt = jnp.einsum("blk,kd->bld", txt_embeds.astype(dtype),
+                     params["txt_proj"].astype(dtype))
+    c = c + txt.mean(axis=1)
+
+    n_layers = jax.tree.leaves(params["blocks"])[0].shape[0]
+    for i in range(n_layers):
+        p = jax.tree.map(lambda a: a[i], params["blocks"])
+        mods = jnp.einsum("bd,dk->bk", jax.nn.silu(c),
+                          p["ada_w"].astype(dtype)) + p["ada_b"].astype(dtype)
+        sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mods, 6, axis=-1)
+
+        h = modulate(_ln(x), sh_a, sc_a)
+        ap = p["attn"]
+        q = jnp.einsum("bsd,dhk->bshk", h, ap["wq"].astype(dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, ap["wk"].astype(dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, ap["wv"].astype(dtype))
+        K, V = kv_gather(k, v)                      # GFC all-gather (axis=1)
+        attn = L.sdpa(q, K, V, causal=False)
+        attn = jnp.einsum("bshk,hkd->bsd", attn, ap["wo"].astype(dtype))
+        x = x + g_a[:, None] * attn
+
+        h = _ln(x)
+        ca, _ = L.attention_apply(p["cross"], h, cfg, causal=False,
+                                  kv_x=txt, use_rope=False)
+        x = x + ca
+
+        h = modulate(_ln(x), sh_m, sc_m)
+        x = x + g_m[:, None] * L.swiglu_apply(p["mlp"], h)
+
+    mods = jnp.einsum("bd,dk->bk", jax.nn.silu(c),
+                      params["final_ada_w"].astype(dtype)) \
+        + params["final_ada_b"].astype(dtype)
+    sh, sc = jnp.split(mods, 2, axis=-1)
+    x = modulate(_ln(x), sh, sc)
+    return jnp.einsum("bnd,dp->bnp", x, params["final_out"].astype(dtype))

@@ -1,0 +1,137 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block
+applied every ``shared_attn_every`` ssm layers (params reused — arXiv:2411.15242).
+
+Scan structure: groups of (``shared_attn_every`` stacked mamba layers +
+1 shared-attn application).  The shared block's params enter via closure
+(not scanned); its KV caches are per-application (stacked over groups).
+Remainder mamba layers run unscanned at the tail.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.sharding.ctx import constrain
+
+
+def _group_plan(cfg: ModelConfig):
+    k = cfg.shared_attn_every
+    n_groups = cfg.num_layers // k
+    tail = cfg.num_layers - n_groups * k
+    return k, n_groups, tail
+
+
+def init(key, cfg: ModelConfig):
+    k, n_groups, tail = _group_plan(cfg)
+    ks = jax.random.split(key, 5)
+    mamba = [S.ssd_block_init(jax.random.fold_in(ks[1], i), cfg)
+             for i in range(n_groups * k)]
+    grouped = L.stack_layer_params(mamba)   # (n_groups*k, ...)
+    grouped = jax.tree.map(
+        lambda p: L.ParamSpec(
+            p.value.reshape((n_groups, k) + p.value.shape[1:]),
+            ("layers",) + p.axes),
+        grouped, is_leaf=L.is_param_spec)
+    params: dict[str, Any] = {
+        "embed": L.embedding_init(ks[0], cfg),
+        "mamba_groups": grouped,
+        "shared_attn": T.block_init(ks[2], cfg, moe=False),
+        "ln_final": L.rmsnorm_init(cfg.d_model),
+    }
+    for i in range(tail):
+        params[f"tail_{i}"] = S.ssd_block_init(
+            jax.random.fold_in(ks[3], i), cfg)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    k, n_groups, tail = _group_plan(cfg)
+    ssm_one = S.ssd_block_cache(cfg, batch, dtype)
+    attn_one = T._block_cache(cfg, batch, max_len, 0, dtype)
+    cache: dict[str, Any] = {
+        "mamba_groups": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups, k) + x.shape), ssm_one),
+        "shared_kv": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape), attn_one),
+    }
+    for i in range(tail):
+        cache[f"tail_{i}"] = S.ssd_block_cache(cfg, batch, dtype)
+    return cache
+
+
+def _scan_groups(params, caches, x, cfg: ModelConfig, positions,
+                 remat: str = "none"):
+    k, n_groups, tail = _group_plan(cfg)
+    shared_p = params["shared_attn"]
+
+    def group(carry, scanned):
+        h = constrain(carry, "act_batch", "act_seq", None)
+        p_g, c_g = scanned
+        m_c = c_g[0] if c_g is not None else None
+        a_c = c_g[1] if c_g is not None else None
+
+        def inner(hh, sc):
+            p_l, c_l = sc
+            hh, nc = S.ssd_block_apply(p_l, hh, cfg, cache=c_l)
+            return hh, nc
+        h, new_m_c = jax.lax.scan(inner, h, (p_g, m_c),
+                                  unroll=True if cfg.scan_unroll else 1)
+        h, new_a_c, _ = T.block_apply(shared_p, h, cfg, window=0,
+                                      positions=positions, cache=a_c)
+        return h, ((new_m_c, new_a_c) if caches is not None else None)
+
+    fn = jax.checkpoint(group) if remat == "full" else group
+    cache_xs = None
+    if caches is not None:
+        cache_xs = (caches["mamba_groups"], caches["shared_kv"])
+    x, new_caches = jax.lax.scan(fn, x, (params["mamba_groups"], cache_xs),
+                                 unroll=True if cfg.scan_unroll else 1)
+    return x, new_caches
+
+
+def _apply_tail(params, caches, x, cfg):
+    k, n_groups, tail = _group_plan(cfg)
+    new = {}
+    for i in range(tail):
+        c = caches[f"tail_{i}"] if caches is not None else None
+        x, nc = S.ssd_block_apply(params[f"tail_{i}"], x, cfg, cache=c)
+        new[f"tail_{i}"] = nc
+    return x, new
+
+
+def forward(params, tokens, cfg: ModelConfig, *, remat="none",
+            dtype=jnp.bfloat16):
+    x = L.embed(params["embed"], tokens, cfg, dtype)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _ = _scan_groups(params, None, x, cfg, positions, remat)
+    x, _ = _apply_tail(params, None, x, cfg)
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg), jnp.float32(0.0)
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    x = L.embed(params["embed"], tokens, cfg, dtype)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, new_g = _scan_groups(params, cache, x, cfg, positions)
+    x, new_tail = _apply_tail(params, cache, x, cfg)
+    new_cache = {"mamba_groups": new_g[0], "shared_kv": new_g[1], **new_tail}
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x[:, -1:], cfg), new_cache
+
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig, *,
+                dtype=jnp.bfloat16):
+    x = L.embed(params["embed"], tokens, cfg, dtype)
+    positions = pos[:, None]
+    x, new_g = _scan_groups(params, cache, x, cfg, positions)
+    x, new_tail = _apply_tail(params, cache, x, cfg)
+    new_cache = {"mamba_groups": new_g[0], "shared_kv": new_g[1], **new_tail}
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg), new_cache

@@ -1,0 +1,526 @@
+"""Shared model building blocks (pure JAX, functional).
+
+Every parameter leaf is created through :func:`pspec` so that a parallel tree
+of *logical sharding axes* is built alongside the value tree.  The sharding
+module maps logical axes -> mesh axes (MaxText-style rules), with automatic
+divisibility fallback.
+
+Logical axis vocabulary:
+  "vocab"     embedding rows / logits cols          -> model axis
+  "embed"     d_model dim                           -> fsdp(data) in training
+  "heads"     query heads                           -> model axis
+  "kv_heads"  kv heads                              -> model axis (if divides)
+  "head_dim"  per-head dim                          -> unsharded
+  "mlp"       FFN hidden                            -> model axis
+  "experts"   MoE expert dim                        -> model axis (EP)
+  "layers"    scan-stacked layer dim                -> unsharded
+  "ssm_inner" mamba inner dim                       -> model axis
+  "ssm_state" mamba state dim                       -> unsharded
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Param creation with logical axes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    """A parameter leaf paired with its logical sharding axes."""
+    value: Any                      # jnp array or ShapeDtypeStruct
+    axes: tuple[Optional[str], ...]
+
+
+# Registered as a pytree so init functions can run under jax.eval_shape
+# (dry-run builds abstract params without allocating) and inside jit/scan.
+jax.tree_util.register_pytree_node(
+    ParamSpec,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: ParamSpec(children[0], axes),
+)
+
+
+def pspec(key, shape, axes, dtype=jnp.float32, scale=None) -> ParamSpec:
+    assert len(shape) == len(axes), (shape, axes)
+    if scale is None:
+        fan_in = shape[0] if len(shape) == 1 else int(np.prod(shape[:-1]))
+        scale = max(fan_in, 1) ** -0.5
+    val = (scale * jax.random.normal(key, shape)).astype(dtype)
+    return ParamSpec(val, tuple(axes))
+
+
+def pzeros(shape, axes, dtype=jnp.float32) -> ParamSpec:
+    assert len(shape) == len(axes)
+    return ParamSpec(jnp.zeros(shape, dtype), tuple(axes))
+
+
+def pones(shape, axes, dtype=jnp.float32) -> ParamSpec:
+    assert len(shape) == len(axes)
+    return ParamSpec(jnp.ones(shape, dtype), tuple(axes))
+
+
+def is_param_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def split_params(tree):
+    """Split a ParamSpec tree into (values, logical_axes) trees."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param_spec)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param_spec)
+    return values, axes
+
+
+def stack_layer_params(per_layer: list):
+    """Stack identical param trees along a new leading "layers" axis."""
+    def stack(*leaves):
+        vals = jnp.stack([l.value for l in leaves])
+        return ParamSpec(vals, ("layers",) + leaves[0].axes)
+    return jax.tree.map(stack, *per_layer, is_leaf=is_param_spec)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> ParamSpec:
+    return pones((d,), ("embed",))
+
+
+def rmsnorm(w, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (jnp reference path; Pallas kernel is selected in kernels/ops.py)
+# ---------------------------------------------------------------------------
+
+def repeat_kv(k, n_rep: int):
+    """(B, S, KV, hd) -> (B, S, KV*n_rep, hd)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)) \
+        .reshape(b, s, kv * n_rep, hd)
+
+
+def sdpa(q, k, v, *, causal: bool, window: int = 0,
+         q_offset: int = 0, kv_len=None, bias=None):
+    """Scaled dot-product attention over (B, S, H, hd) tensors.
+
+    ``window``   > 0 -> sliding-window mask (keys within `window` of query).
+    ``q_offset``     -> absolute position of q[0] (decode: pos of new token).
+    ``kv_len``       -> optional (B,) valid key lengths (decode caches).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    n_rep = h // k.shape[2]
+    k, v = repeat_kv(k, n_rep), repeat_kv(v, n_rep)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (hd ** -0.5)
+    qpos = jnp.arange(sq) + q_offset                   # (sq,)
+    kpos = jnp.arange(sk)                              # (sk,)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    if kv_len is not None:
+        valid = kpos[None, :] < kv_len[:, None]        # (B, sk)
+        scores = jnp.where(valid[:, None, None], scores, -1e30)
+    if bias is not None:
+        scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _sp_decode_ok(cache) -> bool:
+    from repro.sharding.ctx import current_mesh
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return False
+    return cache["k"].shape[1] % mesh.shape["model"] == 0
+
+
+def attention_init(key, cfg: ModelConfig, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": pspec(ks[0], (d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": pspec(ks[1], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": pspec(ks[2], (d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": pspec(ks[3], (h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def attention_apply(p, x, cfg: ModelConfig, *, causal=True, window=0,
+                    positions=None, cache=None, kv_x=None, use_rope=True,
+                    sp_decode: bool = False):
+    """Returns (out, new_cache).
+
+    Training/prefill: ``cache=None`` -> attends within ``x``.
+    Decode: ``cache={"k","v","len"}`` -> append x's kv and attend to cache.
+    Cross-attention: ``kv_x`` provides the key/value sequence (no cache
+    update; cache holds precomputed cross-kv).
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+
+    if kv_x is not None:                              # cross attention
+        if cache is not None and "k" in cache:        # precomputed cross-kv
+            k, v = cache["k"], cache["v"]
+        else:
+            k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(x.dtype))
+            v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(x.dtype))
+        out = sdpa(q, k, v, causal=False)
+        new_cache = {"k": k, "v": v}
+    elif cache is None:                               # full self-attn
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        if use_rope:
+            k = apply_rope(k, positions, cfg.rope_theta)
+        out = sdpa(q, k, v, causal=causal, window=window)
+        new_cache = None
+    else:                                             # cached decode/prefill
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        if use_rope:
+            k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        cache_len = cache["len"]                      # (B,) int32
+        if window and cache["k"].shape[1] == window:  # ring buffer (SWA)
+            if s > 1:
+                # windowed prefill: attend within the new sequence under the
+                # window mask, then install the last min(s, W) keys into the
+                # ring at slots (pos % W).  Assumes prefill starts at len=0.
+                out = sdpa(q, k_new, v_new, causal=True, window=window)
+                last = min(s, window)
+                slots = (jnp.arange(s - last, s) % window)
+                k_all = cache["k"].at[:, slots].set(k_new[:, s - last:])
+                v_all = cache["v"].at[:, slots].set(v_new[:, s - last:])
+            else:
+                slot = (cache_len % window)[0]
+                k_all = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k_new, slot, axis=1)
+                v_all = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v_new, slot, axis=1)
+                # ring decode: slots < min(len+1, W) valid; keys are stored
+                # pre-rotated at absolute positions so scores stay correct.
+                valid = jnp.minimum(cache_len + s, window)
+                out = sdpa(q, k_all, v_all, causal=False, kv_len=valid)
+        elif sp_decode and s == 1 and not window and _sp_decode_ok(cache):
+            # flash-decoding over the sequence-sharded cache: local partial
+            # softmax per shard + pmax/psum combine — avoids gathering the
+            # cache (EXPERIMENTS.md §Perf, decode hillclimb)
+            from repro.sharding.ctx import current_mesh
+            from repro.sharding.sp import flash_decode
+            out, k_all, v_all = flash_decode(
+                q, k_new, v_new, cache["k"], cache["v"], cache_len,
+                mesh=current_mesh())
+        else:
+            k_all = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new, cache_len[0], axis=1)
+            v_all = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new, cache_len[0], axis=1)
+            out = sdpa(q, k_all, v_all, causal=True, q_offset=cache_len[0],
+                       kv_len=cache_len + s, window=window)
+        new_cache = {"k": k_all, "v": v_all, "len": cache_len + s}
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig):
+    m, d, h = cfg.mla, cfg.d_model, cfg.num_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    p = {
+        # kv joint low-rank down-projection (+ decoupled rope key)
+        "w_dkv": pspec(ks[0], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                       ("embed", None)),
+        "w_uk": pspec(ks[1], (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                      (None, "heads", "head_dim")),
+        "w_uv": pspec(ks[2], (m.kv_lora_rank, h, m.v_head_dim),
+                      (None, "heads", "head_dim")),
+        "wo": pspec(ks[3], (h, m.v_head_dim, d),
+                    ("heads", "head_dim", "embed")),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank),
+    }
+    if m.q_lora_rank:
+        p["w_dq"] = pspec(ks[4], (d, m.q_lora_rank), ("embed", None))
+        p["q_norm"] = rmsnorm_init(m.q_lora_rank)
+        p["w_uq"] = pspec(ks[5], (m.q_lora_rank, h, qk_hd),
+                          (None, "heads", "head_dim"))
+    else:
+        p["w_uq"] = pspec(ks[6], (d, h, qk_hd), ("embed", "heads", "head_dim"))
+    return p
+
+
+def mla_apply(p, x, cfg: ModelConfig, *, positions=None, cache=None,
+              absorbed: bool = False):
+    """MLA attention. Cache holds the *compressed* latent (B, S, r + rope_hd).
+
+    ``absorbed=True`` uses the weight-absorption decode optimization
+    (q projected into latent space; no per-step K/V expansion) — a beyond-
+    paper perf optimization recorded in EXPERIMENTS.md §Perf.
+    """
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    # --- queries
+    if "w_dq" in p:
+        q_lat = rmsnorm(p["q_norm"], jnp.einsum(
+            "bsd,dr->bsr", x, p["w_dq"].astype(x.dtype)), cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", q_lat, p["w_uq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_uq"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # --- compressed kv latent (+ shared rope key)
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    c_lat, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c_lat = rmsnorm(p["kv_norm"], c_lat, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    if cache is not None:
+        cache_len = cache["len"]
+        q_offset = cache_len[0]
+        c_lat = jax.lax.dynamic_update_slice_in_dim(
+            cache["c"], c_lat, cache_len[0], axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], k_rope, cache_len[0], axis=1)
+        new_cache = {"c": c_lat, "kr": k_rope, "len": cache_len + s}
+        kv_len = cache_len + s
+    else:
+        new_cache = None
+        kv_len = None
+        q_offset = 0
+
+    sk = c_lat.shape[1]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    if absorbed:
+        # q_nope absorbed through w_uk: (B,S,H,r) scores against latent.
+        # Fused single einsum over concat(latent, rope) features — one
+        # score-sized tensor instead of three (SPerf deepseek iter 2).
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope,
+                           p["w_uk"].astype(x.dtype))
+        q_cat = jnp.concatenate([q_abs, q_rope], axis=-1)
+        kv_cat = jnp.concatenate([c_lat, k_rope[:, :, 0, :]], axis=-1)
+        scores = jnp.einsum("bshr,btr->bhst", q_cat, kv_cat,
+                            preferred_element_type=jnp.float32) * scale
+        scores = _causal_len_mask(scores, s, sk, kv_len, q_offset)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", probs, c_lat)
+        out = jnp.einsum("bshr,rhv->bshv", ctx_lat,
+                         p["w_uv"].astype(x.dtype))
+    else:
+        # naive: expand per-token K/V from the latent (paper-faithful
+        # reference semantics of MLA).
+        k_nope = jnp.einsum("btr,rhk->bthk", c_lat, p["w_uk"].astype(x.dtype))
+        v = jnp.einsum("btr,rhv->bthv", c_lat, p["w_uv"].astype(x.dtype))
+        k_rope_b = jnp.broadcast_to(
+            k_rope, (b, sk, h, m.qk_rope_head_dim))
+        k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        scores = jnp.einsum("bshk,bthk->bhst", q_full, k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = _causal_len_mask(scores, s, sk, kv_len, q_offset)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthv->bshv", probs, v)
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def _causal_len_mask(scores, sq, sk, kv_len, q_offset=0):
+    """scores: (B,H,sq,sk). Causal mask (+ kv_len validity for caches)."""
+    if kv_len is None:
+        mask = jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+        return jnp.where(mask[None, None], scores, -1e30)
+    valid = jnp.arange(sk)[None, :] < kv_len[:, None]  # (B, sk)
+    if sq == 1:
+        # decode: causal (kpos <= len) is implied by validity (kpos < len+1)
+        return jnp.where(valid[:, None, None], scores, -1e30)
+    qpos = jnp.arange(sq) + q_offset                   # (sq,)
+    causal = jnp.arange(sk)[None, :] <= qpos[:, None]  # (sq, sk)
+    mask = causal[None, None] & valid[:, None, None]
+    return jnp.where(mask, scores, -1e30)
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, dff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": pspec(ks[0], (d, dff), ("embed", "mlp")),
+        "w_up": pspec(ks[1], (d, dff), ("embed", "mlp")),
+        "w_down": pspec(ks[2], (dff, d), ("mlp", "embed")),
+    }
+
+
+def swiglu_apply(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u,
+                      p["w_down"].astype(x.dtype))
+
+
+def moe_init(key, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    eff = m.expert_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": pspec(ks[0], (d, m.num_experts), ("embed", None)),
+        "w_gate": pspec(ks[1], (m.num_experts, d, eff),
+                        ("experts", "embed", "mlp")),
+        "w_up": pspec(ks[2], (m.num_experts, d, eff),
+                      ("experts", "embed", "mlp")),
+        "w_down": pspec(ks[3], (m.num_experts, eff, d),
+                        ("experts", "mlp", "embed")),
+    }
+    if m.num_shared_experts:
+        p["shared"] = swiglu_init(ks[4], d, eff * m.num_shared_experts)
+    return p
+
+
+def moe_apply(p, x, cfg: ModelConfig, exact: bool = False):
+    """Grouped capacity-buffer MoE.
+
+    top-k route -> per-group scatter into a (G, E, C, d) buffer -> batched
+    expert GEMMs -> weighted gather-combine.  Avoids GShard's O(T·E·C)
+    one-hot dispatch einsum: dispatch is a scatter (data movement), so HLO
+    FLOPs stay representative of useful compute.
+
+    Grouping (``cfg.moe.num_groups``, normally = #data shards) keeps the
+    capacity buffer sharded with the tokens instead of one global buffer.
+    ``exact=True`` sets capacity = group_tokens*top_k (no drops) — used for
+    decode, where capacity drops would corrupt generation.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    n_g = max(1, min(m.num_groups, t))
+    assert t % n_g == 0, (t, n_g)
+    tg = t // n_g
+    xt = x.reshape(n_g, tg, d)
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, m.top_k)        # (g, tg, k)
+    gate_w = (gate_w / jnp.clip(gate_w.sum(-1, keepdims=True), 1e-9)
+              ).astype(x.dtype)
+
+    if exact or tg * m.top_k <= 4096:
+        cap = tg * m.top_k
+    else:
+        cap = int(max(4, round(tg * m.top_k / m.num_experts
+                               * m.capacity_factor)))
+    # position of each (token, k) within its expert queue, per group
+    flat_e = gate_i.reshape(n_g, tg * m.top_k)             # (g, tg*k)
+    onehot = jax.nn.one_hot(flat_e, m.num_experts, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot
+    slot = jnp.take_along_axis(
+        pos_in_e, flat_e[..., None], axis=2)[..., 0]       # (g, tg*k)
+    keep = slot < cap
+    slot = jnp.where(keep, slot, cap)                      # overflow bin
+
+    buf = jnp.zeros((n_g, m.num_experts, cap + 1, d), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(tg), m.top_k)          # (tg*k,)
+    g_idx = jnp.arange(n_g)[:, None]
+    buf = buf.at[g_idx, flat_e, slot].set(xt[:, tok_idx], mode="drop")
+
+    g_ = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(x.dtype))
+    u_ = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(x.dtype))
+    y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g_) * u_,
+                   p["w_down"].astype(x.dtype))
+
+    gathered = y[g_idx, flat_e, slot]                      # (g, tg*k, d)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    out = (gathered * gate_w.reshape(n_g, -1)[..., None]) \
+        .reshape(n_g, tg, m.top_k, d).sum(axis=2)
+    if "shared" in p:
+        out = out + swiglu_apply(p["shared"], xt)
+    aux = _load_balance_loss(probs.reshape(t, -1),
+                             gate_i.reshape(t, -1), m.num_experts)
+    return out.reshape(b, s, d), aux
+
+
+def _load_balance_loss(probs, gate_i, num_experts: int):
+    """Switch-style load-balancing auxiliary loss."""
+    t = probs.shape[0]
+    me = probs.mean(axis=0)                                # mean router prob
+    ce = jnp.zeros((num_experts,), jnp.float32) \
+        .at[gate_i.reshape(-1)].add(1.0) / (t * gate_i.shape[-1])
+    return num_experts * jnp.sum(me * ce)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig):
+    p = {"tok": pspec(key, (cfg.vocab_size, cfg.d_model),
+                      ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = pspec(jax.random.fold_in(key, 1),
+                             (cfg.d_model, cfg.vocab_size),
+                             ("embed", "vocab"))
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig, dtype):
+    out = jnp.take(p["tok"].astype(dtype), tokens, axis=0)
+    if cfg.tie_embeddings:
+        out = out * (cfg.d_model ** 0.5)
+    return out
+
+
+def unembed(p, x, cfg: ModelConfig):
+    w = p["unembed"] if "unembed" in p else p["tok"].T
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,282 @@
+"""Mamba2 (state-space duality) blocks — arXiv:2405.21060.
+
+Chunked SSD form: intra-chunk attention-like dense compute (MXU-friendly)
++ inter-chunk state recurrence.  The Pallas kernel in ``kernels/ssd.py``
+implements the same contraction; this module is the jnp model path (and the
+oracle the kernel is validated against).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ParamSpec, pspec, pzeros, pones
+from repro.sharding.ctx import constrain
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = s.num_heads or (d_inner // s.head_dim)
+    conv_dim = d_inner + 2 * s.state_dim
+    return d_inner, nheads, conv_dim
+
+
+def ssd_block_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * s.state_dim + nheads   # z, x, B, C, dt
+    return {
+        "ln": L.rmsnorm_init(d),
+        "in_proj": pspec(ks[0], (d, proj_out), ("embed", "ssm_inner")),
+        "conv_w": pspec(ks[1], (s.conv_kernel, conv_dim),
+                        (None, "ssm_inner"), scale=s.conv_kernel ** -0.5),
+        "conv_b": pzeros((conv_dim,), ("ssm_inner",)),
+        "A_log": pzeros((nheads,), (None,)),            # A = -exp(A_log)
+        "dt_bias": pzeros((nheads,), (None,)),
+        "D": pones((nheads,), (None,)),
+        "norm": L.rmsnorm_init(d_inner),
+        "out_proj": pspec(ks[2], (d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nheads, _ = ssm_dims(cfg)
+    z, x, B, C, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + s.state_dim,
+         2 * d_inner + 2 * s.state_dim], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d. x: (B, S, C); w: (K, C).
+
+    ``state``: (B, K-1, C) trailing context for decode; returns new state.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, :k - 1])
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, unroll: bool = False,
+                head_block: int = 4):
+    """SSD chunked scan (pure jnp oracle).
+
+    x: (b, l, h, p)   dt: (b, l, h)   A: (h,) negative
+    B, C: (b, l, n)   -> y (b, l, h, p), final_state (b, h, p, n)
+
+    Heads are processed in blocks of ``head_block`` via an inner scan so the
+    5-D intra-chunk decay tensor (b, c, L, L, h_blk) never materializes for
+    all heads at once (at full scale it would be tens of TB).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    # discretize: dA = dt * A (log-decay), dBx contribution uses dt * x
+    xb = (x * dt[..., None]).reshape(b, nc, chunk, h, p)
+    dA = (dt * A[None, None, :]).reshape(b, nc, chunk, h)   # (b,c,L,h) <= 0
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    cdt = x.dtype
+    dA_cum = jnp.cumsum(dA, axis=2)                         # (b,c,L,h) f32
+    Lmask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                        preferred_element_type=jnp.float32).astype(cdt)
+    ds_full = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum).astype(cdt)
+
+    hb = min(head_block, h)
+    while h % hb:
+        hb -= 1
+    nb = h // hb
+    xb_bl = xb.reshape(b, nc, chunk, nb, hb, p).transpose(3, 0, 1, 2, 4, 5)
+    cum_bl = dA_cum.reshape(b, nc, chunk, nb, hb).transpose(3, 0, 1, 2, 4)
+    ds_bl = ds_full.reshape(b, nc, chunk, nb, hb).transpose(3, 0, 1, 2, 4)
+
+    def head_block_fn(_, inp):
+        xs, cums, dss = inp
+        # 1. intra-chunk (diagonal block): decay L_ij = exp(cum_i - cum_j),
+        #    masked to i >= j; exp computed in f32, stored in compute dtype
+        seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]
+        decay = jnp.where(Lmask[None, None, :, :, None],
+                          jnp.exp(seg), 0.0).astype(cdt)
+        y_d = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, decay, xs,
+                         preferred_element_type=jnp.float32)
+        # 2. chunk-final states: sum_j exp(cum_L - cum_j) * B_j x_j
+        st = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, dss, xs,
+                        preferred_element_type=jnp.float32)
+        return None, (y_d, st)
+
+    _, (y_diag_bl, states_bl) = jax.lax.scan(
+        head_block_fn, None, (xb_bl, cum_bl, ds_bl),
+        unroll=True if unroll else 1)
+    y_diag = y_diag_bl.transpose(1, 2, 3, 0, 4, 5).reshape(b, nc, chunk, h, p)
+    states = states_bl.transpose(1, 2, 0, 3, 4, 5).reshape(b, nc, h, p, n)
+
+    # 3. inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])              # (b,c,h)
+
+    def step(carry, inp):
+        st_prev = carry                                     # (b,h,p,n)
+        st_c, dec_c = inp                                   # (b,h,p,n),(b,h)
+        st = st_prev * dec_c[..., None, None] + st_c
+        return st, st_prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    # NOTE: deliberately never unrolled for cost extraction — the state
+    # recurrence is <1% of SSD flops/bytes and unrolling S/chunk tiny
+    # bodies explodes compile time (documented undercount, DESIGN.md §8).
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                # (b,c,h,p,n)
+
+    # 4. inter-chunk output: C_i · exp(dA_cum_i) · state_prev
+    out_decay = jnp.exp(dA_cum).astype(cdt)                 # (b,c,L,h)
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc, out_decay,
+                       prev_states.astype(cdt),
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """Single-token SSD update.  x: (b,1,h,p); state: (b,h,p,n)."""
+    dA = jnp.exp(dt[:, 0, :, None, None] * A[None, :, None, None])
+    dBx = jnp.einsum("bn,bhp->bhpn", B[:, 0], x[:, 0] * dt[:, 0, :, None])
+    state = state * dA + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0], state)
+    return y[:, None], state
+
+
+def ssd_block_apply(p, x_in, cfg: ModelConfig, cache=None):
+    """One Mamba2 block (pre-norm, gated). Returns (out, new_cache)."""
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    h = L.rmsnorm(p["ln"], x_in, cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", h, p["in_proj"].astype(h.dtype))
+    z, x, B, C, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([x, B, C], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv_state = _causal_conv(
+        conv_in, p["conv_w"].astype(h.dtype), p["conv_b"].astype(h.dtype),
+        conv_state)
+    x, B, C = jnp.split(conv_out, [d_inner, d_inner + s.state_dim], axis=-1)
+    b, l, _ = x.shape
+    x = x.reshape(b, l, nheads, -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is not None and l == 1:                        # decode
+        y, new_state = ssd_decode_step(
+            x.astype(jnp.float32), dt, A, B.astype(jnp.float32),
+            C.astype(jnp.float32), cache["state"])
+    else:                                                   # train / prefill
+        pad = (-l) % s.chunk
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+            C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        cdt = jnp.bfloat16 if s.intra_dtype == "bfloat16" else jnp.float32
+        y, new_state = ssd_chunked(
+            x.astype(cdt), dt, A, B.astype(cdt), C.astype(cdt),
+            s.chunk, unroll=cfg.scan_unroll, head_block=s.head_block)
+        y = y[:, :l]
+    y = y + x[:, :l].astype(jnp.float32) * p["D"].astype(jnp.float32)[
+        None, None, :, None]
+    y = y.reshape(b, l, d_inner).astype(x_in.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x_in.dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv_state.astype(cache["conv"].dtype),
+                     "state": new_state,
+                     "len": cache["len"] + l}
+    return x_in + out, new_cache
+
+
+def ssd_block_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nheads, s.head_dim, s.state_dim),
+                           jnp.float32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 LM
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    per_layer = [ssd_block_init(jax.random.fold_in(ks[1], i), cfg)
+                 for i in range(cfg.num_layers)]
+    return {
+        "embed": L.embedding_init(ks[0], cfg),
+        "blocks": L.stack_layer_params(per_layer),
+        "ln_final": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0,
+               dtype=jnp.bfloat16):
+    one = ssd_block_cache(cfg, batch, dtype)
+    return {"blocks": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), one)}
+
+
+def _scan(params, caches, x, cfg, remat="none"):
+    def body(carry, scanned):
+        p_l, c_l = scanned
+        carry = constrain(carry, "act_batch", "act_seq", None)
+        h, nc = ssd_block_apply(p_l, carry, cfg, cache=c_l)
+        return h, nc
+    fn = jax.checkpoint(body) if remat == "full" else body
+    x, new_caches = jax.lax.scan(
+        fn, x, (params["blocks"], caches["blocks"] if caches else None),
+        unroll=True if cfg.scan_unroll else 1)
+    return x, new_caches
+
+
+def forward(params, tokens, cfg: ModelConfig, *, remat="none",
+            dtype=jnp.bfloat16):
+    x = L.embed(params["embed"], tokens, cfg, dtype)
+    x, _ = _scan(params, None, x, cfg, remat)
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg), jnp.float32(0.0)
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    x = L.embed(params["embed"], tokens, cfg, dtype)
+    x, new_caches = _scan(params, cache, x, cfg)
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x[:, -1:], cfg), {"blocks": new_caches}
+
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig, *,
+                dtype=jnp.bfloat16):
+    x = L.embed(params["embed"], tokens, cfg, dtype)
+    x, new_caches = _scan(params, cache, x, cfg)
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg), {"blocks": new_caches}

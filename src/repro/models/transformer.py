@@ -1,0 +1,261 @@
+"""Decoder-only LM covering dense / MoE / SWA / local:global families.
+
+Layers are stacked and scanned (``jax.lax.scan``) to keep HLO size and
+compile time bounded for 88-layer x 512-device dry-runs.  Irregular stacks
+(gemma3 5:1 local:global) scan over *super-blocks* with one param subtree per
+position in the period.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FULL, MLA, SWA, ModelConfig
+from repro.models import layers as L
+from repro.sharding.ctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# Single transformer block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, *, moe: bool):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {
+        "ln_attn": L.rmsnorm_init(cfg.d_model),
+        "ln_mlp": L.rmsnorm_init(cfg.d_model),
+    }
+    if cfg.attention == MLA:
+        p["attn"] = L.mla_init(ks[0], cfg)
+    else:
+        p["attn"] = L.attention_init(ks[0], cfg)
+    if moe:
+        p["moe"] = L.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = L.swiglu_init(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def block_apply(p, x, cfg: ModelConfig, *, window: int, positions,
+                cache=None, mla_absorbed: bool = False,
+                moe_exact: bool = False, sp_decode: bool = False):
+    """Returns (x, new_cache, aux_loss)."""
+    h = L.rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    if cfg.attention == MLA:
+        attn_out, new_cache = L.mla_apply(
+            p["attn"], h, cfg, positions=positions, cache=cache,
+            absorbed=mla_absorbed)
+    else:
+        attn_out, new_cache = L.attention_apply(
+            p["attn"], h, cfg, causal=True, window=window,
+            positions=positions, cache=cache, sp_decode=sp_decode)
+    x = x + attn_out
+    h = L.rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+    if "moe" in p:
+        mlp_out, aux = L.moe_apply(p["moe"], h, cfg, exact=moe_exact)
+    else:
+        mlp_out, aux = L.swiglu_apply(p["mlp"], h), jnp.float32(0.0)
+    return x + mlp_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack plans: how blocks are grouped for scanning
+# ---------------------------------------------------------------------------
+
+def _stack_plan(cfg: ModelConfig) -> dict:
+    """Describes scan structure:
+      {"period": p, "n_super": n, "windows": [w per position],
+       "moe": [bool per position], "prefix_dense": int}
+    """
+    if cfg.local_global != (0, 0):
+        lg_l, lg_g = cfg.local_global
+        period = lg_l + lg_g
+        assert cfg.num_layers % period == 0, "local:global must tile layers"
+        windows = [cfg.window] * lg_l + [0] * lg_g
+        return {"period": period, "n_super": cfg.num_layers // period,
+                "windows": windows, "moe": [False] * period,
+                "prefix_dense": 0}
+    window = cfg.window if cfg.attention == SWA else 0
+    if cfg.moe is not None:
+        nd = cfg.moe.num_dense_layers
+        return {"period": 1, "n_super": cfg.num_layers - nd,
+                "windows": [window], "moe": [True], "prefix_dense": nd}
+    return {"period": 1, "n_super": cfg.num_layers, "windows": [window],
+            "moe": [False], "prefix_dense": 0}
+
+
+def init(key, cfg: ModelConfig):
+    """Build the full ParamSpec tree."""
+    plan = _stack_plan(cfg)
+    ks = jax.random.split(key, 4 + plan["prefix_dense"])
+    params: dict[str, Any] = {
+        "embed": L.embedding_init(ks[0], cfg),
+        "ln_final": L.rmsnorm_init(cfg.d_model),
+    }
+    for i in range(plan["prefix_dense"]):
+        params[f"dense_{i}"] = block_init(ks[3 + i], cfg, moe=False)
+    per_super = []
+    for s in range(plan["n_super"]):
+        sk = jax.random.fold_in(ks[1], s)
+        sub = {}
+        for pos in range(plan["period"]):
+            sub[f"pos{pos}"] = block_init(
+                jax.random.fold_in(sk, pos), cfg, moe=plan["moe"][pos])
+        per_super.append(sub)
+    params["blocks"] = L.stack_layer_params(per_super)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg: ModelConfig, batch: int, max_len: int, window: int,
+                 dtype):
+    if cfg.attention == MLA:
+        m = cfg.mla
+        return {
+            "c": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_len, 1, m.qk_rope_head_dim), dtype),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    size = min(window, max_len) if window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, size, kv, hd), dtype),
+        "v": jnp.zeros((batch, size, kv, hd), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    plan = _stack_plan(cfg)
+    caches: dict[str, Any] = {}
+    for i in range(plan["prefix_dense"]):
+        caches[f"dense_{i}"] = _block_cache(
+            cfg, batch, max_len, plan["windows"][0] if cfg.attention == SWA
+            else 0, dtype)
+    sub = {}
+    for pos in range(plan["period"]):
+        one = _block_cache(cfg, batch, max_len, plan["windows"][pos], dtype)
+        sub[f"pos{pos}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x, (plan["n_super"],) + x.shape), one)
+    caches["blocks"] = sub
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(params, caches, x, cfg: ModelConfig, plan, positions,
+                 remat: str = "none", mla_absorbed: bool = False,
+                 moe_exact: bool = False, sp_decode: bool = False):
+    """Scan the super-block stack. Returns (x, new_caches, aux_sum)."""
+
+    def super_block(carry, scanned):
+        h, aux = carry
+        h = constrain(h, "act_batch", "act_seq", None)
+        p_sub, c_sub = scanned
+        new_c_sub = {}
+        for pos in range(plan["period"]):
+            c = c_sub[f"pos{pos}"] if c_sub is not None else None
+            h, nc, a = block_apply(
+                p_sub[f"pos{pos}"], h, cfg, window=plan["windows"][pos],
+                positions=positions, cache=c, mla_absorbed=mla_absorbed,
+                moe_exact=moe_exact, sp_decode=sp_decode)
+            new_c_sub[f"pos{pos}"] = nc
+            aux = aux + a
+        return (h, aux), (new_c_sub if caches is not None else None)
+
+    fn = super_block
+    if remat == "full":
+        fn = jax.checkpoint(super_block)
+    elif remat == "selective":
+        fn = jax.checkpoint(
+            super_block,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    (x, aux), new_caches = jax.lax.scan(
+        fn, (x, jnp.float32(0.0)),
+        (params["blocks"], caches["blocks"] if caches is not None else None),
+        unroll=True if cfg.scan_unroll else 1)
+    return x, new_caches, aux
+
+
+def forward(params, tokens, cfg: ModelConfig, *, remat: str = "none",
+            dtype=jnp.bfloat16, extra_embeds=None):
+    """Training/prefill forward over full sequences -> logits (B,S,V).
+
+    ``extra_embeds``: optional (B, S_front, d) modality-frontend embeddings
+    prepended to the token embeddings (VLM patch / audio frame stubs are
+    handled by the dedicated wrappers; this is the generic hook).
+    """
+    plan = _stack_plan(cfg)
+    x = L.embed(params["embed"], tokens, cfg, dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])[None, :]
+    aux_total = jnp.float32(0.0)
+    for i in range(plan["prefix_dense"]):
+        x, _, a = block_apply(params[f"dense_{i}"], x, cfg,
+                              window=0, positions=positions)
+        aux_total += a
+    x, _, aux = _scan_blocks(params, None, x, cfg, plan, positions,
+                             remat=remat)
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, aux_total + aux
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig, *, dtype=jnp.bfloat16,
+            extra_embeds=None):
+    """Prefill: run full sequence, filling `cache`. Returns (logits, cache)."""
+    plan = _stack_plan(cfg)
+    x = L.embed(params["embed"], tokens, cfg, dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])[None, :]
+    new_caches: dict[str, Any] = {}
+    for i in range(plan["prefix_dense"]):
+        x, nc, _ = block_apply(params[f"dense_{i}"], x, cfg, window=0,
+                               positions=positions, cache=cache[f"dense_{i}"])
+        new_caches[f"dense_{i}"] = nc
+    x, scanned_caches, _ = _scan_blocks(params, cache, x, cfg, plan,
+                                        positions)
+    new_caches["blocks"] = scanned_caches
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)
+    return logits, new_caches
+
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig, *,
+                dtype=jnp.bfloat16, mla_absorbed: bool = False,
+                sp_decode: bool = False):
+    """One decode step. tokens (B, 1); pos (B,) absolute positions.
+
+    Returns (logits (B,1,V), new_cache).
+    """
+    plan = _stack_plan(cfg)
+    x = L.embed(params["embed"], tokens, cfg, dtype)
+    positions = pos[:, None]
+    new_caches: dict[str, Any] = {}
+    for i in range(plan["prefix_dense"]):
+        x, nc, _ = block_apply(params[f"dense_{i}"], x, cfg, window=0,
+                               positions=positions,
+                               cache=cache[f"dense_{i}"],
+                               mla_absorbed=mla_absorbed,
+                               sp_decode=sp_decode)
+        new_caches[f"dense_{i}"] = nc
+    x, scanned_caches, _ = _scan_blocks(params, cache, x, cfg, plan,
+                                        positions, mla_absorbed=mla_absorbed,
+                                        moe_exact=True, sp_decode=sp_decode)
+    new_caches["blocks"] = scanned_caches
+    x = L.rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, new_caches

@@ -1,0 +1,60 @@
+"""VAE decoder for the DiT pipeline (arXiv:1312.6114 applied per LDM).
+
+A real (small) convolutional decoder: latent (B, F, h, w, C) -> pixels
+(B, F', 8h, 8w, 3) via three stride-2 transposed-conv upsample stages
+(pixel-shuffle formulation, TPU-friendly: conv == matmul over patches).
+The paper's Fig. 3(a) shows VAE decode has its own scaling profile — this
+stage is a distinct trajectory task with its own cost-model entry.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, pspec
+
+
+def init(key, cfg: ModelConfig, hidden: int = 128):
+    c_in = cfg.dit.in_channels
+    ks = jax.random.split(key, 4)
+    # each stage: 3x3 conv (as unfold-matmul) producing 4x channels for
+    # 2x pixel-shuffle upsample
+    return {
+        "in_proj": pspec(ks[0], (c_in, hidden), (None, "mlp")),
+        "up1": pspec(ks[1], (9 * hidden, 4 * hidden), (None, "mlp")),
+        "up2": pspec(ks[2], (9 * hidden, 4 * hidden), (None, "mlp")),
+        "up3": pspec(ks[3], (9 * hidden, 4 * 3), (None, None)),
+    }
+
+
+def _conv3x3(x, w):
+    """x: (B, H, W, C); w: (9*C, C_out) — unfold 3x3 then matmul."""
+    b, h, wd, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    patches = jnp.stack([xp[:, i:i + h, j:j + wd] for i in range(3)
+                         for j in range(3)], axis=-2)     # (B,H,W,9,C)
+    patches = patches.reshape(b, h, wd, 9 * c)
+    return jnp.einsum("bhwk,ko->bhwo", patches, w)
+
+
+def _pixel_shuffle(x):
+    """(B, H, W, 4*C) -> (B, 2H, 2W, C)."""
+    b, h, w, c4 = x.shape
+    c = c4 // 4
+    x = x.reshape(b, h, w, 2, 2, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, 2 * h, 2 * w, c)
+
+
+def decode(params, latents, cfg: ModelConfig):
+    """latents: (B, F, h, w, C) -> (B, F, 8h, 8w, 3) in [-1, 1]."""
+    b, f, h, w, c = latents.shape
+    x = latents.reshape(b * f, h, w, c).astype(jnp.float32)
+    x = jnp.einsum("bhwc,co->bhwo", x, params["in_proj"].astype(jnp.float32))
+    for name in ("up1", "up2", "up3"):
+        x = jax.nn.silu(x)
+        x = _conv3x3(x, params[name].astype(jnp.float32))
+        x = _pixel_shuffle(x)
+    x = jnp.tanh(x)
+    return x.reshape(b, f, 8 * h, 8 * w, 3)

@@ -1,0 +1,105 @@
+"""serve_step / prefill_step factories + input spec builders per arch.
+
+``decode_*`` / ``long_*`` dry-run cells lower :func:`make_serve_step`'s
+decode step (one new token against a seq_len-deep cache); ``prefill_*``
+cells lower :func:`make_prefill_step`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import get_model
+
+
+def make_serve_step(cfg: ModelConfig, *, mla_absorbed: bool = False,
+                    sp_decode: bool = False):
+    model = get_model(cfg)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def serve_step(params, tokens, cache, pos):
+            return model.decode_step(params, tokens, cache, pos, cfg,
+                                     mla_absorbed=mla_absorbed,
+                                     sp_decode=sp_decode)
+    else:
+        def serve_step(params, tokens, cache, pos):
+            return model.decode_step(params, tokens, cache, pos, cfg)
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    model = get_model(cfg)
+
+    if cfg.family == "encdec":
+        def prefill_step(params, tokens, frames, cache):
+            return model.prefill(params, tokens, frames, cache, cfg)
+    elif cfg.family == "vlm":
+        def prefill_step(params, tokens, patches, cache):
+            return model.prefill(params, tokens, patches, cache, cfg)
+    else:
+        def prefill_step(params, tokens, cache):
+            return model.prefill(params, tokens, cache, cfg)
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract input builders (ShapeDtypeStruct, no allocation) for the dry-run
+# ---------------------------------------------------------------------------
+
+def _specs_of(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    model = get_model(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(cfg, batch, max_len, dtype=dtype))
+    return cache
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    Returns kwargs keyed by the step function's argument names (params
+    excluded — those come from ``jax.eval_shape`` of init).
+    """
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        from repro.training.train_loop import synth_batch
+        return {"batch": synth_batch(cfg, b, s, as_specs=True)}
+
+    if cell.kind == "prefill":
+        # VLM prefill prepends frontend patch tokens: text prompt length is
+        # seq_len - frontend_seq so the cache fills to exactly seq_len.
+        s_txt = s - cfg.frontend_seq if cfg.family == "vlm" else s
+        out: dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, s_txt), jnp.int32),
+            "cache": cache_specs(cfg, b, _cache_len(cfg, cell)),
+        }
+        if cfg.family == "encdec":
+            # prefill = audio-encoder forward (stub frames) + decoder prefill
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_seq, cfg.d_model), jnp.float32)
+        return out
+
+    # decode: one new token, cache of depth seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": cache_specs(cfg, b, _cache_len(cfg, cell)),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def _cache_len(cfg: ModelConfig, cell: ShapeCell) -> int:
+    # prefill cells size the cache to hold the prompt; decode cells hold
+    # seq_len of history.
+    return cell.seq_len

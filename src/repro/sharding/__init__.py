@@ -1,0 +1,8 @@
+from repro.sharding.ctx import activation_sharding, constrain
+from repro.sharding.specs import (SERVE_RULES, TRAIN_RULES, param_shardings,
+                                  spec_for, tree_param_specs)
+
+__all__ = [
+    "activation_sharding", "constrain", "SERVE_RULES", "TRAIN_RULES",
+    "param_shardings", "spec_for", "tree_param_specs",
+]

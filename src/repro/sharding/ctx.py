@@ -1,0 +1,45 @@
+"""Activation-sharding context.
+
+Model code calls :func:`constrain` on intermediate activations with logical
+axis names.  Under an active context (set by the step factories inside a
+mesh), this lowers to ``jax.lax.with_sharding_constraint``; with no context
+it is a no-op, so the same model code runs unsharded on CPU tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.specs import AxisTarget, spec_for
+
+_CTX: contextvars.ContextVar[Optional[tuple[Mesh, dict]]] = \
+    contextvars.ContextVar("sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict[str, AxisTarget]):
+    tok = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = _CTX.get()
+    return ctx[0] if ctx else None
+
+
+def constrain(x, *logical: Optional[str]):
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(logical) != x.ndim:
+        return x
+    spec = spec_for(tuple(x.shape), tuple(logical), rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,91 @@
+"""Sequence-parallel attention primitives (beyond-paper optimizations).
+
+``flash_decode``: decode attention against a SEQUENCE-SHARDED KV cache
+without gathering it.  Baseline GSPMD all-gathers the S-sharded K/V
+(O(B·S·KV·hd) bytes per step — the dominant collective term measured in
+EXPERIMENTS.md §Roofline for decode cells); this shard_map computes local
+partial softmax (m, l, o) per sequence shard and combines with
+pmax/psum — collective payload drops to O(B·H·hd).
+
+The cache update is also local: only the shard owning position `len`
+writes the new K/V (masked dynamic-update-slice, no collective).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def flash_decode(q, k_new, v_new, cache_k, cache_v, cache_len, *,
+                 mesh: Mesh, axis: str = "model"):
+    """q: (B,1,H,hd) roped; k_new/v_new: (B,1,KV,hd) roped;
+    cache_k/v: (B,S,KV,hd) sharded on S over `axis`; cache_len: (B,).
+
+    Returns (out (B,1,H,hd), new_cache_k, new_cache_v) — cache stays
+    S-sharded, attention output replicated over `axis`.
+    """
+    b, _, h, hd = q.shape
+    s = cache_k.shape[1]
+    n = mesh.shape[axis]
+    assert s % n == 0, (s, n)
+    s_loc = s // n
+    ba = _batch_axes(mesh)
+    kv = cache_k.shape[2]
+    rep = h // kv
+    scale = hd ** -0.5
+
+    def body(q, k_new, v_new, ck, cv, clen):
+        i = jax.lax.axis_index(axis)
+        pos = clen[0]
+        local_pos = pos - i * s_loc
+        owner = (local_pos >= 0) & (local_pos < s_loc)
+        safe = jnp.clip(local_pos, 0, s_loc - 1)
+        ck_upd = jax.lax.dynamic_update_slice_in_dim(ck, k_new, safe, 1)
+        cv_upd = jax.lax.dynamic_update_slice_in_dim(cv, v_new, safe, 1)
+        ck = jnp.where(owner, ck_upd, ck)
+        cv = jnp.where(owner, cv_upd, cv)
+
+        # grouped-head attention directly against the GQA cache — never
+        # materializes repeat_kv'd K/V (SPerf minitron iter 3)
+        bq = q.reshape(q.shape[0], 1, kv, rep, hd)
+        scores = jnp.einsum("bqgrd,bkgd->bgrqk", bq, ck,
+                            preferred_element_type=jnp.float32) * scale
+        kpos = i * s_loc + jnp.arange(s_loc)
+        valid = kpos[None, :] < (clen + 1)[:, None]    # (B, s_loc)
+        scores = jnp.where(valid[:, None, None, None], scores, -1e30)
+        m_g = scores.max(axis=-1)                      # (B,KV,rep,1)
+        p = jnp.exp(scores - m_g[..., None])
+        l_g = p.sum(axis=-1)                           # (B,KV,rep,1)
+        o_g = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(q.dtype), cv)
+        b_ = q.shape[0]
+        m_loc = m_g.reshape(b_, kv * rep, 1)
+        l_loc = l_g.reshape(b_, kv * rep, 1)
+        o_loc = o_g.reshape(b_, 1, kv * rep, hd)
+
+        # combine across sequence shards (flash-decoding reduction)
+        m = jax.lax.pmax(m_loc, axis)
+        corr = jnp.exp(m_loc - m)
+        l = jax.lax.psum(l_loc * corr, axis)
+        o = jax.lax.psum(
+            o_loc * corr.transpose(0, 2, 1)[..., None].astype(o_loc.dtype),
+            axis)
+        out = o / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None] \
+            .astype(o_loc.dtype)
+        return out, ck, cv
+
+    q_spec = P(ba, None, None, None)
+    kvn_spec = P(ba, None, None, None)
+    c_spec = P(ba, axis, None, None)
+    len_spec = P(ba)
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(q_spec, kvn_spec, kvn_spec, c_spec, c_spec, len_spec),
+        out_specs=(q_spec, c_spec, c_spec))
+    return fn(q, k_new, v_new, cache_k, cache_v, cache_len)

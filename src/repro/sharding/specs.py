@@ -1,0 +1,126 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Params carry logical axis names (see models/layers.py).  Rules map logical
+names to mesh axis names; a dimension is left unsharded when its size does
+not divide the mesh axis size (automatic fallback, so one rule set covers
+every arch: e.g. kv_heads=8 cannot shard over model=16 and silently falls
+back while heads=96 shards fine).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisTarget = Union[None, str, tuple[str, ...]]
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+
+# Training: FSDP ("data") x TP ("model"); "pod" is pure DP for params
+# (replicated + gradient all-reduce across pods).
+TRAIN_RULES: dict[str, AxisTarget] = {
+    "vocab": "model",
+    "embed": "data",            # FSDP shard of the param's embed dim
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",         # expert parallelism
+    "layers": None,
+    "ssm_inner": "model",
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": "model",         # Megatron-SP residual-stream sharding
+    "act_vocab": "model",
+    "act_heads": "model",
+}
+
+# Serving: params replicated across "data" (weights fit per TP group),
+# batch over data, sequence/cache over model where beneficial.
+SERVE_RULES: dict[str, AxisTarget] = {
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "layers": None,
+    "ssm_inner": "model",
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_vocab": "model",
+    "act_heads": "model",
+    # kv caches: shard the sequence dim over model (paper's SP layout)
+    "cache_seq": "model",
+    "cache_kv": None,
+}
+
+
+def mesh_axis_size(mesh: Mesh, target: AxisTarget) -> int:
+    if target is None:
+        return 1
+    if isinstance(target, str):
+        return mesh.shape[target] if target in mesh.shape else 0
+    size = 1
+    for t in target:
+        if t not in mesh.shape:
+            return 0
+        size *= mesh.shape[t]
+    return size
+
+
+def spec_for(shape: tuple[int, ...], logical: tuple[Optional[str], ...],
+             rules: dict[str, AxisTarget], mesh: Mesh,
+             used_ok: bool = False) -> P:
+    """Build a PartitionSpec with divisibility fallback.
+
+    Each mesh axis may appear at most once in a spec; later dims fall back
+    to None if an axis is already used.
+    """
+    assert len(shape) == len(logical), (shape, logical)
+    parts: list[AxisTarget] = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical):
+        target = rules.get(name) if name else None
+        if target is None:
+            parts.append(None)
+            continue
+        tgt_axes = (target,) if isinstance(target, str) else tuple(target)
+        if any(a in used for a in tgt_axes):
+            parts.append(None)
+            continue
+        size = mesh_axis_size(mesh, target)
+        if size == 0 or dim % size != 0:
+            parts.append(None)
+            continue
+        used.update(tgt_axes)
+        parts.append(target)
+    return P(*parts)
+
+
+def param_shardings(values_tree, axes_tree, rules, mesh: Mesh):
+    """NamedSharding tree for a params tree (values + logical axes)."""
+    def one(v, ax):
+        shape = v.shape
+        return NamedSharding(mesh, spec_for(tuple(shape), ax, rules, mesh))
+    return jax.tree.map(one, values_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def tree_param_specs(values_tree, axes_tree, rules, mesh: Mesh):
+    """PartitionSpec tree (for in_shardings of jit)."""
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+    # walk the two trees in parallel: axes_tree leaves are tuples
+    flat_v, treedef = jax.tree.flatten(values_tree)
+    flat_a = treedef.flatten_up_to(axes_tree)
+    specs = [spec_for(tuple(v.shape), a, rules, mesh)
+             for v, a in zip(flat_v, flat_a)]
+    return jax.tree.unflatten(treedef, specs)

@@ -1,0 +1,52 @@
+"""Gradient compression (distributed-optimization trick).
+
+Two schemes with persistent error feedback handled by the caller-visible
+residual API:
+
+* ``int8``: per-tensor symmetric int8 quantization.  The DP all-reduce then
+  moves 4x fewer bytes (the quantize-allreduce-dequantize schedule is what a
+  real deployment runs; in-graph we model it as quantize->dequantize so the
+  numerics are exercised end-to-end).
+* ``topk``: keep the largest 10% entries per tensor (magnitude), zeroing the
+  rest; sparsity reduces collective payloads correspondingly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _int8_qdq(g):
+    if g.ndim == 0:
+        return g
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(g.dtype) * scale
+
+
+def _topk_mask(g, frac: float = 0.1):
+    if g.size <= 16 or g.ndim == 0:
+        return g
+    k = max(1, int(g.size * frac))
+    flat = jnp.abs(g.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress_decompress(grads, method: str = "int8"):
+    fn = {"int8": _int8_qdq, "topk": _topk_mask}[method]
+    return jax.tree.map(fn, grads)
+
+
+def compressed_bytes(grads, method: str) -> int:
+    """Collective payload bytes after compression (for roofline deltas)."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        if method == "int8":
+            total += g.size + 4
+        elif method == "topk":
+            k = max(1, int(g.size * 0.1))
+            total += k * 8          # value + index
+        else:
+            total += g.size * 4
+    return total

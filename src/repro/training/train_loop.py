@@ -1,0 +1,121 @@
+"""train_step factory: builds the jit-able (params, opt, batch) -> ... step
+for any arch in the zoo, with remat, MoE dispatch grouping, and gradient
+compression hooks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.training import optimizer as opt
+from repro.training.compression import compress_decompress
+
+
+def cross_entropy(logits, labels):
+    """logits (B,S,V) fp32; labels (B,S) int32; -100 masked."""
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, remat: str):
+    model = get_model(cfg)
+    if cfg.family == "dit":
+        # flow-matching loss: predict velocity between noise and latents
+        lat, t, txt, noise = (batch["latents"], batch["t"], batch["txt"],
+                              batch["noise"])
+        sigma = (t / 1000.0)[:, None, None, None, None]
+        x_t = (1 - sigma) * lat + sigma * noise
+        v_pred = model.forward(params, x_t, t, txt, cfg, remat=remat)
+        v_true = noise - lat
+        return jnp.mean((v_pred - v_true) ** 2), jnp.float32(0.0)
+    if cfg.family == "encdec":
+        logits, aux = model.forward(params, batch["tokens"], batch["frames"],
+                                    cfg, remat=remat)
+    elif cfg.family == "vlm":
+        logits, aux = model.forward(params, batch["tokens"],
+                                    batch["patches"], cfg, remat=remat)
+        # labels only cover the text positions; logits include the prefix
+        logits = logits[:, batch["patches"].shape[1]:]
+    else:
+        logits, aux = model.forward(params, batch["tokens"], cfg,
+                                    remat=remat)
+    return cross_entropy(logits, batch["labels"]) + 0.01 * aux, aux
+
+
+def make_train_step(cfg: ModelConfig, *, remat: str = "full",
+                    lr: float = 3e-4, moe_groups: int = 1,
+                    compression: Optional[str] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``moe_groups`` should equal the number of batch shards so the MoE
+    capacity buffer stays sharded with the tokens.
+    ``compression``: None | "int8" | "topk" — gradient compression with
+    error feedback is applied before the (pod-level) DP all-reduce.
+    """
+    if cfg.moe is not None and moe_groups > 1:
+        cfg = cfg.with_(moe=dataclasses.replace(cfg.moe,
+                                                num_groups=moe_groups))
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, remat), has_aux=True)(params)
+        if compression:
+            grads = compress_decompress(grads, method=compression)
+        new_params, new_opt, om = opt.adamw_update(
+            grads, opt_state, params, lr=lr)
+        metrics = {"loss": loss, "aux_loss": aux, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def synth_batch(cfg: ModelConfig, batch: int, seq: int, key=None,
+                as_specs: bool = False):
+    """Synthetic training batch (or ShapeDtypeStruct stand-ins)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    def mk(shape, dtype, gen):
+        if as_specs:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return gen(shape, dtype)
+
+    if cfg.family == "dit":
+        dc = cfg.dit
+        f = dc.latent_frames
+        f_lat = max(1, (f + 3) // 4) if f > 1 else 1
+        lat_shape = (batch, f_lat, 64, 64, dc.in_channels)
+        return {
+            "latents": mk(lat_shape, jnp.float32,
+                          lambda s, d: jax.random.normal(key, s, d)),
+            "noise": mk(lat_shape, jnp.float32,
+                        lambda s, d: jax.random.normal(
+                            jax.random.fold_in(key, 1), s, d)),
+            "t": mk((batch,), jnp.float32,
+                    lambda s, d: jax.random.uniform(
+                        jax.random.fold_in(key, 2), s, d, 0, 1000)),
+            "txt": mk((batch, 64, dc.cond_dim), jnp.float32,
+                      lambda s, d: jax.random.normal(
+                          jax.random.fold_in(key, 3), s, d)),
+        }
+    toks = mk((batch, seq), jnp.int32,
+              lambda s, d: jax.random.randint(key, s, 0, cfg.vocab_size, d))
+    out = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec":
+        out["frames"] = mk((batch, cfg.frontend_seq, cfg.d_model),
+                           jnp.float32,
+                           lambda s, d: jax.random.normal(key, s, d))
+    if cfg.family == "vlm":
+        out["patches"] = mk((batch, cfg.frontend_seq, cfg.d_model),
+                            jnp.float32,
+                            lambda s, d: jax.random.normal(key, s, d))
+    return out

@@ -1,0 +1,109 @@
+"""Layout-aware artifact migration: plan coverage/exactness properties and
+end-to-end data equality across random layout changes (paper §5.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gfc import GroupFreeComm
+from repro.core.migration import (execute_migration, local_retains,
+                                  plan_bytes, plan_migration)
+from repro.core.trajectory import Artifact, ExecutionLayout, FieldSpec
+from repro.diffusion.adapters import field_view
+
+
+def _fields(n_tok: int, d: int = 8):
+    return {
+        "latent": FieldSpec("sharded", (n_tok, d), "float32", 0),
+        "embeds": FieldSpec("replicated", (7, d), "float32"),
+        "sigma": FieldSpec("meta"),
+    }
+
+
+def _make_artifact(n_tok: int, layout: ExecutionLayout, d: int = 8):
+    fields = _fields(n_tok, d)
+    art = Artifact(id="a", request_id="r", role="latent", fields=fields,
+                   layout=layout)
+    full = np.arange(n_tok * d, dtype=np.float32).reshape(n_tok, d)
+    emb = np.arange(7 * d, dtype=np.float32).reshape(7, d) * 0.5
+    view = field_view(fields["latent"], layout)
+    art.data = {}
+    for r in layout.ranks:
+        off, size = view.slices[r]
+        art.data[r] = {"latent": full[off:off + size].copy(),
+                       "embeds": emb.copy(),
+                       "sigma": np.float32(0.7)}
+    return art, full, emb
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_plan_properties(data):
+    """Intersection plan covers every destination slice exactly once."""
+    n_tok = data.draw(st.integers(4, 257))
+    world = 8
+    k_src = data.draw(st.sampled_from([1, 2, 3, 4]))
+    k_dst = data.draw(st.sampled_from([1, 2, 3, 4]))
+    src = ExecutionLayout(tuple(data.draw(
+        st.permutations(range(world)))[:k_src]))
+    dst = ExecutionLayout(tuple(data.draw(
+        st.permutations(range(world)))[:k_dst]))
+    fields = _fields(n_tok)
+    entries = plan_migration(fields, src, dst)
+    retains = local_retains(fields, src, dst)
+
+    # coverage: for each dst rank, union(transfers + retains) == its slice
+    dv = field_view(fields["latent"], dst)
+    for r in dst.ranks:
+        off, size = dv.slices[r]
+        covered = np.zeros(size, dtype=int)
+        for e in entries:
+            if e.field == "latent" and e.dst_rank == r:
+                covered[e.dst_range[0]:e.dst_range[0] + e.dst_range[1]] += 1
+        for name, rr, s_rng, d_rng in retains:
+            if name == "latent" and rr == r:
+                covered[d_rng[0]:d_rng[0] + d_rng[1]] += 1
+        assert (covered == 1).all(), "gap or overlap in destination coverage"
+
+    # no transfer moves data a rank already holds
+    for e in entries:
+        assert e.src_rank != e.dst_rank
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_migration_data_equality(data):
+    n_tok = data.draw(st.integers(8, 65))
+    world = 6
+    k_src = data.draw(st.sampled_from([1, 2, 3]))
+    k_dst = data.draw(st.sampled_from([1, 2, 3]))
+    src = ExecutionLayout(tuple(data.draw(
+        st.permutations(range(world)))[:k_src]))
+    dst = ExecutionLayout(tuple(data.draw(
+        st.permutations(range(world)))[:k_dst]))
+    art, full, emb = _make_artifact(n_tok, src)
+    comm = GroupFreeComm(world)
+    entries = plan_migration(art.fields, src, dst)
+    execute_migration(comm, art, dst, entries)
+
+    view = field_view(art.fields["latent"], dst)
+    for r in dst.ranks:
+        off, size = view.slices[r]
+        np.testing.assert_array_equal(art.data[r]["latent"],
+                                      full[off:off + size])
+        np.testing.assert_array_equal(art.data[r]["embeds"], emb)
+        assert float(art.data[r]["sigma"]) == pytest.approx(0.7)
+    assert art.layout == dst
+
+
+def test_plan_bytes_minimal_for_subset():
+    """Shrinking 4 -> 2 ranks: rank 0 keeps rows 0-15 and receives 16-31
+    from rank 1; rank 1 receives 32-63 from ranks 2,3 — exactly 48 of 64
+    rows move (rank 0's own shard never moves)."""
+    fields = {"latent": FieldSpec("sharded", (64, 4), "float32", 0)}
+    src = ExecutionLayout((0, 1, 2, 3))
+    dst = ExecutionLayout((0, 1))
+    entries = plan_migration(fields, src, dst)
+    moved = plan_bytes(entries)
+    assert moved == 48 * 4 * 4
+    retained = local_retains(fields, src, dst)
+    assert sum(rng[1] for _, _, rng, _ in retained) == 16

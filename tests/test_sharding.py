@@ -1,0 +1,69 @@
+"""Sharding rule system: divisibility fallback, spec validity for every
+arch on a small mesh, activation-constraint no-op without context."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import get_model
+from repro.models.layers import split_params
+from repro.sharding import (SERVE_RULES, TRAIN_RULES, constrain, spec_for,
+                            tree_param_specs)
+
+
+def _mesh22():
+    devs = jax.devices()
+    if len(devs) >= 4:
+        arr = np.array(devs[:4]).reshape(2, 2)
+    else:
+        arr = np.array([devs[0]] * 4).reshape(2, 2)  # spec-validity only
+    return Mesh(arr, ("data", "model"))
+
+
+def test_divisibility_fallback():
+    mesh = _mesh22()
+    # kv_heads=3 cannot shard over model=2 -> None; heads=4 shards
+    spec = spec_for((8, 3, 16), ("embed", "kv_heads", "head_dim"),
+                    TRAIN_RULES, mesh)
+    assert spec == P("data", None, None)
+    spec = spec_for((8, 4, 16), ("embed", "heads", "head_dim"),
+                    TRAIN_RULES, mesh)
+    assert spec == P("data", "model", None)
+
+
+def test_axis_used_once():
+    mesh = _mesh22()
+    # both dims map to "model": second falls back to None
+    spec = spec_for((4, 4), ("heads", "mlp"), TRAIN_RULES, mesh)
+    assert spec == P("model", None)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("rules", [TRAIN_RULES, SERVE_RULES],
+                         ids=["train", "serve"])
+def test_param_specs_valid_all_archs(arch, rules):
+    """Every param of every arch gets a spec whose sharded dims divide."""
+    cfg = get_config(arch)
+    model = get_model(cfg)
+    values, axes = split_params(jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), cfg)))
+    mesh = _mesh22()
+    specs = tree_param_specs(values, axes, rules, mesh)
+    flat_v = jax.tree.leaves(values)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_v) == len(flat_s)
+    for v, s in zip(flat_v, flat_s):
+        for dim, part in zip(v.shape, tuple(s) + (None,) * v.ndim):
+            if part is None:
+                continue
+            size = mesh.shape[part] if isinstance(part, str) else \
+                int(np.prod([mesh.shape[a] for a in part]))
+            assert dim % size == 0, (arch, v.shape, s)
+
+
+def test_constrain_noop_without_context():
+    x = jnp.ones((4, 8))
+    y = constrain(x, "act_batch", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,73 @@
+"""Simulator semantics: migration pricing, determinism, calibration, and
+the §5.5 same-policy-interface property."""
+import pytest
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.core.cost_model import CostModel, sp_efficiency
+from repro.core.policies import make_policy
+from repro.core.scheduler import ControlPlane
+from repro.core.simulator import SimBackend, migration_seconds
+from repro.core.trajectory import ExecutionLayout
+from repro.diffusion.adapters import convert_request
+from repro.diffusion.workloads import make_request, short_trace
+
+
+def test_sim_deterministic():
+    def run():
+        cost = CostModel()
+        reqs = short_trace("dit-image", cost, duration=30, load=0.7,
+                           num_ranks=4, steps=8, seed=2)
+        cp = ControlPlane(4, make_policy("edf", 4), cost,
+                          SimBackend(cost, jitter=0.1, seed=3))
+        for r in reqs:
+            cp.submit(r, convert_request(r, DIT_IMAGE))
+        cp.run()
+        return cp.metrics()
+    m1, m2 = run(), run()
+    assert m1 == m2
+
+
+def test_migration_priced_on_layout_change():
+    a = ExecutionLayout((0, 1))
+    b = ExecutionLayout((2, 3))
+    assert migration_seconds(1 << 20, a, b) > 0
+    assert migration_seconds(1 << 20, a, a) == 0
+    # bigger artifacts cost more
+    assert migration_seconds(1 << 30, a, b) > migration_seconds(1 << 20,
+                                                                a, b)
+
+
+def test_cost_model_calibration_converges():
+    cost = CostModel()
+    est0 = cost.estimate("m", "denoise", 4096, 1)
+    for _ in range(10):
+        cost.observe("m", "denoise", 4096, 1, 2.5)
+    assert abs(cost.estimate("m", "denoise", 4096, 1) - 2.5) < 0.1
+    assert est0 != pytest.approx(2.5)
+
+
+def test_sp_efficiency_shape():
+    """Fig. 3(b): big workloads parallelize well, small ones poorly."""
+    assert sp_efficiency(4, 100_000) > 0.8
+    assert sp_efficiency(4, 512) < 0.6
+    assert sp_efficiency(1, 100) == 1.0
+
+
+def test_cost_model_save_load(tmp_path):
+    cost = CostModel()
+    cost.observe("m", "denoise", 4096, 2, 1.25)
+    cost.save(tmp_path / "cm.json")
+    loaded = CostModel.load(tmp_path / "cm.json")
+    assert loaded.estimate("m", "denoise", 4096, 2) == pytest.approx(1.25)
+
+
+def test_slo_includes_failures():
+    cost = CostModel()
+    req = make_request("dit-image", "S", 0.0, cost, steps=5)
+    cp = ControlPlane(2, make_policy("fcfs-sp1", 2), cost,
+                      SimBackend(cost))
+    cp.submit(req, convert_request(req, DIT_IMAGE))
+    req.failed = True                 # client timeout
+    cp.run()
+    m = cp.metrics()
+    assert m["slo_attainment"] == 0.0 and m["failed"] == 1
