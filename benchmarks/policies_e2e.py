@@ -23,7 +23,8 @@ from repro.diffusion.workloads import foreground_burst_trace, short_trace
 
 RESULTS = Path(__file__).parent / "results"
 
-POLICIES = ["legacy", "fcfs-sp1", "srtf-sp1", "srtf-spmax", "edf"]
+POLICIES = ["legacy", "fcfs-sp1", "srtf-sp1", "srtf-spmax", "edf",
+            "elastic"]
 NUM_RANKS = 4
 STEPS = 25
 
@@ -41,16 +42,19 @@ def _trace(model: str, workload: str):
                                   seed=11)
 
 
-def _metrics_with_timeout(cp, timeout: float) -> dict:
+def _metrics_with_timeout(cp, timeout) -> dict:
     """Paper §6.1: requests exceeding the loose client timeout are failures
-    and SLO violations; latency stats cover completed requests only."""
+    and SLO violations; latency stats cover completed requests only.
+    ``timeout`` may be a scalar or a per-model dict (mixed workloads)."""
     lat, done, slo_miss = [], 0, 0
     total = len(cp.requests)
     span = 0.0
     for req in cp.requests.values():
+        limit = timeout[req.model] if isinstance(timeout, dict) \
+            else timeout
         t = (req.done_time - req.arrival) if req.done_time is not None \
             else None
-        if t is None or t > timeout:
+        if t is None or t > limit:
             slo_miss += 1
             continue
         done += 1
@@ -70,8 +74,37 @@ def _metrics_with_timeout(cp, timeout: float) -> dict:
     }
 
 
+def _run_mixed(out: dict):
+    """Bursty MIXED image/video workload (elastic showcase): best-effort
+    video background + SLO image stream + tight S-image bursts.  The
+    elastic policy preempts/reallocates; EDF and friends cannot."""
+    from repro.diffusion.workloads import (mixed_burst_trace,
+                                           standalone_service_time)
+    cfg_of = {"dit-image": DIT_IMAGE, "dit-video": DIT_VIDEO}
+    for pol in POLICIES:
+        cost = CostModel()
+        cp = ControlPlane(NUM_RANKS, make_policy(pol, NUM_RANKS), cost,
+                          SimBackend(cost, jitter=0.05))
+        trace = mixed_burst_trace(CostModel(), duration=240, load=1.0,
+                                  num_ranks=NUM_RANKS, steps=STEPS,
+                                  seed=13)
+        for r in trace:
+            cp.submit(r, convert_request(r, cfg_of[r.model]))
+        cp.run()
+        base = CostModel()
+        timeouts = {
+            "dit-image": 12 * standalone_service_time(
+                "dit-image", "M", base, STEPS),
+            "dit-video": 12 * standalone_service_time(
+                "dit-video", "S", base, max(STEPS // 3, 4)),
+        }
+        out[f"mixed|burst|{pol}"] = _metrics_with_timeout(
+            cp, timeouts)
+
+
 def run() -> dict:
     out = {}
+    _run_mixed(out)
     for model_cfg in (DIT_IMAGE, DIT_VIDEO):
         model = model_cfg.name
         for workload in ("short", "burst"):
@@ -123,6 +156,26 @@ def rows(data: dict):
                         best["slo"] = max(
                             best["slo"],
                             1 - (1 - m["slo_attainment"]) / leg_viol)
+    # mixed image/video burst: elastic vs edf (acceptance: lower mean
+    # latency AND lower SLO-violation rate)
+    for pol in POLICIES:
+        m = data[f"mixed|burst|{pol}"]
+        out.append((f"policies.mixed.burst.{pol}.mean_lat",
+                    m["mean_latency_s"] * 1e6,
+                    f"slo={m['slo_attainment']:.3f}"
+                    f";thr={m['throughput_rps']:.4f}"
+                    f";p95={m['p95_latency_s']:.1f}"))
+    edf, ela = data["mixed|burst|edf"], data["mixed|burst|elastic"]
+    out.append(("policies.mixed.elastic_vs_edf.mean_lat_reduction",
+                (1 - ela["mean_latency_s"] / edf["mean_latency_s"]) * 1e6
+                if edf["mean_latency_s"] else 0.0,
+                f"elastic={ela['mean_latency_s']:.2f}s"
+                f";edf={edf['mean_latency_s']:.2f}s"))
+    out.append(("policies.mixed.elastic_vs_edf.slo_viol_reduction",
+                (1 - (1 - ela["slo_attainment"])
+                 / max(1 - edf["slo_attainment"], 1e-9)) * 1e6,
+                f"elastic_viol={1 - ela['slo_attainment']:.3f}"
+                f";edf_viol={1 - edf['slo_attainment']:.3f}"))
     out.append(("policies.best_throughput_gain_x", best["thr"] * 1e6,
                 "paper_6.01x"))
     out.append(("policies.best_mean_latency_reduction", best["lat"] * 1e6,

@@ -47,7 +47,7 @@ class ThreadBackend:
             for r in range(num_ranks)]
         for t in self._threads:
             t.start()
-        self._pending: dict[str, dict] = {}
+        self._pending: dict[tuple[str, int], dict] = {}
         self._lock = threading.Lock()
 
     def attach(self, plane):
@@ -60,7 +60,7 @@ class ThreadBackend:
                 job = self._queues[rank].get(timeout=0.01)
             except queue.Empty:
                 continue
-            task, layout, graph, t_dispatch, desc = job
+            task, layout, graph, t_dispatch, desc, seq = job
             try:
                 self.adapter.execute(task, layout, rank, self.comm, graph,
                                      desc)
@@ -70,18 +70,20 @@ class ThreadBackend:
                 self.errors.append(f"rank {rank} task {task.id}: {err}\n"
                                    + traceback.format_exc())
             with self._lock:
-                st = self._pending[task.id]
+                # keyed by (task, dispatch seq): a preempted task may be
+                # redispatched while the superseded dispatch still drains
+                st = self._pending[(task.id, seq)]
                 st["done"] += 1
                 if err:
                     st["err"] = err
                 if st["done"] == layout.degree:
-                    del self._pending[task.id]
+                    del self._pending[(task.id, seq)]
                     now = time.monotonic() - self.t0
                     self._completions.put(Completion(
                         task.id, now, now - t_dispatch,
                         failed_ranks=() if not st.get("err") else
                         tuple(layout.ranks),
-                        seq=task.meta.get("_seq", 0)))
+                        seq=seq))
 
     # ------------------------------------------------------------------
     def dispatch(self, task: TrajectoryTask, layout: ExecutionLayout,
@@ -103,11 +105,13 @@ class ThreadBackend:
             art = graph.artifacts[aid]
             if art.data is None:
                 art.data = {r: {} for r in layout.ranks}
+        seq = task.meta.get("_seq", 0)
         with self._lock:
-            self._pending[task.id] = {"done": 0}
+            self._pending[(task.id, seq)] = {"done": 0}
         t_dispatch = time.monotonic() - self.t0
         for r in layout.ranks:
-            self._queues[r].put((task, layout, graph, t_dispatch, desc))
+            self._queues[r].put((task, layout, graph, t_dispatch, desc,
+                                 seq))
 
     # ------------------------------------------------------------------
     def peek(self) -> Optional[float]:

@@ -22,6 +22,20 @@ from repro.core.trajectory import Artifact, ExecutionLayout, FieldSpec
 from repro.diffusion.adapters import FieldView, field_view
 
 
+def np_dtype(name: str) -> np.dtype:
+    """Resolve a FieldSpec dtype name to a numpy dtype.  ``bfloat16`` is
+    not a native numpy type; it comes from ml_dtypes (a jax dependency,
+    already in the environment)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        try:
+            import ml_dtypes
+            return np.dtype(getattr(ml_dtypes, name))
+        except (ImportError, AttributeError):
+            return np.dtype(np.float32)
+
+
 @dataclass(frozen=True)
 class TransferEntry:
     field: str
@@ -126,7 +140,9 @@ def execute_migration(comm: GroupFreeComm, artifact: Artifact,
             off, size = dv.slices[r]
             shape = list(spec.global_shape)
             shape[spec.shard_axis] = size
-            new_data[r][name] = np.zeros(shape, dtype=np.float32)
+            # honor the codec-declared dtype: destination shards must not
+            # silently up/down-cast bfloat16/int32 fields
+            new_data[r][name] = np.zeros(shape, dtype=np_dtype(spec.dtype))
     # local retains
     for name, r, (soff, size), (doff, _) in local_retains(
             artifact.fields, src, dst):

@@ -1,9 +1,12 @@
 """Scheduling policies (paper §5.4 + Legacy baseline §6.2).
 
-All policies speak the same interface: observe a SchedulerView, return
-(task, execution layout) decisions.  They differ ONLY in task ranking and
-layout choice — dependency tracking, dispatch, dynamic groups, and
+All policies speak the same interface: observe a SchedulerView, return a
+list of control-plane actions (``Dispatch`` / ``Reallocate`` /
+``Preempt`` / ``Cancel``, DESIGN.md §3).  They differ ONLY in ranking
+and layout choice — dependency tracking, dispatch, dynamic groups, and
 migration live in the runtime, which is the paper's central design claim.
+The classic policies below emit only ``Dispatch``; :class:`ElasticPolicy`
+exercises the full vocabulary.
 """
 from __future__ import annotations
 
@@ -11,7 +14,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.core.scheduler import Decision, Policy, SchedulerView
+from repro.core.scheduler import (Action, Decision, Dispatch, Policy,
+                                  Preempt, Reallocate, SchedulerView)
 from repro.core.trajectory import ExecutionLayout
 
 
@@ -179,6 +183,252 @@ class EDFPolicy(Policy):
         return out
 
 
+class ElasticPolicy(Policy):
+    """Elastic scheduling over the full action vocabulary (§3.2, §5.4).
+
+    Requests with a deadline are SLO-critical; requests with
+    ``deadline=None`` are best-effort.  Four behaviours, in priority
+    order each schedule point:
+
+    * **preempt** — when ready SLO work cannot start because best-effort
+      tasks hold the machine, running best-effort tasks are preempted
+      (requeued with inputs intact; their ranks free at the next device
+      boundary);
+    * **grow** — a running deadline request predicted to miss its SLO is
+      granted additional free ranks via ``Reallocate``, effective at its
+      next denoise boundary; an idle machine similarly grows a lone
+      best-effort request to soak up free ranks;
+    * **shrink** — when the ready queue outgrows the machine,
+      over-provisioned running requests are shrunk at their next
+      boundary, releasing ranks to drain the queue;
+    * **dispatch** — EDF order with best-fit SP degree (smallest degree
+      predicted to meet the deadline); best-effort work only uses ranks
+      not reserved for incomplete SLO requests, which keeps it from
+      thrashing against preemption.
+    """
+    name = "elastic"
+
+    def __init__(self, candidate_degrees: Optional[list[int]] = None,
+                 max_degree: Optional[int] = None,
+                 shrink_queue_factor: float = 1.0,
+                 preempt_min_degree: int = 2):
+        self.candidates = candidate_degrees
+        self.max_degree = max_degree
+        self.shrink_queue_factor = shrink_queue_factor
+        # Preemption takes effect at the victim's device boundary (the
+        # in-flight slice cannot be killed on either backend), so evicting
+        # a single-rank task frees its rank no earlier than letting it
+        # finish — it only discards the slice.  Preempt only multi-rank
+        # groups, whose ranks an SLO group genuinely needs en bloc.
+        self.preempt_min_degree = preempt_min_degree
+
+    # -- helpers -------------------------------------------------------
+    def _cands(self, view: SchedulerView) -> list[int]:
+        maxd = self.max_degree or view.num_ranks
+        return self.candidates or \
+            [d for d in (1, 2, 4, 8, 16, 32) if d <= maxd]
+
+    @staticmethod
+    def _remaining(view, req, g, d) -> float:
+        return view.cost.request_remaining(req.model, g, d)
+
+    def _need_degree(self, view, req, g) -> int:
+        """Smallest degree predicted to meet the deadline; the largest
+        candidate when nothing meets it (degrade gracefully)."""
+        cands = self._cands(view)
+        if req.deadline is None:
+            return 1
+        if not any(t.kind == "denoise" and t.state == "pending"
+                   for t in g.tasks.values()):
+            return 1        # only single-rank encode/decode stages left
+        for d in cands:
+            if view.now + self._remaining(view, req, g, d) <= req.deadline:
+                return d
+        return cands[-1]
+
+    # -- policy --------------------------------------------------------
+    def schedule(self, view: SchedulerView) -> list[Action]:
+        actions: list[Action] = []
+        cands = self._cands(view)
+        # ranks already promised to reallocation pins are not ours
+        pin_reserved = set()
+        for lay in view.pinned.values():
+            pin_reserved |= set(lay.ranks)
+        free = [r for r in view.free_ranks if r not in pin_reserved]
+
+        run_by_req: dict[str, list] = {}
+        for tid, (task, lay) in view.running.items():
+            run_by_req.setdefault(task.request_id, []).append((task, lay))
+
+        # pinned denoise work is auto-dispatched by the control plane
+        ready = [trg for trg in view.ready
+                 if not (trg[0].kind == "denoise"
+                         and trg[1].id in view.pinned)]
+        slo_ready = sorted(
+            [trg for trg in ready if trg[1].deadline is not None],
+            key=lambda trg: (trg[1].deadline, trg[1].arrival, trg[0].id))
+        be_ready = sorted(
+            [trg for trg in ready if trg[1].deadline is None],
+            key=lambda trg: (trg[1].arrival, trg[0].id))
+
+        queue_depth = len(view.ready)
+
+        def effective_layout(rid):
+            """The layout governing the request's NEXT denoise boundary:
+            its reallocation pin if set, else its running layout."""
+            if rid in view.pinned:
+                return view.pinned[rid]
+            den = [(t, lay) for t, lay in run_by_req.get(rid, [])
+                   if t.kind == "denoise" and t.id not in view.preempting]
+            return den[0][1] if den else None
+
+        # ---- 1. shrink over-provisioned work when the queue grows ----
+        # (a pin replacement keeps the victim progressing at a smaller
+        # degree — strictly cheaper than preemption, which discards the
+        # in-flight slice for ranks that free at the same boundary)
+        shrink_reclaim = 0
+        if queue_depth > self.shrink_queue_factor * view.num_ranks:
+            for rid in sorted(run_by_req):
+                req = view.requests[rid]
+                if req.deadline is not None:
+                    continue        # SLO work is already best-fit sized
+                lay = effective_layout(rid)
+                if lay is None:
+                    continue
+                tgt = self._need_degree(view, req, view.graphs[rid])
+                if tgt < lay.degree:
+                    actions.append(Reallocate(
+                        rid, ExecutionLayout(lay.ranks[:tgt])))
+                    shrink_reclaim += lay.degree - tgt
+
+        # ---- 2. preempt best-effort work for SLO-critical arrivals ---
+        # only when no reclaim (preempt drain or shrink boundary) is
+        # already in flight: ranks free at boundaries either way, and one
+        # elastic response per event avoids discard churn
+        demand = sum(self._need_degree(view, req, g)
+                     for _, req, g in slo_ready)
+        pending_reclaim = sum(
+            lay.degree for tid, (t, lay) in view.running.items()
+            if tid in view.preempting)
+        reclaiming = pending_reclaim + shrink_reclaim
+        lack = min(demand, view.num_ranks) - len(free) - reclaiming
+        if reclaiming == 0:
+            victims = sorted(
+                [(t, lay) for t, lay in view.running.values()
+                 if view.requests[t.request_id].deadline is None
+                 and t.id not in view.preempting
+                 and lay.degree >= self.preempt_min_degree],
+                key=lambda tl: (-tl[1].degree, tl[0].id))
+            for t, lay in victims:
+                if lack <= 0:
+                    break
+                actions.append(Preempt(t.id))
+                reclaiming += lay.degree
+                lack -= lay.degree
+
+        # ---- 3. grow under-provisioned running requests --------------
+        shrunk = {a.request_id for a in actions
+                  if isinstance(a, Reallocate)}
+        for rid in sorted(run_by_req):
+            req = view.requests[rid]
+            g = view.graphs[rid]
+            if rid in shrunk or not free:
+                continue
+            lay = effective_layout(rid)
+            if lay is None:
+                continue
+            if req.deadline is not None:
+                # straggler: grant ranks so the next boundary can meet
+                # (or come closest to) the deadline
+                eta = view.now + self._remaining(view, req, g, lay.degree)
+                if eta <= req.deadline:
+                    continue
+                # grow only when the larger degree actually rescues the
+                # deadline — a lost deadline is sunk cost, and grabbing
+                # the machine for it starves still-winnable requests
+                want = None
+                for d in cands:
+                    if d <= lay.degree or d - lay.degree > len(free):
+                        continue
+                    if view.now + self._remaining(view, req, g, d) \
+                            <= req.deadline:
+                        want = d
+                        break
+            else:
+                # idle machine, empty queue: let lone best-effort work
+                # soak up free ranks
+                if queue_depth or slo_ready or len(run_by_req) > 1:
+                    continue
+                bigger = [d for d in cands
+                          if lay.degree < d <= lay.degree + len(free)]
+                want = bigger[-1] if bigger else None
+            if want is None or want <= lay.degree:
+                continue
+            extra = tuple(free[:want - lay.degree])
+            free = free[want - lay.degree:]
+            actions.append(Reallocate(rid, ExecutionLayout(
+                lay.ranks + extra)))
+
+        # ---- 4. dispatch ready tasks on what's left ------------------
+        # count ranks an incomplete SLO request still needs beyond what
+        # it holds; best-effort work may not eat into that reservation
+        granted: dict[str, int] = {}    # ranks given out THIS pass
+
+        def dispatch(t, req, g, k):
+            nonlocal free
+            ranks = tuple(free[:k])
+            free = free[k:]
+            granted[req.id] = granted.get(req.id, 0) + k
+            actions.append(Dispatch(t.id, ExecutionLayout(ranks)))
+
+        for t, req, g in slo_ready:
+            if not free:
+                break
+            if t.kind in ("encode", "decode"):
+                dispatch(t, req, g, 1)
+                continue
+            need = self._need_degree(view, req, g)
+            if need > len(free):
+                if reclaiming:
+                    continue        # preempted ranks arrive at a boundary
+                feas = [d for d in cands if d <= len(free)]
+                if not feas:
+                    continue
+                need = feas[-1]
+            dispatch(t, req, g, need)
+
+        slo_reserve = 0
+        for rid, req in sorted(view.requests.items()):
+            if req.deadline is None or req.failed or \
+                    req.done_time is not None or req.arrival > view.now:
+                continue
+            g = view.graphs.get(rid)
+            if g is None or not g.remaining_tasks():
+                continue
+            held = sum(lay.degree for _, lay in run_by_req.get(rid, [])) \
+                + granted.get(rid, 0)
+            slo_reserve += max(
+                self._need_degree(view, req, g) - held, 0)
+        budget = max(len(free) - slo_reserve, 0)
+        for t, req, g in be_ready:
+            if budget <= 0:
+                break
+            if t.kind in ("encode", "decode"):
+                dispatch(t, req, g, 1)
+                budget -= 1
+                continue
+            if slo_ready or queue_depth > view.num_ranks:
+                k = 1
+            else:
+                feas = [d for d in cands if d <= budget]
+                k = feas[-1] if feas else 0
+            if k <= 0:
+                continue
+            dispatch(t, req, g, k)
+            budget -= k
+        return actions
+
+
 def make_policy(name: str, num_ranks: int) -> Policy:
     """Registry used by benchmarks/examples (--policy flag)."""
     table = {
@@ -188,5 +438,6 @@ def make_policy(name: str, num_ranks: int) -> Policy:
         "srtf-sp1": lambda: SRTFPolicy(sp_degree=1),
         "srtf-spmax": lambda: SRTFPolicy(sp_degree=num_ranks),
         "edf": lambda: EDFPolicy(),
+        "elastic": lambda: ElasticPolicy(),
     }
     return table[name]()

@@ -1,4 +1,4 @@
-"""Event-driven control plane (paper §5.1).
+"""Event-driven control plane (paper §5.1, DESIGN.md §3/§6).
 
 The control plane owns request admission, trajectory task graphs,
 dependency state, artifact metadata, resource availability, and policy
@@ -6,20 +6,41 @@ invocation.  Execution backends (simulator | thread workers) share this
 scheduler verbatim — the paper's key claim that the simulator is "an
 alternative execution backend for the same trajectory abstraction".
 
+Policies speak a four-verb *action vocabulary* (DESIGN.md §3) instead of
+a single placement decision, making GPU parallelism a first-class
+schedulable resource:
+
+* :class:`Dispatch`   — place a ready task on free ranks (the classic
+  decision; ``Decision`` remains as an alias);
+* :class:`Reallocate` — change a *running* request's rank set.  Takes
+  effect at the next trajectory boundary: the control plane pins the
+  layout and dispatches the request's next denoise task itself, and the
+  backend's layout-aware migration moves artifacts automatically;
+* :class:`Preempt`    — evict a running task.  The in-flight slice is
+  discarded at its device boundary (a kernel cannot be killed mid-step on
+  either backend), the ranks free, and the task requeues with its input
+  artifacts intact;
+* :class:`Cancel`     — abort a request; running tasks drain and their
+  outputs are discarded.
+
 Dispatch completion is separated from device completion: `dispatch()`
 returns after CPU-side preparation; the backend reports device completion
 events asynchronously, at which point artifacts materialize, resources
-free, and the policy is re-invoked.
+free, and the policy is re-invoked (also after every preempt-requeue and
+reallocation boundary — the EventLoop calls ``schedule_point`` after each
+event batch).
 """
 from __future__ import annotations
 
-import dataclasses
+import heapq
+import itertools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Optional, Union
 
 from repro.core.cost_model import CostModel
-from repro.core.trajectory import (Artifact, ExecutionLayout, Request,
-                                   RequestGraph, TrajectoryTask)
+from repro.core.event_loop import EventLoop, VirtualClock
+from repro.core.trajectory import (ExecutionLayout, Request, RequestGraph,
+                                   TrajectoryTask)
 
 
 @dataclass
@@ -31,6 +52,45 @@ class Completion:
     seq: int = 0                    # dispatch sequence (stale-event guard)
 
 
+# ---------------------------------------------------------------------------
+# Action vocabulary (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Dispatch:
+    """Place a ready task on currently-free ranks."""
+    task_id: str
+    layout: ExecutionLayout
+
+
+#: Legacy name for :class:`Dispatch` (pre-action-vocabulary API).
+Decision = Dispatch
+
+
+@dataclass
+class Reallocate:
+    """Pin a request to a new rank set from its next trajectory boundary
+    onward; artifact migration to the new layout happens automatically."""
+    request_id: str
+    new_layout: ExecutionLayout
+
+
+@dataclass
+class Preempt:
+    """Requeue a running task (inputs intact, in-flight slice discarded
+    at its device boundary)."""
+    task_id: str
+
+
+@dataclass
+class Cancel:
+    """Abort a request: pending work is dropped, running work drains."""
+    request_id: str
+
+
+Action = Union[Dispatch, Reallocate, Preempt, Cancel]
+
+
 @dataclass
 class SchedulerView:
     """What a policy is allowed to observe (paper §3.2)."""
@@ -40,18 +100,17 @@ class SchedulerView:
     num_ranks: int
     cost: CostModel
     running: dict[str, tuple[TrajectoryTask, ExecutionLayout]]
-
-
-@dataclass
-class Decision:
-    task_id: str
-    layout: ExecutionLayout
+    # elastic-action context
+    requests: dict[str, Request] = field(default_factory=dict)
+    graphs: dict[str, RequestGraph] = field(default_factory=dict)
+    pinned: dict[str, ExecutionLayout] = field(default_factory=dict)
+    preempting: frozenset = frozenset()
 
 
 class Policy:
     name = "base"
 
-    def schedule(self, view: SchedulerView) -> list[Decision]:
+    def schedule(self, view: SchedulerView) -> list[Action]:
         raise NotImplementedError
 
 
@@ -69,81 +128,229 @@ class ControlPlane:
         self.free_ranks: set[int] = set(range(num_ranks))
         self.now = 0.0
         self.events: list[dict] = []        # trace for benchmarks
+        # elastic state
+        self.pinned: dict[str, ExecutionLayout] = {}
+        self.preempting: dict[str, str] = {}    # task_id -> requeue|drop
+        # pending (not yet released) arrivals
+        self._arrivals: list[tuple[float, int, str]] = []
+        self._sub_seq = itertools.count()
+        self.released: set[str] = set()
         backend.attach(self)
 
     # ------------------------------------------------------------------
     def submit(self, request: Request, graph: RequestGraph):
         self.requests[request.id] = request
         self.graphs[request.id] = graph
+        if request.arrival <= self.now:
+            self._release(request)
+        else:
+            heapq.heappush(self._arrivals,
+                           (request.arrival, next(self._sub_seq),
+                            request.id))
+
+    def _release(self, request: Request):
+        self.released.add(request.id)
         self.events.append({"t": self.now, "ev": "arrival",
                             "req": request.id})
+
+    def release_arrivals(self):
+        """Admit every submitted request whose arrival has come due."""
+        while self._arrivals and self._arrivals[0][0] <= self.now:
+            _, _, rid = heapq.heappop(self._arrivals)
+            self._release(self.requests[rid])
+
+    def next_arrival(self) -> Optional[float]:
+        return self._arrivals[0][0] if self._arrivals else None
+
+    def quiescent(self) -> bool:
+        """No event can ever fire again: nothing running on the backend
+        and no future arrival (completions only come from running)."""
+        return not self.running and not self._arrivals
 
     # ------------------------------------------------------------------
     def _view(self) -> SchedulerView:
         ready = []
         for rid, g in self.graphs.items():
+            if rid not in self.released:
+                continue
             req = self.requests[rid]
-            if req.arrival > self.now or req.failed:
+            if req.failed:
                 continue
             for t in g.ready_tasks():
                 ready.append((t, req, g))
         return SchedulerView(now=self.now, ready=ready,
                              free_ranks=sorted(self.free_ranks),
                              num_ranks=self.num_ranks, cost=self.cost,
-                             running=dict(self.running))
+                             running=dict(self.running),
+                             requests=self.requests, graphs=self.graphs,
+                             pinned=dict(self.pinned),
+                             preempting=frozenset(self.preempting))
 
     # ------------------------------------------------------------------
-    def _validate(self, d: Decision, view: SchedulerView) -> bool:
+    # action application (validated; invalid actions are skipped)
+    # ------------------------------------------------------------------
+
+    def _ranks_ok(self, layout: ExecutionLayout) -> bool:
+        return all(0 <= r < self.num_ranks for r in layout.ranks)
+
+    def _dispatch(self, task: TrajectoryTask, layout: ExecutionLayout,
+                  graph: RequestGraph, *, via_pin: bool = False):
+        task.state = "running"
+        task.layout = layout
+        task.dispatch_time = self.now
+        task.meta["_seq"] = task.meta.get("_seq", 0) + 1
+        self.free_ranks -= set(layout.ranks)
+        self.running[task.id] = (task, layout)
+        ev = {"t": self.now, "ev": "dispatch", "task": task.id,
+              "req": task.request_id, "kind": task.kind,
+              "step": task.step_index, "ranks": list(layout.ranks)}
+        if via_pin:
+            ev["realloc"] = True
+        self.events.append(ev)
+        self.backend.dispatch(task, layout, graph, self.now)
+
+    def _apply_dispatch(self, d: Dispatch, view: SchedulerView) -> bool:
         if d.task_id in self.running:
             return False
-        if any(r not in self.free_ranks for r in d.layout.ranks):
+        if not self._ranks_ok(d.layout) or \
+                any(r not in self.free_ranks for r in d.layout.ranks):
             return False
+        for t, req, g in view.ready:
+            if t.id == d.task_id:
+                if t.state != "pending":
+                    return False
+                # an explicit placement overrides and clears a pin
+                self.pinned.pop(req.id, None)
+                self._dispatch(t, d.layout, g)
+                return True
+        return False
+
+    def _apply_reallocate(self, a: Reallocate) -> bool:
+        req = self.requests.get(a.request_id)
+        if req is None or req.failed or req.done_time is not None:
+            return False
+        if not self._ranks_ok(a.new_layout):
+            return False
+        self.pinned[a.request_id] = a.new_layout
+        self.events.append({"t": self.now, "ev": "reallocate",
+                            "req": a.request_id,
+                            "ranks": list(a.new_layout.ranks)})
         return True
+
+    def _apply_preempt(self, a: Preempt) -> bool:
+        if a.task_id not in self.running or a.task_id in self.preempting:
+            return False
+        task, layout = self.running[a.task_id]
+        # eviction revokes the request's reallocation pin — otherwise
+        # _autodispatch_pinned would re-dispatch the requeued task at the
+        # pinned width before the policy runs, livelocking the plane in a
+        # preempt/requeue cycle
+        self.pinned.pop(task.request_id, None)
+        self.preempting[a.task_id] = "requeue"
+        self.events.append({"t": self.now, "ev": "preempt",
+                            "task": task.id, "req": task.request_id,
+                            "kind": task.kind, "step": task.step_index,
+                            "ranks": list(layout.ranks)})
+        return True
+
+    def _apply_cancel(self, a: Cancel) -> bool:
+        req = self.requests.get(a.request_id)
+        if req is None or req.failed or req.done_time is not None:
+            return False
+        req.failed = True
+        self.pinned.pop(a.request_id, None)
+        for tid, (task, _) in list(self.running.items()):
+            if task.request_id == a.request_id:
+                self.preempting[tid] = "drop"
+        self.events.append({"t": self.now, "ev": "cancel",
+                            "req": a.request_id})
+        return True
+
+    def apply(self, action: Action, view: Optional[SchedulerView] = None
+              ) -> bool:
+        """Validate and apply one control-plane action."""
+        if isinstance(action, Dispatch):
+            return self._apply_dispatch(action, view or self._view())
+        if isinstance(action, Reallocate):
+            return self._apply_reallocate(action)
+        if isinstance(action, Preempt):
+            return self._apply_preempt(action)
+        if isinstance(action, Cancel):
+            return self._apply_cancel(action)
+        return False
+
+    # ------------------------------------------------------------------
+    def _autodispatch_pinned(self):
+        """Honor reallocation pins at trajectory boundaries: when a pinned
+        request's next denoise task is ready and the pinned ranks are
+        free, the control plane dispatches it itself (migration to the
+        new layout happens in the backend's dispatch path)."""
+        for rid in sorted(self.pinned):
+            layout = self.pinned[rid]
+            req = self.requests.get(rid)
+            if req is None or req.failed or rid not in self.released:
+                continue
+            g = self.graphs[rid]
+            for t in g.ready_tasks():
+                if t.kind != "denoise":
+                    continue
+                if all(r in self.free_ranks for r in layout.ranks):
+                    self._dispatch(t, layout, g, via_pin=True)
+                break       # denoise steps form a chain: at most one ready
 
     # ------------------------------------------------------------------
     def schedule_point(self):
-        """Invoke the policy and dispatch its decisions."""
+        """Invoke the policy and apply its actions.  Called by the event
+        loop after every arrival, completion, preempt-requeue, and
+        reallocation boundary."""
+        self._autodispatch_pinned()
         view = self._view()
-        if not view.ready or not view.free_ranks:
+        if not view.ready and not view.running:
             return
-        for d in self.policy.schedule(view):
-            if not self._validate(d, view):
-                continue
-            task = None
-            for t, req, g in view.ready:
-                if t.id == d.task_id:
-                    task = t
-                    graph = g
-                    break
-            if task is None:
-                continue
-            task.state = "running"
-            task.layout = d.layout
-            task.dispatch_time = self.now
-            task.meta["_seq"] = task.meta.get("_seq", 0) + 1
-            self.free_ranks -= set(d.layout.ranks)
-            self.running[task.id] = (task, d.layout)
-            self.events.append({"t": self.now, "ev": "dispatch",
-                                "task": task.id, "kind": task.kind,
-                                "ranks": list(d.layout.ranks)})
-            self.backend.dispatch(task, d.layout, graph, self.now)
-            view = self._view()     # refresh free ranks for next decision
-            if not view.free_ranks:
-                break
+        for action in self.policy.schedule(view):
+            self.apply(action, view)
 
     # ------------------------------------------------------------------
+    def _discard_outputs(self, task: TrajectoryTask, graph: RequestGraph):
+        for aid in task.outputs:
+            art = graph.artifacts[aid]
+            art.materialized = False
+            art.layout = None
+            art.data = None
+
     def on_completion(self, c: Completion):
         if c.task_id not in self.running:
             return                  # stale event from a failed dispatch
         task = self.running[c.task_id][0]
         if c.seq and c.seq != task.meta.get("_seq", 0):
             return                  # completion of a superseded dispatch
+        mode = self.preempting.pop(c.task_id, None)
         task, layout = self.running.pop(c.task_id)
         self.now = max(self.now, c.finish_time)
-        task.state = "done"
-        task.complete_time = c.finish_time
         self.free_ranks |= set(layout.ranks)
         graph = self.graphs[task.request_id]
+        if mode is not None:
+            # preempted or cancelled mid-flight: the device slice reached
+            # its boundary but its outputs are discarded; a preempted
+            # task requeues with inputs intact.
+            self._discard_outputs(task, graph)
+            task.state = "pending"
+            task.layout = None
+            if mode == "requeue":
+                self.events.append({"t": self.now, "ev": "requeued",
+                                    "task": task.id,
+                                    "req": task.request_id,
+                                    "kind": task.kind,
+                                    "step": task.step_index})
+            return
+        task.state = "done"
+        task.complete_time = c.finish_time
+        # a reallocation pin only governs the denoise chain; release it
+        # (and its rank reservation) once that chain is complete
+        if task.request_id in self.pinned and not any(
+                t.kind == "denoise" and t.state != "done"
+                for t in graph.tasks.values()):
+            self.pinned.pop(task.request_id)
         for aid in task.outputs:
             art = graph.artifacts[aid]
             art.materialized = True
@@ -156,6 +363,7 @@ class ControlPlane:
         req = self.requests[task.request_id]
         if graph.is_done() and req.done_time is None:
             req.done_time = c.finish_time
+            self.pinned.pop(req.id, None)
             self.events.append({"t": self.now, "ev": "request_done",
                                 "req": req.id})
 
@@ -163,6 +371,7 @@ class ControlPlane:
         """Worker failure: the trajectory task graph is the unit of
         recovery — re-enqueue the task; its input artifacts are intact."""
         task, layout = self.running.pop(task_id)
+        self.preempting.pop(task_id, None)
         self.free_ranks |= set(layout.ranks)
         if requeue:
             task.state = "pending"
@@ -171,27 +380,10 @@ class ControlPlane:
             self.requests[task.request_id].failed = True
 
     # ------------------------------------------------------------------
-    def _next_arrival(self) -> Optional[float]:
-        future = [r.arrival for r in self.requests.values()
-                  if r.arrival > self.now and not r.failed]
-        return min(future) if future else None
-
     def run(self, until: float = float("inf"), max_events: int = 10 ** 7):
-        """Main loop: schedule, then advance time to the next completion or
-        arrival event, whichever is earlier (virtual-clock backends)."""
-        for _ in range(max_events):
-            if self.now >= until:
-                break
-            self.schedule_point()
-            na = self._next_arrival()
-            nc = self.backend.peek()
-            if nc is not None and (na is None or nc <= na):
-                for c in self.backend.poll():
-                    self.on_completion(c)
-            elif na is not None:
-                self.now = na
-            else:
-                break
+        """Virtual-clock serving: the shared EventLoop advances time to
+        the next completion or arrival, whichever is earlier."""
+        EventLoop(self, VirtualClock(self)).run(until, max_events)
         return self
 
     # ------------------------------------------------------------------
@@ -221,3 +413,36 @@ class ControlPlane:
             "slo_attainment": 1.0 - slo_miss / total if total else 1.0,
             "makespan_s": span,
         }
+
+
+# ---------------------------------------------------------------------------
+# trace comparison (benchmarks/sim_fidelity.py, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+_SIGNATURE_EVENTS = ("dispatch", "preempt", "requeued", "reallocate",
+                    "cancel")
+
+
+def trace_signature(events: list[dict],
+                    kinds: tuple = _SIGNATURE_EVENTS) -> list[tuple]:
+    """Canonical, id- and time-free projection of a control-plane trace.
+
+    Requests are keyed by arrival order and each carries its *ordered*
+    decision records ``(event, task kind, step, ranks)``; wall-clock and
+    virtual-clock runs of the same workload under the same policy should
+    produce identical signatures even though timestamps (and the
+    interleaving of events on disjoint rank sets) differ.
+    """
+    order: dict[str, int] = {}
+    for ev in events:
+        if ev["ev"] == "arrival" and ev["req"] not in order:
+            order[ev["req"]] = len(order)
+    per_req: dict[int, list[tuple]] = {}
+    for ev in events:
+        if ev["ev"] not in kinds:
+            continue
+        idx = order.get(ev.get("req"), -1)
+        per_req.setdefault(idx, []).append(
+            (ev["ev"], ev.get("kind"), ev.get("step"),
+             tuple(ev.get("ranks", ()))))
+    return [(idx, tuple(seq)) for idx, seq in sorted(per_req.items())]

@@ -10,6 +10,13 @@ Adds the two runtime effects the paper prices:
 * layout-change migration latency (artifact bytes / link bandwidth + fixed
   software overhead) when consecutive tasks use different layouts;
 * per-dispatch CPU overhead (the §6.4 runtime-overhead experiment).
+
+Elastic actions (DESIGN.md §3) need no special support here: a preempted
+or cancelled task's scheduled completion still fires at its boundary —
+exactly when the thread backend's drain finishes — and the control plane
+discards it (freeing the ranks) instead of committing outputs, so both
+backends share identical reclaim timing.  Completions of superseded
+dispatches are rejected by the plane via the `seq` guard.
 """
 from __future__ import annotations
 

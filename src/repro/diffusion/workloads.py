@@ -100,6 +100,48 @@ def short_trace(model: str, cost: CostModel, *, duration: float = 120.0,
     return out
 
 
+def mixed_burst_trace(cost: CostModel, *, duration: float = 240.0,
+                      load: float = 1.0, num_ranks: int = 4,
+                      steps: int = 25, video_steps: Optional[int] = None,
+                      seed: int = 13) -> list[Request]:
+    """Bursty MIXED image/video trace (elastic-policy showcase):
+
+    * a best-effort ``dit-video`` background stream (``deadline=None``)
+      that soaks up idle ranks and is preemptible,
+    * a Poisson ``dit-image`` M stream with standard SLO deadlines,
+    * periodic dense bursts of S images with tight deadlines arriving
+      while background work is in flight.
+    """
+    rand = _lcg(seed)
+    video_steps = video_steps or max(steps // 3, 4)
+    out: list[Request] = []
+    # best-effort video background: one every ~sixth of the window
+    t = duration * 0.02
+    t_vid = standalone_service_time("dit-video", "S", cost, video_steps)
+    while t < duration:
+        r = make_request("dit-video", "S", t, cost, video_steps)
+        r.deadline = None                     # best-effort
+        out.append(r)
+        t += max(duration / 6.0, t_vid * 0.25)
+    # SLO image stream (M class)
+    t_m = standalone_service_time("dit-image", "M", cost, steps)
+    rate = load * num_ranks / t_m * 0.5
+    t = 0.0
+    while t < duration:
+        t += -math.log(max(rand(), 1e-9)) / rate
+        out.append(make_request("dit-image", "M", t, cost, steps))
+    # dense S-image bursts with tight deadlines
+    t_s = standalone_service_time("dit-image", "S", cost, steps)
+    for bt in (duration * f for f in (0.2, 0.45, 0.7, 0.9)):
+        for i in range(max(3, num_ranks * 2)):
+            r = make_request("dit-image", "S", bt + i * t_s * 0.05, cost,
+                             steps)
+            r.deadline = r.arrival + 1.2 * t_s + SLO_ALLOWANCE["dit-image"]
+            out.append(r)
+    out.sort(key=lambda r: r.arrival)
+    return out
+
+
 def foreground_burst_trace(model: str, cost: CostModel, *,
                            duration: float = 120.0, load: float = 0.5,
                            num_ranks: int = 4, steps: int = 50,

@@ -1,18 +1,21 @@
 """GF-DiT serving engine: binds the control plane to real executors.
 
-Wall-clock serving loop over the thread backend — arrivals release on
-schedule, policies make elastic layout decisions, workers run real JAX
-compute with GFC sequence parallelism, and migration happens at layout
-changes.  The same ControlPlane + policy objects run unmodified under the
-simulator (paper §5.5 claim, validated by benchmarks/sim_fidelity.py).
+Wall-clock serving over the thread backend — arrivals release on
+schedule, policies make elastic layout/reallocation/preemption decisions,
+workers run real JAX compute with GFC sequence parallelism, and migration
+happens at layout changes.  The serving loop itself is the SAME
+:class:`~repro.core.event_loop.EventLoop` that drives the simulator —
+only the :class:`~repro.core.event_loop.Clock` differs (paper §5.5 claim,
+validated by benchmarks/sim_fidelity.py).
 """
 from __future__ import annotations
 
-import time
+import dataclasses
 from typing import Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import CostModel
+from repro.core.event_loop import EventLoop, WallClock
 from repro.core.executor import ThreadBackend
 from repro.core.gfc import GroupFreeComm
 from repro.core.scheduler import ControlPlane, Policy
@@ -36,30 +39,28 @@ class ServingEngine:
     def serve(self, requests: list[Request], *, time_scale: float = 1.0,
               timeout: float = 300.0) -> dict:
         """Run requests to completion; arrivals release at
-        request.arrival * time_scale wall seconds."""
-        pending = sorted(requests, key=lambda r: r.arrival)
-        t0 = time.monotonic()
-        self.backend.t0 = t0
-        submitted = 0
-        while True:
-            now = time.monotonic() - t0
-            self.cp.now = now
-            while submitted < len(pending) and \
-                    pending[submitted].arrival * time_scale <= now:
-                req = pending[submitted]
-                req.arrival = req.arrival * time_scale
-                self.cp.submit(req, convert_request(req, self.cfg))
-                submitted += 1
-            self.cp.schedule_point()
-            for c in self.backend.poll():
-                self.cp.on_completion(c)
-            done = all(r.done_time is not None or r.failed
-                       for r in self.cp.requests.values())
-            if submitted == len(pending) and done and \
-                    submitted == len(self.cp.requests):
-                break
-            if now > timeout:
-                break
+        ``request.arrival * time_scale`` wall seconds.
+
+        Caller-owned ``Request`` objects are never mutated: the engine
+        serves private copies (same ids, so ``result_pixels`` still
+        resolves against the originals).
+        """
+        served = [dataclasses.replace(r, arrival=r.arrival * time_scale,
+                                      deadline=(r.deadline * time_scale
+                                                if r.deadline is not None
+                                                else None),
+                                      task_ids=[], done_time=None,
+                                      failed=False)
+                  for r in requests]
+        graphs = [(r, convert_request(r, self.cfg))
+                  for r in sorted(served, key=lambda r: r.arrival)]
+        # start the clock only after CPU-side graph construction so
+        # early arrivals do not release late
+        clock = WallClock()
+        self.backend.t0 = clock.t0
+        for r, g in graphs:
+            self.cp.submit(r, g)
+        EventLoop(self.cp, clock).run(until=timeout)
         if self.backend.errors:
             raise RuntimeError("worker errors:\n"
                                + "\n".join(self.backend.errors[:3]))

@@ -3,6 +3,11 @@
 ``decode_*`` / ``long_*`` dry-run cells lower :func:`make_serve_step`'s
 decode step (one new token against a seq_len-deep cache); ``prefill_*``
 cells lower :func:`make_prefill_step`.
+
+NOTE: despite the name, this module is about per-architecture model
+*step functions* for the dry-run harness.  The serving event loop lives
+in :mod:`repro.core.event_loop` (shared by simulator and thread
+backends, DESIGN.md §6).
 """
 from __future__ import annotations
 

@@ -26,7 +26,7 @@ import numpy as np
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
@@ -120,7 +120,7 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
         d = self.dir / f"step_{step}"
         meta = json.loads((d / "meta.json").read_text())
-        flat, treedef = jax.tree.flatten_with_path(template)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         shard_flat = None
         if shardings is not None:
             shard_flat = jax.tree.flatten(shardings)[0]

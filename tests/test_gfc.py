@@ -5,7 +5,9 @@ import threading
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.gfc import (GroupDescriptor, GroupFreeComm,
                             OrderingViolation)

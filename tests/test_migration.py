@@ -2,7 +2,9 @@
 end-to-end data equality across random layout changes (paper §5.3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.gfc import GroupFreeComm
 from repro.core.migration import (execute_migration, local_retains,
@@ -92,6 +94,27 @@ def test_migration_data_equality(data):
                                       full[off:off + size])
         np.testing.assert_array_equal(art.data[r]["embeds"], emb)
         assert float(art.data[r]["sigma"]) == pytest.approx(0.7)
+    assert art.layout == dst
+
+
+def test_reallocation_triggers_correct_migration_plan():
+    """A Reallocate pin redirects the next denoise step to a new layout;
+    the migration plan it drives must move exactly the non-local slices
+    (here: grow 1 -> 2 ranks, half the rows move, dtype preserved)."""
+    fields = {"latent": FieldSpec("sharded", (32, 4), "float32", 0)}
+    src = ExecutionLayout((0,))
+    dst = ExecutionLayout((0, 3))
+    entries = plan_migration(fields, src, dst)
+    assert plan_bytes(entries) == 16 * 4 * 4     # rows 16..31 to rank 3
+    assert all(e.src_rank == 0 and e.dst_rank == 3 for e in entries)
+    full = np.arange(32 * 4, dtype=np.float32).reshape(32, 4)
+    art = Artifact(id="a", request_id="r", role="latent", fields=fields,
+                   layout=src, data={0: {"latent": full.copy()}})
+    comm = GroupFreeComm(4)
+    execute_migration(comm, art, dst, entries)
+    np.testing.assert_array_equal(art.data[0]["latent"], full[:16])
+    np.testing.assert_array_equal(art.data[3]["latent"], full[16:])
+    assert art.data[3]["latent"].dtype == np.float32
     assert art.layout == dst
 
 

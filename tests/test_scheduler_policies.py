@@ -33,7 +33,8 @@ def trace(load=0.7, duration=40, steps=10, seed=3):
 # ---------------------------------------------------------------------------
 def test_all_policies_complete_all_requests():
     reqs = trace()
-    for name in ["legacy", "fcfs-sp1", "srtf-sp1", "srtf-spmax", "edf"]:
+    for name in ["legacy", "fcfs-sp1", "srtf-sp1", "srtf-spmax", "edf",
+                 "elastic"]:
         cp = run_policy(name, trace())
         m = cp.metrics()
         assert m["completed"] == len(reqs), (name, m)
@@ -119,6 +120,36 @@ def test_task_failure_requeues_and_completes():
     cp.fail_task(victim, requeue=True)
     cp.run()
     assert cp.metrics()["completed"] == len(reqs)
+
+
+def test_preemption_requeues_with_inputs_intact():
+    """Action vocabulary (DESIGN.md §3): Preempt discards the in-flight
+    slice at its boundary and requeues the task; its input artifacts stay
+    materialized, so the request still completes correctly."""
+    from repro.core.scheduler import Preempt
+    cost = CostModel()
+    req = make_request("dit-image", "M", 0.0, cost, steps=6)
+    cp = ControlPlane(4, make_policy("fcfs-sp1", 4), cost,
+                      SimBackend(cost))
+    cp.submit(req, convert_request(req, DIT_IMAGE))
+    cp.schedule_point()
+    # run to the first in-flight denoise step, then preempt it
+    for _ in range(50):
+        victim = next((t for t, _ in cp.running.values()
+                       if t.kind == "denoise"), None)
+        if victim is not None:
+            break
+        for c in cp.backend.poll():
+            cp.on_completion(c)
+        cp.schedule_point()
+    assert victim is not None
+    inputs = list(victim.inputs)
+    assert cp.apply(Preempt(victim.id))
+    cp.run()
+    graph = cp.graphs[req.id]
+    assert all(graph.artifacts[a].materialized for a in inputs)
+    assert any(e["ev"] == "requeued" for e in cp.events)
+    assert cp.metrics()["completed"] == 1
 
 
 def test_elastic_resize_at_boundaries():
