@@ -5,11 +5,18 @@ Legacy (fixed-pipeline, static full-machine SP) vs GF-DiT policies
 traces for both the image and video models.  Metrics: throughput, mean
 latency, P95 latency, SLO attainment (failures count as violations).
 
+Also runs the many-small-images burst workload (DESIGN.md §9 step
+packing): ``packing`` and ``elastic-pack`` co-batch same-shape denoise
+steps across requests and must beat non-packing ``elastic`` on
+throughput while holding SLO violations (``--only small-burst`` runs
+just this slice; CI tracks it per PR).
+
 Simulation-driven (paper §5.5: the simulator is an execution backend for
 the same policy interface; fidelity measured in sim_fidelity.py).
 """
 from __future__ import annotations
 
+import argparse
 import json
 from pathlib import Path
 
@@ -102,8 +109,45 @@ def _run_mixed(out: dict):
             cp, timeouts)
 
 
-def run() -> dict:
+def _run_small_burst(out: dict):
+    """Many-small-images burst (step packing, DESIGN.md §9): one shared
+    pack signature at 2x single-task capacity.  Acceptance: packing (or
+    pack-aware elastic) improves throughput >= 1.5x over non-packing
+    elastic with no increase in SLO violation rate."""
+    from repro.diffusion.workloads import (small_image_burst_trace,
+                                           standalone_service_time)
+    for pol in ("elastic", "elastic-pack", "packing", "edf"):
+        cost = CostModel()
+        cp = ControlPlane(NUM_RANKS, make_policy(pol, NUM_RANKS), cost,
+                          SimBackend(cost, jitter=0.05))
+        trace = small_image_burst_trace(CostModel(), duration=45,
+                                        load=2.0, num_ranks=NUM_RANKS,
+                                        steps=12, seed=17)
+        for r in trace:
+            cp.submit(r, convert_request(r, DIT_IMAGE))
+        cp.run()
+        timeout = 12 * standalone_service_time("dit-image", "S",
+                                               CostModel(), 12)
+        m = _metrics_with_timeout(cp, timeout)
+        packs = [e for e in cp.events if e["ev"] == "packed_dispatch"]
+        m["packs"] = len(packs)
+        m["max_pack_batch"] = max((e["batch"] for e in packs), default=0)
+        out[f"small|burst|{pol}"] = m
+
+
+def run(only: str | None = None) -> dict:
     out = {}
+    if only == "small-burst":
+        _run_small_burst(out)
+        RESULTS.mkdir(exist_ok=True)
+        existing = {}
+        path = RESULTS / "policies_e2e.json"
+        if path.exists():
+            existing = json.loads(path.read_text())
+        existing.update(out)
+        path.write_text(json.dumps(existing, indent=1))
+        return out
+    _run_small_burst(out)
     _run_mixed(out)
     for model_cfg in (DIT_IMAGE, DIT_VIDEO):
         model = model_cfg.name
@@ -182,10 +226,75 @@ def rows(data: dict):
                 "paper_95pct"))
     out.append(("policies.best_slo_violation_reduction", best["slo"] * 1e6,
                 "paper_90pct"))
+    out.extend(small_burst_rows(data))
     return out
 
 
+def small_burst_rows(data: dict):
+    """Step-packing headline numbers (accepts partial --only runs)."""
+    out = []
+    if "small|burst|elastic" not in data:
+        return out
+    for pol in ("elastic", "elastic-pack", "packing", "edf"):
+        m = data.get(f"small|burst|{pol}")
+        if m is None:
+            continue
+        out.append((f"policies.small.burst.{pol}.mean_lat",
+                    m["mean_latency_s"] * 1e6,
+                    f"slo={m['slo_attainment']:.3f}"
+                    f";thr={m['throughput_rps']:.4f}"
+                    f";packs={m.get('packs', 0)}"
+                    f";maxb={m.get('max_pack_batch', 0)}"))
+    ela = data["small|burst|elastic"]
+    for pol in ("packing", "elastic-pack"):
+        m = data.get(f"small|burst|{pol}")
+        if m is None or not ela["throughput_rps"]:
+            continue
+        out.append((f"policies.small.{pol}_vs_elastic.throughput_x",
+                    m["throughput_rps"] / ela["throughput_rps"] * 1e6,
+                    f"{pol}={m['throughput_rps']:.3f}"
+                    f";elastic={ela['throughput_rps']:.3f}"
+                    f";accept>=1.5x"))
+        out.append((f"policies.small.{pol}_vs_elastic.slo_viol_delta",
+                    ((1 - m["slo_attainment"])
+                     - (1 - ela["slo_attainment"])) * 1e6,
+                    f"{pol}_viol={1 - m['slo_attainment']:.3f}"
+                    f";elastic_viol={1 - ela['slo_attainment']:.3f}"
+                    f";accept<=0"))
+    return out
+
+
+def check_small_burst(data: dict) -> list[str]:
+    """Step-packing acceptance gate (CI fails on regression): packing and
+    pack-aware elastic must hold >= 1.5x throughput over non-packing
+    elastic with no increase in SLO violation rate."""
+    problems = []
+    ela = data["small|burst|elastic"]
+    for pol in ("packing", "elastic-pack"):
+        m = data[f"small|burst|{pol}"]
+        ratio = m["throughput_rps"] / max(ela["throughput_rps"], 1e-9)
+        if ratio < 1.5:
+            problems.append(f"{pol} throughput {ratio:.2f}x elastic "
+                            f"(accept >= 1.5x)")
+        if (1 - m["slo_attainment"]) > (1 - ela["slo_attainment"]) + 1e-9:
+            problems.append(
+                f"{pol} SLO violations {1 - m['slo_attainment']:.3f} > "
+                f"elastic {1 - ela['slo_attainment']:.3f}")
+    return problems
+
+
 if __name__ == "__main__":
-    d = run()
-    for name, us, derived in rows(d):
+    import sys
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=["small-burst"], default=None,
+                    help="run just the step-packing workload (CI slice)")
+    args = ap.parse_args()
+    d = run(only=args.only)
+    table = rows(d) if args.only is None else small_burst_rows(d)
+    for name, us, derived in table:
         print(f"{name},{us:.1f},{derived}")
+    if args.only == "small-burst":
+        problems = check_small_burst(d)
+        for p in problems:
+            print(f"ACCEPTANCE FAILURE: {p}", file=sys.stderr)
+        sys.exit(1 if problems else 0)

@@ -8,8 +8,10 @@ the exact request trace and policy logic using measured stage costs").
 Paper: <= 4.7 pp divergence.
 
 Additionally runs the ElasticPolicy preempt/reallocate scenario
-(repro.serving.elastic_demo) on both backends and checks the canonical
-control-plane decision traces are IDENTICAL.
+(repro.serving.elastic_demo) AND the step-packing scenario
+(repro.serving.packing_demo, DESIGN.md §9) on both backends and checks
+the canonical control-plane decision traces — which canonicalize
+PackedDispatch membership — are IDENTICAL.
 """
 from __future__ import annotations
 
@@ -114,10 +116,26 @@ def _elastic_fidelity(cfg) -> dict:
     }
 
 
+def _packing_fidelity(cfg) -> dict:
+    """Step-packing fidelity (DESIGN.md §9): the PackingPolicy scenario
+    must form the SAME packs (membership included) on the simulator and
+    the thread runtime."""
+    from repro.serving.packing_demo import run_demo
+    d = run_demo(cfg)
+    return {
+        "trace_match": d["trace_match"],
+        "real_packs": [e["batch"] for e in d["packs"]["wall"]],
+        "sim_packs": [e["batch"] for e in d["packs"]["sim"]],
+        "real_completed": d["wall"]["metrics"]["completed"],
+        "sim_completed": d["sim"]["metrics"]["completed"],
+    }
+
+
 def run() -> dict:
     import dataclasses
     cfg = DIT_IMAGE.reduced()
-    out = {"elastic_trace": _elastic_fidelity(cfg)}
+    out = {"elastic_trace": _elastic_fidelity(cfg),
+           "packing_trace": _packing_fidelity(cfg)}
     for pol_name in POLICIES:
         cost = _profile_costs(cfg)
         trace0 = _mini_trace(cost)
@@ -160,6 +178,13 @@ def rows(data: dict):
                         f"identical_decision_traces={m['trace_match']}"
                         f";real_done={m['real_completed']}"
                         f";sim_done={m['sim_completed']}"))
+            continue
+        if pol == "packing_trace":
+            out.append(("sim_fidelity.packing.trace_match",
+                        1e6 if m["trace_match"] else 0.0,
+                        f"identical_packs={m['trace_match']}"
+                        f";real_packs={m['real_packs']}"
+                        f";sim_packs={m['sim_packs']}"))
             continue
         out.append((f"sim_fidelity.{pol}.gap", m["gap_pp"] * 1e4,
                     f"real={m['real_slo']:.3f};sim={m['sim_slo']:.3f};"

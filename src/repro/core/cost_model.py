@@ -1,14 +1,24 @@
-"""Profiled cost model (paper §2.2, §5.5).
+"""Profiled cost model (paper §2.2, §5.5; step packing in DESIGN.md §9).
 
 Costs are indexed by (model, task kind, shape bucket, parallel degree).
-Entries come from three sources, in priority order:
+Entries come from four sources, in priority order:
   1. online calibration — measured task durations reported by the executor
      (§5.1 "calibrate the runtime cost model with measured task durations");
   2. profiled seed table — measured offline on this container (benchmarks
      write it);
-  3. analytical fallback — roofline-style estimate from task FLOPs and an
+  3. neighbor interpolation — when a key is uncalibrated mid-trace, scale
+     a calibrated neighbor (adjacent shape bucket or degree, same
+     model|kind prefix) by the analytical ratio between the two cells;
+  4. analytical fallback — roofline-style estimate from task FLOPs and an
      SP efficiency curve (mirrors the paper's Fig. 3 shapes: large tasks
      scale well, small tasks are communication-bound).
+
+Packed (batched) denoise costs use the same hierarchy with a batch
+dimension appended to the key: :meth:`estimate_packed` prices one
+executor call that co-schedules N batch-compatible tasks (DESIGN.md §9).
+The analytical pack curve is sub-linear — collectives and per-call
+overhead are paid once, and compute is roughly free until the pack fills
+the per-rank roofline, then additive.
 """
 from __future__ import annotations
 
@@ -25,6 +35,11 @@ _REF_TOKEN_RATE = 4.0e6          # DiT tokens^1.x per second per rank
 _ENCODE_COST = 0.12              # text encode: effectively single-rank
 _DECODE_PER_MPIX = 0.35          # VAE decode per megapixel(-frame)
 
+# Step packing (DESIGN.md §9): tokens-per-rank at which one denoise call
+# saturates the device; below it, co-batched tasks ride along nearly free.
+_PACK_SAT_TOKENS = 8192
+_PACK_MEMBER_OVERHEAD = 0.04     # per extra member, fraction of base cost
+
 
 def sp_efficiency(degree: int, tokens: int) -> float:
     """Parallel efficiency of sequence parallelism (Fig. 3b shape):
@@ -35,17 +50,46 @@ def sp_efficiency(degree: int, tokens: int) -> float:
     return 1.0 / comm
 
 
+def pack_scale(batch: int, tokens: int, degree: int) -> float:
+    """Analytical duration multiplier of a pack of `batch` compatible
+    tasks versus a single task at the same (tokens, degree).
+
+    Each rank sees ``tokens/degree`` tokens per member.  Until the pack
+    fills the per-rank roofline (`_PACK_SAT_TOKENS`), added members only
+    cost a small dispatch/stacking overhead — the TetriServe observation
+    that small-shape denoise steps leave the device underutilized.
+    Beyond the knee, compute is additive.
+    """
+    if batch <= 1:
+        return 1.0
+    tok_rank = max(tokens / max(degree, 1), 1.0)
+    fill = tok_rank / _PACK_SAT_TOKENS            # roofline share of one
+    compute = max(1.0, batch * fill) / max(1.0, fill)
+    return compute + _PACK_MEMBER_OVERHEAD * (batch - 1)
+
+
 @dataclass
 class CostModel:
     table: dict = field(default_factory=dict)   # key -> seconds
     calibration: dict = field(default_factory=dict)
+    pack_table: dict = field(default_factory=dict)       # packed key -> s
+    pack_calibration: dict = field(default_factory=dict)
     ema: float = 0.5
 
     # ------------------------------------------------------------------
     @staticmethod
+    def _bucket(tokens: int) -> int:
+        return 1 << max(0, int(math.log2(max(tokens, 1))))
+
+    @staticmethod
     def _key(model: str, kind: str, tokens: int, degree: int) -> str:
-        bucket = 1 << max(0, int(math.log2(max(tokens, 1))))
+        bucket = CostModel._bucket(tokens)
         return f"{model}|{kind}|{bucket}|{degree}"
+
+    @staticmethod
+    def _pack_key(model: str, kind: str, tokens: int, degree: int,
+                  batch: int) -> str:
+        return CostModel._key(model, kind, tokens, degree) + f"|b{batch}"
 
     # ------------------------------------------------------------------
     def estimate(self, model: str, kind: str, tokens: int,
@@ -55,6 +99,9 @@ class CostModel:
             return self.calibration[key]
         if key in self.table:
             return self.table[key]
+        interp = self._interpolate(model, kind, tokens, degree)
+        if interp is not None:
+            return interp
         return self.analytical(model, kind, tokens, degree)
 
     def analytical(self, model: str, kind: str, tokens: int,
@@ -72,6 +119,97 @@ class CostModel:
         return max(work / (degree * eff), 1e-4) + 0.004 * (degree > 1)
 
     # ------------------------------------------------------------------
+    def _interpolate(self, model: str, kind: str, tokens: int,
+                     degree: int) -> Optional[float]:
+        """Mid-trace fallback for an uncalibrated key: scale the nearest
+        calibrated neighbor at the same ``model|kind`` prefix by the
+        analytical ratio between the target and neighbor cells, instead
+        of dropping all the way to the raw analytical curve.
+
+        Shape-bucket neighbors at the SAME degree are preferred: they
+        share the collective structure, so the cross-bucket analytical
+        ratio is the trustworthy part of the curve.  Degree neighbors at
+        the same bucket project ONLY through a MEASURED cross-degree
+        ratio, taken at the nearest bucket calibrated at both degrees:
+        the SP-efficiency curve is both token-dependent and exactly what
+        online calibration exists to correct (DESIGN.md §8: measured SP
+        costs need not follow it), so analytically projecting across
+        degrees would smear calibration noise into every
+        degree-comparison the policies make.  A far-away ratio source is
+        imperfect (SP efficiency shifts with tokens), but measurably
+        better than the analytical cross-degree ratio, and with no
+        measured ratio at all the estimate falls back to the analytical
+        curve rather than cross-degree projection."""
+        bucket = self._bucket(tokens)
+        anchor = self.analytical(model, kind, tokens, degree)
+        if anchor <= 0:
+            return None
+
+        def lookup(b: int, d: int) -> Optional[float]:
+            k = self._key(model, kind, b, d)
+            return self.calibration.get(k, self.table.get(k))
+
+        # 1. shape-bucket neighbors at the same degree
+        for shift in (1, 2):
+            for nb in (bucket >> shift, bucket << shift):
+                if nb < 1:
+                    continue
+                v = lookup(nb, degree)
+                if v is None:
+                    continue
+                ref = self.analytical(model, kind, nb, degree)
+                if ref > 0:
+                    return anchor * (v / ref)
+        # 2. degree neighbors at the same bucket, measured ratio only:
+        # the ratio comes from the nearest bucket calibrated at BOTH
+        # degrees.  Shifts 1-2 are provably unreachable here — a
+        # (neighbor, degree) sample there would have satisfied step 1 —
+        # so the scan starts at 3.
+        for nd in (degree // 2, degree * 2):
+            if nd < 1 or nd == degree:
+                continue
+            v = lookup(bucket, nd)
+            if v is None:
+                continue
+            for shift in range(3, 12):
+                for nb in (bucket >> shift, bucket << shift):
+                    if nb < 1:
+                        continue
+                    v_src, v_dst = lookup(nb, nd), lookup(nb, degree)
+                    if v_src and v_dst:
+                        return v * (v_dst / v_src)
+        return None
+
+    # ------------------------------------------------------------------
+    def estimate_packed(self, model: str, kind: str, tokens: int,
+                        degree: int, batch: int) -> float:
+        """Duration of ONE executor call running `batch` compatible tasks
+        (stacked along the batch axis, collectives shared — DESIGN.md §9).
+        Priority: packed calibration -> packed table -> calibrated
+        neighbor batch scaled by the analytical pack curve -> single-task
+        estimate times the analytical pack multiplier."""
+        if batch <= 1:
+            return self.estimate(model, kind, tokens, degree)
+        key = self._pack_key(model, kind, tokens, degree, batch)
+        if key in self.pack_calibration:
+            return self.pack_calibration[key]
+        if key in self.pack_table:
+            return self.pack_table[key]
+        # neighbor interpolation over the batch axis at the same prefix
+        anchor = pack_scale(batch, tokens, degree)
+        for nb in sorted(range(max(batch - 2, 2), batch + 3),
+                         key=lambda b: (abs(b - batch), b)):
+            if nb == batch:
+                continue
+            k = self._pack_key(model, kind, tokens, degree, nb)
+            v = self.pack_calibration.get(k, self.pack_table.get(k))
+            if v is not None:
+                ref = pack_scale(nb, tokens, degree)
+                if ref > 0:
+                    return v * (anchor / ref)
+        return self.estimate(model, kind, tokens, degree) * anchor
+
+    # ------------------------------------------------------------------
     def observe(self, model: str, kind: str, tokens: int, degree: int,
                 seconds: float):
         """Online calibration from measured durations (EMA)."""
@@ -80,6 +218,18 @@ class CostModel:
         self.calibration[key] = (seconds if old is None
                                  else self.ema * seconds +
                                  (1 - self.ema) * old)
+
+    def observe_packed(self, model: str, kind: str, tokens: int,
+                       degree: int, batch: int, seconds: float):
+        """Online calibration from one measured pack duration (EMA over
+        the packed key; a batch of 1 calibrates the single-task key)."""
+        if batch <= 1:
+            return self.observe(model, kind, tokens, degree, seconds)
+        key = self._pack_key(model, kind, tokens, degree, batch)
+        old = self.pack_calibration.get(key)
+        self.pack_calibration[key] = (seconds if old is None
+                                      else self.ema * seconds +
+                                      (1 - self.ema) * old)
 
     # ------------------------------------------------------------------
     def request_remaining(self, model: str, graph, degree: int = 1) -> float:
@@ -93,10 +243,14 @@ class CostModel:
     # ------------------------------------------------------------------
     def save(self, path: str | Path):
         Path(path).write_text(json.dumps(
-            {"table": self.table, "calibration": self.calibration}))
+            {"table": self.table, "calibration": self.calibration,
+             "pack_table": self.pack_table,
+             "pack_calibration": self.pack_calibration}))
 
     @classmethod
     def load(cls, path: str | Path) -> "CostModel":
         d = json.loads(Path(path).read_text())
         return cls(table=d.get("table", {}),
-                   calibration=d.get("calibration", {}))
+                   calibration=d.get("calibration", {}),
+                   pack_table=d.get("pack_table", {}),
+                   pack_calibration=d.get("pack_calibration", {}))

@@ -18,7 +18,9 @@ Each iteration performs the same sequence on either backend:
 4. wait for the next event (clock-specific: the virtual clock jumps to
    the earliest completion/arrival; the wall clock blocks briefly on the
    completion queue with an idle backoff so it never busy-spins),
-5. apply completions.
+5. apply completions (a completion keyed by a pack id fans out into
+   per-member completions inside the control plane — DESIGN.md §9 — so
+   the loop body itself is packing-agnostic).
 
 This replaces the former hand-rolled wall-clock loop in
 ``ServingEngine.serve`` which duplicated arrival release, polling, and

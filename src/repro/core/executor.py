@@ -14,6 +14,7 @@ import queue
 import threading
 import time
 import traceback
+from dataclasses import dataclass
 from typing import Any, Optional
 
 from repro.core.gfc import GroupFreeComm
@@ -23,13 +24,25 @@ from repro.core.trajectory import (ExecutionLayout, RequestGraph,
                                    TrajectoryTask)
 
 
+@dataclass
+class _PackJob:
+    """One rank's share of a batched pack dispatch (DESIGN.md §9)."""
+    pack_id: str
+    members: list                   # [(task, graph)] — shared, read-only
+    layout: Any
+    t_dispatch: float
+    desc: Any
+
+
 class ThreadBackend:
     """One worker thread per rank + a completion queue.
 
     ``adapter`` must provide
         execute(task, layout, rank, comm, graph) -> None
     which runs this rank's share of the task (GFC rendezvous inside) and,
-    on the leader rank, installs output artifact data.
+    on the leader rank, installs output artifact data — and, for step
+    packing, ``execute_packed(members, layout, rank, comm, desc)`` which
+    runs the stacked batch as ONE model call.
     """
 
     def __init__(self, adapter, num_ranks: int,
@@ -60,6 +73,9 @@ class ThreadBackend:
                 job = self._queues[rank].get(timeout=0.01)
             except queue.Empty:
                 continue
+            if isinstance(job, _PackJob):
+                self._run_pack(rank, job)
+                continue
             task, layout, graph, t_dispatch, desc, seq = job
             try:
                 self.adapter.execute(task, layout, rank, self.comm, graph,
@@ -69,42 +85,62 @@ class ThreadBackend:
                 err = f"{type(e).__name__}: {e}"
                 self.errors.append(f"rank {rank} task {task.id}: {err}\n"
                                    + traceback.format_exc())
-            with self._lock:
-                # keyed by (task, dispatch seq): a preempted task may be
-                # redispatched while the superseded dispatch still drains
-                st = self._pending[(task.id, seq)]
-                st["done"] += 1
-                if err:
-                    st["err"] = err
-                if st["done"] == layout.degree:
-                    del self._pending[(task.id, seq)]
-                    now = time.monotonic() - self.t0
-                    self._completions.put(Completion(
-                        task.id, now, now - t_dispatch,
-                        failed_ranks=() if not st.get("err") else
-                        tuple(layout.ranks),
-                        seq=seq))
+            self._finish(task.id, seq, layout, t_dispatch, err)
+
+    def _run_pack(self, rank: int, job: _PackJob):
+        try:
+            self.adapter.execute_packed(job.members, job.layout, rank,
+                                        self.comm, job.desc)
+            err = None
+        except Exception as e:   # noqa: BLE001
+            err = f"{type(e).__name__}: {e}"
+            self.errors.append(f"rank {rank} pack {job.pack_id}: {err}\n"
+                               + traceback.format_exc())
+        # pack ids are fresh per dispatch, so the pending key needs no seq
+        self._finish(job.pack_id, 0, job.layout, job.t_dispatch, err)
+
+    def _finish(self, key_id: str, seq: int, layout, t_dispatch: float,
+                err: Optional[str]):
+        with self._lock:
+            # keyed by (task, dispatch seq): a preempted task may be
+            # redispatched while the superseded dispatch still drains
+            st = self._pending[(key_id, seq)]
+            st["done"] += 1
+            if err:
+                st["err"] = err
+            if st["done"] == layout.degree:
+                del self._pending[(key_id, seq)]
+                now = time.monotonic() - self.t0
+                self._completions.put(Completion(
+                    key_id, now, now - t_dispatch,
+                    failed_ranks=() if not st.get("err") else
+                    tuple(layout.ranks),
+                    seq=seq))
 
     # ------------------------------------------------------------------
-    def dispatch(self, task: TrajectoryTask, layout: ExecutionLayout,
-                 graph: RequestGraph, now: float):
-        if not hasattr(self, "t0"):
-            self.t0 = time.monotonic()
-        # layout-aware migration of input artifacts (§5.3): move data from
-        # the producer layout to this task's layout before dispatch
+    def _prepare_task(self, task: TrajectoryTask, layout: ExecutionLayout,
+                      graph: RequestGraph):
+        """CPU-side dispatch preparation shared by the solo and packed
+        paths: layout-aware migration of input artifacts (§5.3) and
+        output artifact rank slots (ranks fill their own)."""
         for aid in task.inputs:
             art = graph.artifacts[aid]
             if art.data is not None and art.layout is not None and \
                     art.layout.ranks != layout.ranks:
                 entries = plan_migration(art.fields, art.layout, layout)
                 execute_migration(self.comm, art, layout, entries)
-        # the control plane creates ONE descriptor all ranks share (§4.3)
-        desc = self.comm.register_group(layout.ranks)
-        # pre-create output artifact rank slots (ranks fill their own)
         for aid in task.outputs:
             art = graph.artifacts[aid]
             if art.data is None:
                 art.data = {r: {} for r in layout.ranks}
+
+    def dispatch(self, task: TrajectoryTask, layout: ExecutionLayout,
+                 graph: RequestGraph, now: float):
+        if not hasattr(self, "t0"):
+            self.t0 = time.monotonic()
+        self._prepare_task(task, layout, graph)
+        # the control plane creates ONE descriptor all ranks share (§4.3)
+        desc = self.comm.register_group(layout.ranks)
         seq = task.meta.get("_seq", 0)
         with self._lock:
             self._pending[(task.id, seq)] = {"done": 0}
@@ -114,13 +150,33 @@ class ThreadBackend:
                                  seq))
 
     # ------------------------------------------------------------------
+    def dispatch_pack(self, pack_id: str, members, layout: ExecutionLayout,
+                      now: float = 0.0):
+        """Dispatch ONE job carrying N batch-compatible tasks to every
+        rank of the shared layout; the adapter runs them as one stacked
+        model call and the single completion (keyed by ``pack_id``) fans
+        out in the control plane (DESIGN.md §9)."""
+        if not hasattr(self, "t0"):
+            self.t0 = time.monotonic()
+        for task, graph in members:
+            self._prepare_task(task, layout, graph)
+        # ONE shared descriptor: the pack's collectives are a single set
+        desc = self.comm.register_group(layout.ranks)
+        with self._lock:
+            self._pending[(pack_id, 0)] = {"done": 0}
+        t_dispatch = time.monotonic() - self.t0
+        job = _PackJob(pack_id, list(members), layout, t_dispatch, desc)
+        for r in layout.ranks:
+            self._queues[r].put(job)
+
+    # ------------------------------------------------------------------
     def peek(self) -> Optional[float]:
-        try:
-            c = self._completions.get(timeout=0.005)
-            self._completions.put(c)   # put back
-            return c.finish_time
-        except queue.Empty:
-            return None
+        """Non-destructive look at the earliest queued completion: the
+        former get/put-back implementation raced concurrent ``poll``
+        calls and burned a 5 ms timeout on every idle iteration."""
+        with self._completions.mutex:
+            q = self._completions.queue
+            return q[0].finish_time if q else None
 
     def poll(self) -> list[Completion]:
         out = []

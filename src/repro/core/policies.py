@@ -6,7 +6,10 @@ list of control-plane actions (``Dispatch`` / ``Reallocate`` /
 and layout choice — dependency tracking, dispatch, dynamic groups, and
 migration live in the runtime, which is the paper's central design claim.
 The classic policies below emit only ``Dispatch``; :class:`ElasticPolicy`
-exercises the full vocabulary.
+exercises the full vocabulary.  :class:`PackingPolicy` (and
+``ElasticPolicy(pack=True)``) additionally co-schedules batch-compatible
+denoise steps from different requests via ``PackedDispatch``
+(DESIGN.md §9 step packing).
 """
 from __future__ import annotations
 
@@ -14,8 +17,9 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional
 
-from repro.core.scheduler import (Action, Decision, Dispatch, Policy,
-                                  Preempt, Reallocate, SchedulerView)
+from repro.core.scheduler import (Action, Decision, Dispatch, PackedDispatch,
+                                  Policy, Preempt, Reallocate, SchedulerView,
+                                  pack_signature)
 from repro.core.trajectory import ExecutionLayout
 
 
@@ -24,6 +28,87 @@ def _contiguous(free: list[int], k: int) -> Optional[tuple[int, ...]]:
     if len(free) < k:
         return None
     return tuple(free[:k])
+
+
+def _edf_key(trg) -> tuple:
+    """EDF ordering with a tie-break on the REQUEST id: request ids are
+    identical on both execution backends (the caller names them), while
+    task ids come from a process-global counter whose lexicographic
+    order differs between legs.  A request has at most one ready task
+    (its trajectory is a chain), so this is a total order."""
+    t, req, _ = trg
+    return (req.deadline if req.deadline is not None else math.inf,
+            req.arrival, req.id)
+
+
+def _pack_slack_ok(view: SchedulerView, model: str, tokens: int,
+                   degree: int, members: list, extra,
+                   margin: float = 1.05) -> bool:
+    """Deadline-slack admission rule (DESIGN.md §9): `extra` may join the
+    pack only if no member of the enlarged pack is pushed past an SLO it
+    could still meet — the batched step costs ``estimate_packed(b+1)``
+    and each member then finishes its remaining trajectory solo.  A
+    member whose deadline is unmeetable even at FULL parallelism never
+    blocks admission: its deadline is sunk cost, and batching it is
+    strictly cheaper for everyone else than a private rank set.  (The
+    sunk test must use full parallelism, not the pack's degree — a
+    request that only meets its SLO at a higher SP degree must fall
+    through to a wide solo dispatch, not be absorbed into a narrow
+    pack.)"""
+    cost = view.cost
+    trial = members + [extra]
+    dur = cost.estimate_packed(model, "denoise", tokens, degree,
+                               len(trial))
+    step_solo = cost.estimate(model, "denoise", tokens, degree)
+    for t, req, g in trial:
+        if req.deadline is None:
+            continue
+        rest = max(cost.request_remaining(req.model, g, degree)
+                   - step_solo, 0.0)
+        if view.now + margin * (dur + rest) <= req.deadline:
+            continue            # meets its SLO inside this pack
+        if view.now + cost.request_remaining(req.model, g,
+                                             view.num_ranks) \
+                <= req.deadline:
+            return False        # rescuable outside the pack — don't absorb
+    return True
+
+
+def _pending_denoise_index(view: SchedulerView) -> tuple[dict, set]:
+    """Build once per schedule point: (signature -> live request ids
+    with a pending denoise of that signature, request ids with any
+    running task).  Makes per-task imminence queries O(peers) instead of
+    O(requests x tasks)."""
+    idx: dict[tuple, set] = {}
+    for rid, req in view.requests.items():
+        if req.failed or req.done_time is not None \
+                or req.arrival > view.now:
+            continue
+        g = view.graphs.get(rid)
+        if g is None:
+            continue
+        for t in g.tasks.values():
+            if t.kind == "denoise" and t.state == "pending":
+                idx.setdefault((req.model, t.meta.get("tokens", 4096)),
+                               set()).add(rid)
+    running_reqs = {task.request_id for task, _ in view.running.values()}
+    return idx, running_reqs
+
+
+def _imminent_peer(sig: tuple, exclude: set, dispatched_reqs: set,
+                   peer_idx: dict, running_reqs: set) -> bool:
+    """True when a same-signature request will reach its next denoise
+    boundary without any new scheduling decision: its previous task is
+    running (or was dispatched this schedule point), so waiting one
+    boundary is guaranteed to offer a larger pack.  Purely structural —
+    no wall-time thresholds — so simulator and thread backend agree
+    (DESIGN.md §9)."""
+    for rid in peer_idx.get(sig, ()):
+        if rid in exclude:
+            continue
+        if rid in running_reqs or rid in dispatched_reqs:
+            return True
+    return False
 
 
 class LegacyPolicy(Policy):
@@ -183,6 +268,106 @@ class EDFPolicy(Policy):
         return out
 
 
+class PackingPolicy(Policy):
+    """TetriServe-style step packing (DESIGN.md §9).
+
+    Denoise steps from different requests that share a
+    :func:`pack_signature` (same model, same token shape) are
+    co-scheduled as ONE batched executor call on a shared rank set.
+    Packs are formed greedily in EDF order under a deadline-slack
+    constraint: a task is never admitted if the enlarged pack's batched
+    step would push any member past its SLO.  A pack below ``max_pack``
+    may also *hold* for one trajectory boundary when a compatible peer is
+    imminent (its previous task is running or was dispatched this very
+    schedule point) and every member can afford the wait — a structural
+    trigger, so both execution backends make the same call.  Encode and
+    decode stages dispatch unpacked at degree 1.
+    """
+    name = "packing"
+
+    def __init__(self, degree: int = 1, max_pack: int = 8,
+                 hold_for_peers: bool = True, slack_margin: float = 1.05):
+        self.degree = degree
+        self.max_pack = max_pack
+        self.hold_for_peers = hold_for_peers
+        self.slack_margin = slack_margin
+
+    # -- helpers -------------------------------------------------------
+    def _form_pack(self, view: SchedulerView, sig: tuple, members: list,
+                   dispatched_reqs: set, peer_idx: dict,
+                   running_reqs: set) -> Optional[list]:
+        """Pop a greedy, slack-feasible pack off the EDF-sorted member
+        list; ``None`` means hold this group for an imminent peer."""
+        model, tokens = sig
+        cost = view.cost
+        pack = [members.pop(0)]
+        i = 0
+        while i < len(members) and len(pack) < self.max_pack:
+            if _pack_slack_ok(view, model, tokens, self.degree, pack,
+                              members[i], self.slack_margin):
+                pack.append(members.pop(i))
+            else:
+                i += 1
+        if self.hold_for_peers and len(pack) < self.max_pack and \
+                _imminent_peer(sig, {req.id for _, req, _ in pack},
+                               dispatched_reqs, peer_idx, running_reqs):
+            # waiting costs at most ~one solo step (the peer's boundary)
+            step_solo = cost.estimate(model, "denoise", tokens, self.degree)
+            dur = cost.estimate_packed(model, "denoise", tokens,
+                                       self.degree, len(pack) + 1)
+            can_wait = all(
+                req.deadline is None or
+                view.now + step_solo + self.slack_margin * (
+                    dur + max(cost.request_remaining(req.model, g,
+                                                     self.degree)
+                              - step_solo, 0.0)) <= req.deadline
+                for _, req, g in pack)
+            if can_wait:
+                members[:0] = pack          # put back in EDF position
+                return None
+        return pack
+
+    # -- policy --------------------------------------------------------
+    def schedule(self, view: SchedulerView) -> list[Action]:
+        actions: list[Action] = []
+        free = list(view.free_ranks)
+        ready = sorted(view.ready, key=_edf_key)
+        dispatched_reqs: set[str] = set()
+        peer_idx, running_reqs = _pending_denoise_index(view)
+        denoise = []
+        for t, req, g in ready:
+            if t.kind in ("encode", "decode"):
+                if free:
+                    actions.append(Dispatch(
+                        t.id, ExecutionLayout((free.pop(0),))))
+                    dispatched_reqs.add(req.id)
+            else:
+                denoise.append((t, req, g))
+        groups: dict[tuple, list] = {}
+        for trg in denoise:
+            groups.setdefault(pack_signature(trg[0], trg[1]),
+                              []).append(trg)
+        for sig in sorted(groups, key=lambda s: _edf_key(groups[s][0])):
+            members = groups[sig]
+            while members and len(free) >= self.degree:
+                pack = self._form_pack(view, sig, members,
+                                       dispatched_reqs, peer_idx,
+                                       running_reqs)
+                if pack is None:
+                    break                   # held for an imminent peer
+                ranks = tuple(free[:self.degree])
+                free = free[self.degree:]
+                dispatched_reqs.update(req.id for _, req, _ in pack)
+                if len(pack) == 1:
+                    actions.append(Dispatch(pack[0][0].id,
+                                            ExecutionLayout(ranks)))
+                else:
+                    actions.append(PackedDispatch(
+                        tuple(t.id for t, _, _ in pack),
+                        ExecutionLayout(ranks)))
+        return actions
+
+
 class ElasticPolicy(Policy):
     """Elastic scheduling over the full action vocabulary (§3.2, §5.4).
 
@@ -211,10 +396,15 @@ class ElasticPolicy(Policy):
     def __init__(self, candidate_degrees: Optional[list[int]] = None,
                  max_degree: Optional[int] = None,
                  shrink_queue_factor: float = 1.0,
-                 preempt_min_degree: int = 2):
+                 preempt_min_degree: int = 2,
+                 pack: bool = False, max_pack: int = 8):
         self.candidates = candidate_degrees
         self.max_degree = max_degree
         self.shrink_queue_factor = shrink_queue_factor
+        # step packing (DESIGN.md §9): when on, compatible denoise
+        # dispatches of one schedule point merge into PackedDispatch
+        self.pack = pack
+        self.max_pack = max_pack
         # Preemption takes effect at the victim's device boundary (the
         # in-flight slice cannot be killed on either backend), so evicting
         # a single-rank task frees its rank no earlier than letting it
@@ -246,6 +436,37 @@ class ElasticPolicy(Policy):
                 return d
         return cands[-1]
 
+    def _pack_hold_ok(self, view, t, req, g, degree, dispatched,
+                      peer_idx, running_reqs) -> bool:
+        """Hold a lone denoise step for one boundary when a compatible
+        peer is imminent, so the two chains align and co-batch from the
+        next step on.  Never holds when enough peers are already ready
+        to fill a pack, and never when waiting would cost a deadline
+        still meetable at ANY parallelism (truly sunk deadlines hold
+        freely — aligning them only helps throughput)."""
+        sig = pack_signature(t, req)
+        peers_ready = sum(
+            1 for t2, r2, _ in view.ready if t2.kind == "denoise"
+            and pack_signature(t2, r2) == sig)
+        if peers_ready >= self.max_pack:
+            return False
+        if not _imminent_peer(sig, {req.id}, dispatched, peer_idx,
+                              running_reqs):
+            return False
+        if req.deadline is None:
+            return True
+        cost = view.cost
+        step_solo = cost.estimate(req.model, "denoise", sig[1], degree)
+        rest = max(cost.request_remaining(req.model, g, degree)
+                   - step_solo, 0.0)
+        dur2 = cost.estimate_packed(req.model, "denoise", sig[1], degree, 2)
+        if view.now + step_solo + 1.05 * (dur2 + rest) <= req.deadline:
+            return True         # can afford the one-boundary wait
+        # cannot afford the wait: hold only a truly sunk deadline
+        return view.now + cost.request_remaining(req.model, g,
+                                                 view.num_ranks) \
+            > req.deadline
+
     # -- policy --------------------------------------------------------
     def schedule(self, view: SchedulerView) -> list[Action]:
         actions: list[Action] = []
@@ -264,12 +485,14 @@ class ElasticPolicy(Policy):
         ready = [trg for trg in view.ready
                  if not (trg[0].kind == "denoise"
                          and trg[1].id in view.pinned)]
+        # tie-breaks use request ids (stable across backends; task ids
+        # come from a process-global counter — see _edf_key)
         slo_ready = sorted(
             [trg for trg in ready if trg[1].deadline is not None],
-            key=lambda trg: (trg[1].deadline, trg[1].arrival, trg[0].id))
+            key=lambda trg: (trg[1].deadline, trg[1].arrival, trg[1].id))
         be_ready = sorted(
             [trg for trg in ready if trg[1].deadline is None],
-            key=lambda trg: (trg[1].arrival, trg[0].id))
+            key=lambda trg: (trg[1].arrival, trg[1].id))
 
         queue_depth = len(view.ready)
 
@@ -313,12 +536,15 @@ class ElasticPolicy(Policy):
         reclaiming = pending_reclaim + shrink_reclaim
         lack = min(demand, view.num_ranks) - len(free) - reclaiming
         if reclaiming == 0:
+            # tie-break on request id (stable across backends; at most
+            # one running denoise per request — see _edf_key)
             victims = sorted(
                 [(t, lay) for t, lay in view.running.values()
                  if view.requests[t.request_id].deadline is None
                  and t.id not in view.preempting
                  and lay.degree >= self.preempt_min_degree],
-                key=lambda tl: (-tl[1].degree, tl[0].id))
+                key=lambda tl: (-tl[1].degree, tl[0].request_id,
+                                tl[0].id))
             for t, lay in victims:
                 if lack <= 0:
                     break
@@ -373,29 +599,65 @@ class ElasticPolicy(Policy):
         # count ranks an incomplete SLO request still needs beyond what
         # it holds; best-effort work may not eat into that reservation
         granted: dict[str, int] = {}    # ranks given out THIS pass
+        # open packs of THIS pass: compatible denoise placements share
+        # one rank set (DESIGN.md §9); a list, since two packs of the
+        # same signature may coexist once the first fills to max_pack
+        open_packs: list[dict] = []
+        if self.pack:
+            peer_idx, running_reqs = _pending_denoise_index(view)
 
-        def dispatch(t, req, g, k):
+        def try_join(t, req, g) -> bool:
+            if not (self.pack and t.kind == "denoise"):
+                return False
+            sig = pack_signature(t, req)
+            for pk in open_packs:
+                if pk["sig"] != sig or len(pk["members"]) >= self.max_pack:
+                    continue
+                if _pack_slack_ok(view, sig[0], sig[1], pk["k"],
+                                  pk["members"], (t, req, g)):
+                    pk["members"].append((t, req, g))
+                    granted[req.id] = granted.get(req.id, 0) + pk["k"]
+                    return True
+            return False
+
+        def dispatch(t, req, g, k) -> bool:
+            # callers attempt try_join first; by this point the task
+            # needs its own ranks
             nonlocal free
+            if k <= 0 or k > len(free):
+                return False
             ranks = tuple(free[:k])
             free = free[k:]
             granted[req.id] = granted.get(req.id, 0) + k
-            actions.append(Dispatch(t.id, ExecutionLayout(ranks)))
+            if self.pack and t.kind == "denoise":
+                open_packs.append({"sig": pack_signature(t, req), "k": k,
+                                   "members": [(t, req, g)],
+                                   "ranks": ranks})
+            else:
+                actions.append(Dispatch(t.id, ExecutionLayout(ranks)))
+            return True
 
         for t, req, g in slo_ready:
-            if not free:
-                break
             if t.kind in ("encode", "decode"):
-                dispatch(t, req, g, 1)
+                if free:
+                    dispatch(t, req, g, 1)
+                continue
+            if try_join(t, req, g):
                 continue
             need = self._need_degree(view, req, g)
-            if need > len(free):
+            # bounded hold (DESIGN.md §9): wait one boundary for an
+            # imminent compatible peer when that cannot cost the SLO
+            if self.pack and self._pack_hold_ok(view, t, req, g, need,
+                                                set(granted), peer_idx,
+                                                running_reqs):
+                continue
+            if not dispatch(t, req, g, need):
                 if reclaiming:
                     continue        # preempted ranks arrive at a boundary
                 feas = [d for d in cands if d <= len(free)]
                 if not feas:
                     continue
-                need = feas[-1]
-            dispatch(t, req, g, need)
+                dispatch(t, req, g, feas[-1])
 
         slo_reserve = 0
         for rid, req in sorted(view.requests.items()):
@@ -411,21 +673,47 @@ class ElasticPolicy(Policy):
                 self._need_degree(view, req, g) - held, 0)
         budget = max(len(free) - slo_reserve, 0)
         for t, req, g in be_ready:
-            if budget <= 0:
-                break
             if t.kind in ("encode", "decode"):
-                dispatch(t, req, g, 1)
-                budget -= 1
+                if budget >= 1 and free:
+                    dispatch(t, req, g, 1)
+                    budget -= 1
+                continue
+            # a best-effort step may ride along on an open pack even with
+            # zero budget: it consumes no reserved ranks, and the slack
+            # rule protects the pack's SLO members
+            if try_join(t, req, g):
+                continue
+            if self.pack and self._pack_hold_ok(view, t, req, g, 1,
+                                                set(granted), peer_idx,
+                                                running_reqs):
+                continue
+            if budget <= 0:
                 continue
             if slo_ready or queue_depth > view.num_ranks:
                 k = 1
+            elif self.pack and sum(
+                    1 for t2, r2, _ in be_ready if t2.kind == "denoise"
+                    and pack_signature(t2, r2) == pack_signature(t, req)
+                    ) > 1:
+                k = 1       # co-batch compatible peers instead of growing
             else:
                 feas = [d for d in cands if d <= budget]
                 k = feas[-1] if feas else 0
             if k <= 0:
                 continue
-            dispatch(t, req, g, k)
-            budget -= k
+            if dispatch(t, req, g, k):
+                budget -= k
+
+        # flush open packs (a pack of one is a plain dispatch)
+        for pk in open_packs:
+            ms = pk["members"]
+            if len(ms) == 1:
+                actions.append(Dispatch(ms[0][0].id,
+                                        ExecutionLayout(pk["ranks"])))
+            else:
+                actions.append(PackedDispatch(
+                    tuple(t.id for t, _, _ in ms),
+                    ExecutionLayout(pk["ranks"])))
         return actions
 
 
@@ -439,5 +727,7 @@ def make_policy(name: str, num_ranks: int) -> Policy:
         "srtf-spmax": lambda: SRTFPolicy(sp_degree=num_ranks),
         "edf": lambda: EDFPolicy(),
         "elastic": lambda: ElasticPolicy(),
+        "elastic-pack": lambda: ElasticPolicy(pack=True),
+        "packing": lambda: PackingPolicy(),
     }
     return table[name]()

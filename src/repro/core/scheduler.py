@@ -21,7 +21,14 @@ schedulable resource:
   either backend), the ranks free, and the task requeues with its input
   artifacts intact;
 * :class:`Cancel`     — abort a request; running tasks drain and their
-  outputs are discarded.
+  outputs are discarded;
+* :class:`PackedDispatch` — co-schedule a *pack* of batch-compatible
+  denoise tasks (same model, same token shape, one shared layout) from
+  different requests as ONE executor call (DESIGN.md §9).  The control
+  plane validates compatibility, the backend runs the stacked batch, and
+  the single pack completion fans out into per-task completions here.
+  Preempting any member evicts the whole pack (the batched call is one
+  device slice); every member requeues with inputs intact.
 
 Dispatch completion is separated from device completion: `dispatch()`
 returns after CPU-side preparation; the backend reports device completion
@@ -88,7 +95,26 @@ class Cancel:
     request_id: str
 
 
-Action = Union[Dispatch, Reallocate, Preempt, Cancel]
+@dataclass
+class PackedDispatch:
+    """Co-schedule batch-compatible denoise tasks from different requests
+    onto one rank set as a single batched executor call (DESIGN.md §9)."""
+    task_ids: tuple[str, ...]
+    layout: ExecutionLayout
+
+
+Action = Union[Dispatch, Reallocate, Preempt, Cancel, PackedDispatch]
+
+
+def pack_signature(task: TrajectoryTask, request: Request) -> tuple:
+    """Batch-compatibility key (DESIGN.md §9): tasks may share one
+    executor call only when stacking their latents is shape-safe — same
+    model and the same exact token count (the per-rank shards of every
+    member must match elementwise, so the "shape bucket" here is the
+    exact count, a refinement of the cost model's power-of-two bucket).
+    The parallel degree is shared by construction: a pack has ONE layout.
+    """
+    return (request.model, task.meta.get("tokens", 4096))
 
 
 @dataclass
@@ -131,6 +157,10 @@ class ControlPlane:
         # elastic state
         self.pinned: dict[str, ExecutionLayout] = {}
         self.preempting: dict[str, str] = {}    # task_id -> requeue|drop
+        # step packing (DESIGN.md §9)
+        self.packs: dict[str, dict] = {}        # pack_id -> record
+        self._pack_of: dict[str, str] = {}      # member task_id -> pack_id
+        self._pack_seq = itertools.count()
         # pending (not yet released) arrivals
         self._arrivals: list[tuple[float, int, str]] = []
         self._sub_seq = itertools.count()
@@ -193,20 +223,29 @@ class ControlPlane:
     def _ranks_ok(self, layout: ExecutionLayout) -> bool:
         return all(0 <= r < self.num_ranks for r in layout.ranks)
 
-    def _dispatch(self, task: TrajectoryTask, layout: ExecutionLayout,
-                  graph: RequestGraph, *, via_pin: bool = False):
+    def _mark_running(self, task: TrajectoryTask, layout: ExecutionLayout,
+                      extra_ev: Optional[dict] = None) -> int:
+        """Shared dispatch bookkeeping (solo and packed): task state,
+        dispatch-sequence bump, running registry, trace event.  Returns
+        the dispatch sequence number of THIS dispatch."""
         task.state = "running"
         task.layout = layout
         task.dispatch_time = self.now
         task.meta["_seq"] = task.meta.get("_seq", 0) + 1
-        self.free_ranks -= set(layout.ranks)
         self.running[task.id] = (task, layout)
         ev = {"t": self.now, "ev": "dispatch", "task": task.id,
               "req": task.request_id, "kind": task.kind,
               "step": task.step_index, "ranks": list(layout.ranks)}
-        if via_pin:
-            ev["realloc"] = True
+        if extra_ev:
+            ev.update(extra_ev)
         self.events.append(ev)
+        return task.meta["_seq"]
+
+    def _dispatch(self, task: TrajectoryTask, layout: ExecutionLayout,
+                  graph: RequestGraph, *, via_pin: bool = False):
+        self._mark_running(task, layout,
+                           {"realloc": True} if via_pin else None)
+        self.free_ranks -= set(layout.ranks)
         self.backend.dispatch(task, layout, graph, self.now)
 
     def _apply_dispatch(self, d: Dispatch, view: SchedulerView) -> bool:
@@ -225,6 +264,65 @@ class ControlPlane:
                 return True
         return False
 
+    def _apply_packed(self, a: PackedDispatch, view: SchedulerView) -> bool:
+        """Validate and co-dispatch a pack (DESIGN.md §9): members must be
+        ready denoise tasks from DISTINCT requests sharing one
+        :func:`pack_signature`; the shared layout must be free.  A pack of
+        one degenerates to a plain dispatch."""
+        ids = tuple(a.task_ids)
+        if not ids or len(set(ids)) != len(ids):
+            return False
+        if any(tid in self.running for tid in ids):
+            return False
+        if not self._ranks_ok(a.layout) or \
+                any(r not in self.free_ranks for r in a.layout.ranks):
+            return False
+        by_id = {t.id: (t, req, g) for t, req, g in view.ready}
+        members = []
+        for tid in ids:
+            if tid not in by_id:
+                return False
+            t, req, g = by_id[tid]
+            if t.state != "pending" or t.kind != "denoise":
+                return False
+            members.append((t, req, g))
+        sigs = {pack_signature(t, req) for t, req, _ in members}
+        if len(sigs) != 1:
+            return False                # mixed models or token shapes
+        rids = [req.id for _, req, _ in members]
+        if len(set(rids)) != len(rids):
+            return False                # denoise steps of one request chain
+        if len(members) == 1:
+            t, req, g = members[0]
+            self.pinned.pop(req.id, None)
+            self._dispatch(t, a.layout, g)
+            return True
+        model, tokens = next(iter(sigs))
+        pack_id = f"pack-{next(self._pack_seq)}"
+        membership = [(req.id, t.step_index) for t, req, _ in members]
+        seqs: dict[str, int] = {}
+        for t, req, g in members:
+            # an explicit placement overrides and clears a pin
+            self.pinned.pop(req.id, None)
+            seqs[t.id] = self._mark_running(
+                t, a.layout, {"pack": pack_id,
+                              "pack_members": list(membership)})
+            self._pack_of[t.id] = pack_id
+        self.free_ranks -= set(a.layout.ranks)
+        self.packs[pack_id] = {
+            "members": tuple(t.id for t, _, _ in members),
+            "layout": a.layout, "model": model, "tokens": tokens,
+            "seqs": seqs,
+        }
+        self.events.append({"t": self.now, "ev": "packed_dispatch",
+                            "pack": pack_id, "batch": len(members),
+                            "reqs": [r for r, _ in membership],
+                            "tokens": tokens,
+                            "ranks": list(a.layout.ranks)})
+        self.backend.dispatch_pack(
+            pack_id, [(t, g) for t, _, g in members], a.layout, self.now)
+        return True
+
     def _apply_reallocate(self, a: Reallocate) -> bool:
         req = self.requests.get(a.request_id)
         if req is None or req.failed or req.done_time is not None:
@@ -240,17 +338,29 @@ class ControlPlane:
     def _apply_preempt(self, a: Preempt) -> bool:
         if a.task_id not in self.running or a.task_id in self.preempting:
             return False
-        task, layout = self.running[a.task_id]
-        # eviction revokes the request's reallocation pin — otherwise
-        # _autodispatch_pinned would re-dispatch the requeued task at the
-        # pinned width before the policy runs, livelocking the plane in a
-        # preempt/requeue cycle
-        self.pinned.pop(task.request_id, None)
-        self.preempting[a.task_id] = "requeue"
-        self.events.append({"t": self.now, "ev": "preempt",
-                            "task": task.id, "req": task.request_id,
-                            "kind": task.kind, "step": task.step_index,
-                            "ranks": list(layout.ranks)})
+        # preempting any pack member evicts the whole pack: the batched
+        # call is one device slice, so every member's in-flight slice
+        # drains together and every member requeues with inputs intact
+        pack_id = self._pack_of.get(a.task_id)
+        victims = (self.packs[pack_id]["members"] if pack_id
+                   else (a.task_id,))
+        for tid in victims:
+            if tid in self.preempting or tid not in self.running:
+                continue            # member already failed-out or evicted
+            task, layout = self.running[tid]
+            # eviction revokes the request's reallocation pin — otherwise
+            # _autodispatch_pinned would re-dispatch the requeued task at
+            # the pinned width before the policy runs, livelocking the
+            # plane in a preempt/requeue cycle
+            self.pinned.pop(task.request_id, None)
+            self.preempting[tid] = "requeue"
+            ev = {"t": self.now, "ev": "preempt",
+                  "task": task.id, "req": task.request_id,
+                  "kind": task.kind, "step": task.step_index,
+                  "ranks": list(layout.ranks)}
+            if pack_id:
+                ev["pack"] = pack_id
+            self.events.append(ev)
         return True
 
     def _apply_cancel(self, a: Cancel) -> bool:
@@ -271,6 +381,8 @@ class ControlPlane:
         """Validate and apply one control-plane action."""
         if isinstance(action, Dispatch):
             return self._apply_dispatch(action, view or self._view())
+        if isinstance(action, PackedDispatch):
+            return self._apply_packed(action, view or self._view())
         if isinstance(action, Reallocate):
             return self._apply_reallocate(action)
         if isinstance(action, Preempt):
@@ -319,6 +431,34 @@ class ControlPlane:
             art.data = None
 
     def on_completion(self, c: Completion):
+        if c.task_id in self.packs:
+            return self._on_pack_completion(c)
+        self._complete_task(c)
+
+    def _on_pack_completion(self, c: Completion):
+        """One device completion for a pack fans out into per-member
+        completions (DESIGN.md §9); the measured duration calibrates the
+        BATCHED cost curve (one sample per call, not per member — the
+        members shared the call, so attributing the full duration to each
+        single-task key would poison the unbatched calibration)."""
+        rec = self.packs.pop(c.task_id)
+        self.now = max(self.now, c.finish_time)
+        for tid in rec["members"]:
+            self._pack_of.pop(tid, None)
+            if tid not in self.running:
+                continue
+            # fan out with the seq recorded at PACK dispatch time, so a
+            # member that was failed-out and redispatched solo keeps the
+            # superseded-dispatch guard: this stale fan-out is dropped
+            self._complete_task(Completion(
+                tid, c.finish_time, c.duration,
+                failed_ranks=c.failed_ranks,
+                seq=rec["seqs"][tid]), observe=False)
+        self.cost.observe_packed(rec["model"], "denoise", rec["tokens"],
+                                 rec["layout"].degree, len(rec["members"]),
+                                 c.duration)
+
+    def _complete_task(self, c: Completion, observe: bool = True):
         if c.task_id not in self.running:
             return                  # stale event from a failed dispatch
         task = self.running[c.task_id][0]
@@ -356,10 +496,12 @@ class ControlPlane:
             art.materialized = True
             if art.layout is None:
                 art.layout = layout
-        # online cost-model calibration (§5.1)
-        self.cost.observe(self.requests[task.request_id].model, task.kind,
-                          task.meta.get("tokens", 4096), layout.degree,
-                          c.duration)
+        # online cost-model calibration (§5.1); pack members skip this —
+        # the pack observes ONE batched sample instead
+        if observe:
+            self.cost.observe(self.requests[task.request_id].model,
+                              task.kind, task.meta.get("tokens", 4096),
+                              layout.degree, c.duration)
         req = self.requests[task.request_id]
         if graph.is_done() and req.done_time is None:
             req.done_time = c.finish_time
@@ -372,7 +514,14 @@ class ControlPlane:
         recovery — re-enqueue the task; its input artifacts are intact."""
         task, layout = self.running.pop(task_id)
         self.preempting.pop(task_id, None)
-        self.free_ranks |= set(layout.ranks)
+        pack_id = self._pack_of.pop(task_id, None)
+        # a pack member shares its rank set with its siblings: the ranks
+        # free only when no sibling still runs on them (at the pack's
+        # boundary, via the surviving members' completion fan-out)
+        if pack_id is None or not any(
+                tid in self.running
+                for tid in self.packs[pack_id]["members"]):
+            self.free_ranks |= set(layout.ranks)
         if requeue:
             task.state = "pending"
             task.layout = None
@@ -432,6 +581,10 @@ def trace_signature(events: list[dict],
     virtual-clock runs of the same workload under the same policy should
     produce identical signatures even though timestamps (and the
     interleaving of events on disjoint rank sets) differ.
+
+    Packed dispatches additionally record their full membership —
+    canonicalized as ``(arrival index, step)`` pairs — so two traces only
+    match when they formed the SAME packs (DESIGN.md §9).
     """
     order: dict[str, int] = {}
     for ev in events:
@@ -442,7 +595,11 @@ def trace_signature(events: list[dict],
         if ev["ev"] not in kinds:
             continue
         idx = order.get(ev.get("req"), -1)
-        per_req.setdefault(idx, []).append(
-            (ev["ev"], ev.get("kind"), ev.get("step"),
-             tuple(ev.get("ranks", ()))))
+        rec = (ev["ev"], ev.get("kind"), ev.get("step"),
+               tuple(ev.get("ranks", ())))
+        members = ev.get("pack_members")
+        if members:
+            rec += (tuple(sorted((order.get(rid, -1), step)
+                                 for rid, step in members)),)
+        per_req.setdefault(idx, []).append(rec)
     return [(idx, tuple(seq)) for idx, seq in sorted(per_req.items())]

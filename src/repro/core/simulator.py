@@ -87,13 +87,47 @@ class SimBackend:
                 mig += m
                 self.migrated_bytes += art.nbytes
                 art.layout = layout      # artifact now lives here
+        # duration excludes migration, matching the thread backend (which
+        # migrates before stamping t_dispatch): calibration must price the
+        # STEP — migration is priced separately at every dispatch, and
+        # folding it in would double-count it in future estimates
         finish = now + self.dispatch_overhead + mig + dur
-        c = Completion(task.id, finish, dur + mig,
+        c = Completion(task.id, finish, dur,
                        seq=task.meta.get("_seq", 0))
         heapq.heappush(self._heap, (finish, next(self._n), c))
         # outputs adopt the task layout on completion (ControlPlane sets it)
         for aid in task.outputs:
             graph.artifacts[aid].layout = layout
+
+    # ------------------------------------------------------------------
+    def dispatch_pack(self, pack_id: str, members, layout: ExecutionLayout,
+                      now: float):
+        """One batched completion for a pack of compatible denoise tasks
+        (DESIGN.md §9): duration comes from the BATCHED cost curve
+        (collectives paid once, compute sub-linear until the roofline);
+        migration is priced per member input that lives elsewhere."""
+        task0, graph0 = members[0]
+        model = graph0.request.model
+        tokens = task0.meta.get("tokens", 4096)
+        dur = self.cost.estimate_packed(model, "denoise", tokens,
+                                        layout.degree, len(members))
+        if self.jitter:
+            dur *= 1.0 + self.jitter * (self._rand() - 0.5)
+        mig = 0.0
+        for task, graph in members:
+            for aid in task.inputs:
+                art = graph.artifacts[aid]
+                if art.layout is not None and \
+                        art.layout.ranks != layout.ranks:
+                    mig += migration_seconds(art.nbytes, art.layout, layout)
+                    self.migrated_bytes += art.nbytes
+                    art.layout = layout      # artifact now lives here
+        finish = now + self.dispatch_overhead + mig + dur
+        c = Completion(pack_id, finish, dur)     # duration: step only
+        heapq.heappush(self._heap, (finish, next(self._n), c))
+        for task, graph in members:
+            for aid in task.outputs:
+                graph.artifacts[aid].layout = layout
 
     # ------------------------------------------------------------------
     def peek(self) -> Optional[float]:

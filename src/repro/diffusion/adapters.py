@@ -1,6 +1,13 @@
 """Model adapters (paper §5.2): request converter + task executors +
 artifact codecs behind a narrow interface, so policies never see model
 internals and new pipelines only add an adapter.
+
+The converter records each denoise task's exact token count in
+``task.meta["tokens"]``; together with the request's model name it forms
+the *pack signature* (``core/scheduler.py::pack_signature``) that
+decides which denoise steps may share one batched executor call
+(DESIGN.md §9 step packing).  Executors that support packing expose
+``execute_packed`` next to ``execute`` (see ``diffusion/pipeline.py``).
 """
 from __future__ import annotations
 

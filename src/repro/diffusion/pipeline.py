@@ -64,6 +64,61 @@ class DiTPipeline:
             raise ValueError(task.kind)
 
     # ------------------------------------------------------------------
+    def execute_packed(self, members, layout: ExecutionLayout, rank: int,
+                       comm: GroupFreeComm, desc: GroupDescriptor):
+        """Step packing (DESIGN.md §9): run this rank's share of N
+        batch-compatible denoise tasks as ONE batched forward.
+
+        Latent shards are stacked along the batch axis (the control plane
+        guarantees identical token shapes), per-member sigmas ride the
+        batched timestep vector, and the SP KV all-gather runs ONCE over
+        the stacked tensors — one set of GFC collectives amortized over
+        the pack.  Each member's Euler update then uses its own sigma
+        pair, and outputs land in per-request artifacts (no cross-request
+        state is shared beyond the stacked forward)."""
+        xs, txts, t_steps, sig_pairs = [], [], [], []
+        for task, graph in members:
+            req = graph.request
+            txts.append(graph.artifacts[task.inputs[0]].data[rank]["embeds"])
+            xs.append(graph.artifacts[task.inputs[1]].data[rank]["latent"])
+            sigmas = schedule.flow_sigmas(req.steps)
+            step = task.meta["step"]
+            s_now = float(sigmas[step])
+            s_next = (float(sigmas[step + 1]) if step + 1 < req.steps
+                      else 0.0)
+            sig_pairs.append((s_now, s_next))
+            t_steps.append(schedule.timestep_of_sigma(s_now))
+
+        task0, graph0 = members[0]
+        spec = graph0.artifacts[task0.inputs[1]].fields["latent"]
+        view = field_view(spec, layout)
+        off, _ = view.slices[rank]
+        n_total = spec.global_shape[0]
+        t = jnp.array(t_steps, jnp.float32)
+
+        if layout.degree == 1:
+            def kv_gather(k, v):
+                return k, v
+        else:
+            def kv_gather(k, v):
+                K = comm.all_gather(desc, rank, np.asarray(k), axis=1)
+                V = comm.all_gather(desc, rank, np.asarray(v), axis=1)
+                return jnp.asarray(K), jnp.asarray(V)
+
+        x = jnp.stack([jnp.asarray(s) for s in xs])        # (B, N_loc, pd)
+        txt = jnp.stack([jnp.asarray(s) for s in txts])    # (B, Lt, cond)
+        v = dit.forward_sp_tokens(
+            self.dit_params, x, t, txt, self.cfg, pos_offset=off,
+            n_total=n_total, kv_gather=kv_gather)
+        for i, (task, graph) in enumerate(members):
+            s_now, s_next = sig_pairs[i]
+            new_x = schedule.flow_step(jnp.asarray(xs[i]), v[i], s_now,
+                                       s_next)
+            out_art = graph.artifacts[task.outputs[0]]
+            out_art.data[rank]["latent"] = np.asarray(new_x)
+            out_art.data[rank]["sigma"] = np.float32(s_next)
+
+    # ------------------------------------------------------------------
     def _encode(self, task, layout, graph):
         req = graph.request
         seed = _req_seed(req.id)

@@ -142,6 +142,30 @@ def mixed_burst_trace(cost: CostModel, *, duration: float = 240.0,
     return out
 
 
+def small_image_burst_trace(cost: CostModel, *, duration: float = 90.0,
+                            load: float = 2.5, num_ranks: int = 4,
+                            steps: int = 20, seed: int = 17
+                            ) -> list[Request]:
+    """Many-small-images burst (step-packing showcase, DESIGN.md §9):
+    a dense Poisson stream of S-class images at `load` x the machine's
+    single-task serving capacity.  Every request shares one pack
+    signature, so a packing policy can co-batch denoise steps across the
+    whole backlog; a one-task-per-rank-set policy saturates at
+    ``num_ranks`` concurrent steps and drowns.  SLOs are the standard
+    S-class deadlines — tight enough that the unpacked policy's queueing
+    delay violates them, loose enough that a packed step (slightly slower
+    than a solo step) still fits."""
+    rand = _lcg(seed)
+    t_s = standalone_service_time("dit-image", "S", cost, steps)
+    rate = load * num_ranks / t_s
+    out: list[Request] = []
+    t = 0.0
+    while t < duration:
+        t += -math.log(max(rand(), 1e-9)) / rate
+        out.append(make_request("dit-image", "S", t, cost, steps))
+    return out
+
+
 def foreground_burst_trace(model: str, cost: CostModel, *,
                            duration: float = 120.0, load: float = 0.5,
                            num_ranks: int = 4, steps: int = 50,

@@ -1,0 +1,425 @@
+"""Step-packing invariants (DESIGN.md §9): pack validation never mixes
+models, token shapes, or degrees; one pack completion fans out into
+per-member completions with artifact isolation; a preempted pack requeues
+every member with inputs intact; batched denoise is bit-compatible with
+solo runs; and the batched cost curve is sub-linear with neighbor
+interpolation fallbacks."""
+import numpy as np
+import pytest
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.core.cost_model import CostModel, pack_scale
+from repro.core.gfc import GroupFreeComm
+from repro.core.policies import PackingPolicy, make_policy
+from repro.core.scheduler import (ControlPlane, Dispatch, PackedDispatch,
+                                  Policy, Preempt)
+from repro.core.simulator import SimBackend
+from repro.core.trajectory import ExecutionLayout, Request
+from repro.diffusion.adapters import convert_request
+
+
+class _Null(Policy):
+    name = "null"
+
+    def schedule(self, view):
+        return []
+
+
+def _cp(num_ranks=4, policy=None):
+    cost = CostModel()
+    return ControlPlane(num_ranks, policy or _Null(), cost,
+                        SimBackend(cost))
+
+
+def _request(rid, res=128, steps=3, model="dit-image", arrival=0.0,
+             deadline=None):
+    return Request(id=rid, model=model, height=res, width=res, frames=1,
+                   steps=steps, arrival=arrival, deadline=deadline)
+
+
+def _submit(cp, *reqs):
+    for r in reqs:
+        cp.submit(r, convert_request(r, DIT_IMAGE))
+
+
+def _drain_encodes(cp):
+    """Run every request's encode so its first denoise becomes ready."""
+    for rid, g in cp.graphs.items():
+        enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+        assert cp.apply(Dispatch(enc.id, ExecutionLayout((0,))))
+        for c in cp.backend.poll():
+            cp.on_completion(c)
+
+
+def _ready_denoise(cp, rid):
+    return [t for t in cp.graphs[rid].ready_tasks()
+            if t.kind == "denoise"][0]
+
+
+# ---------------------------------------------------------------------------
+# validation invariants
+# ---------------------------------------------------------------------------
+
+def test_pack_accepts_compatible_and_fans_out():
+    cp = _cp()
+    _submit(cp, _request("a"), _request("b"), _request("c"))
+    _drain_encodes(cp)
+    tids = tuple(_ready_denoise(cp, r).id for r in ("a", "b", "c"))
+    assert cp.apply(PackedDispatch(tids, ExecutionLayout((0, 1))))
+    assert len(cp.packs) == 1
+    assert all(tid in cp.running for tid in tids)
+    # ONE backend completion fans out into per-member completions
+    for c in cp.backend.poll():
+        cp.on_completion(c)
+    assert not cp.packs and not cp.running
+    for rid in ("a", "b", "c"):
+        t = [t for t in cp.graphs[rid].tasks.values()
+             if t.kind == "denoise" and t.step_index == 0][0]
+        assert t.state == "done"
+        for aid in t.outputs:
+            assert cp.graphs[rid].artifacts[aid].materialized
+    evs = [e for e in cp.events if e["ev"] == "packed_dispatch"]
+    assert len(evs) == 1 and evs[0]["batch"] == 3
+
+
+def test_pack_rejects_mixed_models():
+    cp = _cp()
+    _submit(cp, _request("a"), _request("b", model="dit-video"))
+    _drain_encodes(cp)
+    tids = (_ready_denoise(cp, "a").id, _ready_denoise(cp, "b").id)
+    assert not cp.apply(PackedDispatch(tids, ExecutionLayout((0, 1))))
+    assert not cp.running and not cp.packs
+
+
+def test_pack_rejects_mixed_token_shapes():
+    cp = _cp()
+    _submit(cp, _request("a", res=128), _request("b", res=256))
+    _drain_encodes(cp)
+    tids = (_ready_denoise(cp, "a").id, _ready_denoise(cp, "b").id)
+    assert not cp.apply(PackedDispatch(tids, ExecutionLayout((0, 1))))
+
+
+def test_pack_rejects_non_denoise_duplicates_and_busy_ranks():
+    cp = _cp()
+    _submit(cp, _request("a"), _request("b"))
+    g = cp.graphs["a"]
+    enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+    # encode stages may not pack
+    assert not cp.apply(PackedDispatch((enc.id,), ExecutionLayout((0,))))
+    _drain_encodes(cp)
+    ta, tb = _ready_denoise(cp, "a"), _ready_denoise(cp, "b")
+    # duplicate members
+    assert not cp.apply(PackedDispatch((ta.id, ta.id),
+                                       ExecutionLayout((0, 1))))
+    # occupied ranks
+    assert cp.apply(Dispatch(ta.id, ExecutionLayout((0,))))
+    assert not cp.apply(PackedDispatch((tb.id,), ExecutionLayout((0,))))
+
+
+def test_singleton_pack_degenerates_to_dispatch():
+    cp = _cp()
+    _submit(cp, _request("a"))
+    _drain_encodes(cp)
+    t = _ready_denoise(cp, "a")
+    assert cp.apply(PackedDispatch((t.id,), ExecutionLayout((0, 1))))
+    assert not cp.packs                  # plain dispatch, no pack record
+    assert t.id in cp.running
+    cp.policy = make_policy("fcfs-sp1", 4)
+    cp.run()
+    assert cp.metrics()["completed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# preemption: the pack is the unit of eviction
+# ---------------------------------------------------------------------------
+
+def test_preempted_pack_requeues_every_member_with_inputs_intact():
+    cp = _cp()
+    _submit(cp, _request("a", steps=4), _request("b", steps=4))
+    _drain_encodes(cp)
+    ta, tb = _ready_denoise(cp, "a"), _ready_denoise(cp, "b")
+    inputs = {t.id: list(t.inputs) for t in (ta, tb)}
+    assert cp.apply(PackedDispatch((ta.id, tb.id),
+                                   ExecutionLayout((0, 1, 2, 3))))
+    # preempting ANY member evicts the whole pack
+    assert cp.apply(Preempt(tb.id))
+    assert set(cp.preempting) == {ta.id, tb.id}
+    for c in cp.backend.poll():
+        cp.on_completion(c)
+    for t, rid in ((ta, "a"), (tb, "b")):
+        assert t.state == "pending" and t.layout is None
+        g = cp.graphs[rid]
+        assert all(g.artifacts[a].materialized for a in inputs[t.id]), \
+            "preempted pack member lost its inputs"
+        for aid in t.outputs:
+            assert not g.artifacts[aid].materialized, \
+                "preempted pack member leaked outputs"
+    assert set(cp.free_ranks) == {0, 1, 2, 3}
+    # the plane recovers: requeued members complete under a real policy
+    cp.policy = make_policy("fcfs-sp1", 4)
+    cp.run()
+    assert cp.metrics()["completed"] == 2
+
+
+def test_failed_pack_member_does_not_free_shared_ranks():
+    """fail_task on one member must NOT free the pack's shared rank set
+    while siblings still run on it; the ranks free at the pack's
+    boundary via the surviving members' completion fan-out."""
+    cp = _cp()
+    _submit(cp, _request("a"), _request("b"))
+    _drain_encodes(cp)
+    ta, tb = _ready_denoise(cp, "a"), _ready_denoise(cp, "b")
+    assert cp.apply(PackedDispatch((ta.id, tb.id),
+                                   ExecutionLayout((0, 1))))
+    cp.fail_task(ta.id, requeue=True)
+    assert 0 not in cp.free_ranks and 1 not in cp.free_ranks, \
+        "shared pack ranks freed while a sibling still runs"
+    for c in cp.backend.poll():
+        cp.on_completion(c)
+    assert {0, 1} <= cp.free_ranks
+    assert tb.state == "done" and ta.state == "pending"
+
+
+def test_pack_fanout_respects_superseded_dispatch_guard():
+    """A member failed-out of a draining pack and redispatched solo must
+    NOT be completed by the stale pack fan-out: the fan-out carries the
+    seq recorded at PACK dispatch time."""
+    cp = _cp()
+    _submit(cp, _request("a"), _request("b"))
+    _drain_encodes(cp)
+    ta, tb = _ready_denoise(cp, "a"), _ready_denoise(cp, "b")
+    assert cp.apply(PackedDispatch((ta.id, tb.id),
+                                   ExecutionLayout((0, 1))))
+    cp.fail_task(ta.id, requeue=True)       # requeued, inputs intact
+    assert cp.apply(Dispatch(ta.id, ExecutionLayout((2,))))  # solo redo
+    # drain everything scheduled, applying the stale PACK completion
+    # before the solo one: it must not complete ta's new dispatch
+    cs = []
+    while True:
+        batch = cp.backend.poll()
+        if not batch:
+            break
+        cs.extend(batch)
+    for c in (c for c in cs if c.task_id.startswith("pack-")):
+        cp.on_completion(c)
+    assert tb.state == "done"
+    assert ta.state == "running", \
+        "stale pack fan-out completed a superseded solo dispatch"
+    for c in (c for c in cs if not c.task_id.startswith("pack-")):
+        cp.on_completion(c)
+    assert ta.state == "done"
+    cp.policy = make_policy("fcfs-sp1", 4)
+    cp.run()
+    assert cp.metrics()["completed"] == 2
+
+
+def test_pack_completion_does_not_double_observe_single_keys():
+    cp = _cp()
+    _submit(cp, _request("a"), _request("b"))
+    _drain_encodes(cp)
+    tok = _ready_denoise(cp, "a").meta["tokens"]
+    key = cp.cost._key("dit-image", "denoise", tok, 2)
+    tids = (_ready_denoise(cp, "a").id, _ready_denoise(cp, "b").id)
+    assert cp.apply(PackedDispatch(tids, ExecutionLayout((0, 1))))
+    for c in cp.backend.poll():
+        cp.on_completion(c)
+    # the batched sample lands on the PACKED key, not the single-task key
+    assert key not in cp.cost.calibration
+    pkey = cp.cost._pack_key("dit-image", "denoise", tok, 2, 2)
+    assert pkey in cp.cost.pack_calibration
+
+
+# ---------------------------------------------------------------------------
+# policy-formed packs are homogeneous and complete
+# ---------------------------------------------------------------------------
+
+def _pack_memberships(cp):
+    """pack id -> [(model, tokens)] reconstructed from the event trace."""
+    packs = {}
+    for e in cp.events:
+        if e["ev"] == "dispatch" and e.get("pack"):
+            task = cp.graphs[e["req"]].tasks[e["task"]]
+            packs.setdefault(e["pack"], []).append(
+                (cp.requests[e["req"]].model, task.meta["tokens"]))
+    return packs
+
+
+def test_packing_policy_forms_homogeneous_packs():
+    cost = CostModel()
+    cp = ControlPlane(4, PackingPolicy(degree=1, max_pack=4), cost,
+                      SimBackend(cost))
+    _submit(cp, *[_request(f"s{i}", res=128, steps=4,
+                           arrival=0.01 * i) for i in range(4)],
+            *[_request(f"m{i}", res=256, steps=4,
+                       arrival=0.01 * i) for i in range(3)])
+    cp.run()
+    assert cp.metrics()["completed"] == 7
+    packs = _pack_memberships(cp)
+    assert packs, "no packs formed on a homogeneous burst"
+    for members in packs.values():
+        assert len(set(members)) == 1, \
+            f"pack mixed signatures: {members}"
+
+
+def test_elastic_pack_policy_forms_homogeneous_packs():
+    cost = CostModel()
+    cp = ControlPlane(4, make_policy("elastic-pack", 4), cost,
+                      SimBackend(cost))
+    _submit(cp, *[_request(f"s{i}", res=128, steps=4,
+                           arrival=0.01 * i) for i in range(5)])
+    cp.run()
+    assert cp.metrics()["completed"] == 5
+    packs = _pack_memberships(cp)
+    assert packs
+    for members in packs.values():
+        assert len(set(members)) == 1
+
+
+# hypothesis property tests over the same invariants live in
+# tests/test_step_packing_props.py (whole-module importorskip, matching
+# the test_gfc/test_migration pattern)
+
+
+# ---------------------------------------------------------------------------
+# batched denoise bit-compatibility (acceptance: EXACT per-task latents)
+# ---------------------------------------------------------------------------
+
+def _prepped_graph(pipe, cfg, comm, rid):
+    """Encode one request and return (req, graph, first denoise task)."""
+    lay = ExecutionLayout((0,))
+    req = _request(rid, res=128, steps=2)
+    g = convert_request(req, cfg)
+    enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+    for aid in enc.outputs:
+        g.artifacts[aid].data = {0: {}}
+    pipe.execute(enc, lay, 0, comm, g, comm.register_group((0,)))
+    for aid in enc.outputs:
+        g.artifacts[aid].materialized = True
+        g.artifacts[aid].layout = lay
+    d0 = [t for t in g.tasks.values()
+          if t.kind == "denoise" and t.step_index == 0][0]
+    for aid in d0.outputs:
+        g.artifacts[aid].data = {0: {}}
+    return req, g, d0
+
+
+def test_packed_denoise_bit_exact_vs_solo():
+    """Running N compatible tasks as ONE batched call must yield exactly
+    the per-task latents of solo runs — and no cross-request leakage."""
+    from repro.diffusion.pipeline import DiTPipeline
+    cfg = DIT_IMAGE.reduced()
+    pipe = DiTPipeline(cfg, seed=0)
+    comm = GroupFreeComm(1)
+    lay = ExecutionLayout((0,))
+
+    solo = {}
+    for rid in ("pa", "pb", "pc"):
+        _, g, d0 = _prepped_graph(pipe, cfg, comm, rid)
+        pipe.execute(d0, lay, 0, comm, g, comm.register_group((0,)))
+        solo[rid] = g.artifacts[d0.outputs[0]].data[0]["latent"].copy()
+
+    members = []
+    for rid in ("pa", "pb", "pc"):
+        _, g, d0 = _prepped_graph(pipe, cfg, comm, rid)
+        members.append((d0, g))
+    pipe.execute_packed(members, lay, 0, comm, comm.register_group((0,)))
+    packed = {t.request_id: g.artifacts[t.outputs[0]].data[0]["latent"]
+              for t, g in members}
+
+    for rid in ("pa", "pb", "pc"):
+        np.testing.assert_array_equal(solo[rid], packed[rid])
+    # artifact isolation: different prompts produce different latents
+    assert not np.array_equal(packed["pa"], packed["pb"])
+    assert not np.array_equal(packed["pb"], packed["pc"])
+
+
+# ---------------------------------------------------------------------------
+# batched cost curve + calibration fallbacks
+# ---------------------------------------------------------------------------
+
+def test_estimate_packed_batch_one_is_single():
+    cost = CostModel()
+    assert cost.estimate_packed("m", "denoise", 1024, 1, 1) == \
+        cost.estimate("m", "denoise", 1024, 1)
+
+
+def test_packed_estimate_sublinear_until_roofline():
+    cost = CostModel()
+    single = cost.estimate("m", "denoise", 1024, 1)
+    four = cost.estimate_packed("m", "denoise", 1024, 1, 4)
+    assert single < four < 4 * single            # sub-linear, not free
+    # large shapes saturate the device alone: packing is near-additive
+    big_single = cost.estimate("m", "denoise", 65536, 1)
+    big_four = cost.estimate_packed("m", "denoise", 65536, 1, 4)
+    assert big_four >= 3.5 * big_single
+
+
+def test_pack_scale_monotone_in_batch():
+    prev = 0.0
+    for b in (1, 2, 4, 8, 16):
+        s = pack_scale(b, 1024, 1)
+        assert s > prev
+        prev = s
+
+
+def test_observe_packed_calibrates_packed_key():
+    cost = CostModel()
+    for _ in range(8):
+        cost.observe_packed("m", "denoise", 1024, 2, 4, 0.5)
+    assert cost.estimate_packed("m", "denoise", 1024, 2, 4) == \
+        pytest.approx(0.5, rel=0.05)
+    # neighbor-batch interpolation: b=5 scales the calibrated b=4 sample
+    # by the analytical pack-curve ratio instead of ignoring it
+    est5 = cost.estimate_packed("m", "denoise", 1024, 2, 5)
+    expect = 0.5 * pack_scale(5, 1024, 2) / pack_scale(4, 1024, 2)
+    assert est5 == pytest.approx(expect, rel=0.05)
+
+
+def test_uncalibrated_key_interpolates_from_neighbor_bucket():
+    cost = CostModel()
+    cost.observe("m", "denoise", 4096, 1, 2.0)
+    est = cost.estimate("m", "denoise", 8192, 1)
+    expect = 2.0 * (cost.analytical("m", "denoise", 8192, 1)
+                    / cost.analytical("m", "denoise", 4096, 1))
+    assert est == pytest.approx(expect)
+    assert est != pytest.approx(cost.analytical("m", "denoise", 8192, 1))
+
+
+def test_uncalibrated_key_interpolates_from_neighbor_degree():
+    """Degree neighbors project through a MEASURED cross-degree ratio
+    (from the nearest bucket calibrated at both degrees), never through
+    the analytical SP curve (DESIGN.md §8: calibration exists to correct
+    it)."""
+    cost = CostModel()
+    cost.observe("m", "denoise", 4096, 2, 1.0)    # same-bucket source
+    cost.observe("m", "denoise", 256, 2, 0.5)     # measured ratio pair,
+    cost.observe("m", "denoise", 256, 4, 0.3)     # far from the target
+    est = cost.estimate("m", "denoise", 4096, 4)
+    assert est == pytest.approx(1.0 * 0.3 / 0.5)
+    # without a measured ratio pair the analytical curve is NOT used to
+    # cross degrees: the estimate falls back to the analytical value
+    lone = CostModel()
+    lone.observe("m", "denoise", 4096, 2, 1.0)
+    assert lone.estimate("m", "denoise", 4096, 4) == \
+        pytest.approx(lone.analytical("m", "denoise", 4096, 4))
+
+
+def test_bucket_neighbor_preferred_over_degree_neighbor():
+    cost = CostModel()
+    cost.observe("m", "denoise", 2048, 1, 5.0)    # bucket neighbor (d=1)
+    cost.observe("m", "denoise", 4096, 2, 9.0)    # degree neighbor (b=4096)
+    est = cost.estimate("m", "denoise", 4096, 1)
+    expect = 5.0 * (cost.analytical("m", "denoise", 4096, 1)
+                    / cost.analytical("m", "denoise", 2048, 1))
+    assert est == pytest.approx(expect)
+
+
+def test_save_load_roundtrip_includes_pack_tables(tmp_path):
+    cost = CostModel()
+    cost.observe("m", "denoise", 4096, 2, 1.25)
+    cost.observe_packed("m", "denoise", 1024, 1, 4, 0.8)
+    cost.save(tmp_path / "cm.json")
+    loaded = CostModel.load(tmp_path / "cm.json")
+    assert loaded.estimate("m", "denoise", 4096, 2) == pytest.approx(1.25)
+    assert loaded.estimate_packed("m", "denoise", 1024, 1, 4) == \
+        pytest.approx(0.8)

@@ -1,0 +1,107 @@
+"""Hypothesis property tests for step-packing invariants (DESIGN.md §9):
+packs never mix models, token shapes, or degrees; per-member completions
+preserve artifact isolation; a preempted pack requeues every member with
+inputs intact."""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.policies import PackingPolicy, make_policy  # noqa: E402
+from repro.core.scheduler import (ControlPlane, PackedDispatch,  # noqa: E402
+                                  Preempt, pack_signature)
+from repro.core.simulator import SimBackend  # noqa: E402
+from repro.core.trajectory import ExecutionLayout  # noqa: E402
+from repro.core.cost_model import CostModel  # noqa: E402
+
+from test_step_packing import (_cp, _drain_encodes, _ready_denoise,  # noqa: E402
+                               _request, _submit)
+
+_SHAPES = [("dit-image", 128), ("dit-image", 256), ("dit-video", 128)]
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.lists(st.sampled_from(range(len(_SHAPES))), min_size=2,
+                max_size=4))
+def test_prop_pack_validation_matches_compatibility(shape_idx):
+    """A PackedDispatch is accepted iff every member shares one
+    pack signature (model, exact token count)."""
+    cp = _cp(num_ranks=4)
+    reqs = [_request(f"r{i}", res=_SHAPES[s][1], model=_SHAPES[s][0])
+            for i, s in enumerate(shape_idx)]
+    _submit(cp, *reqs)
+    _drain_encodes(cp)
+    members = [(_ready_denoise(cp, r.id), r) for r in reqs]
+    sigs = {pack_signature(t, r) for t, r in members}
+    ok = cp.apply(PackedDispatch(tuple(t.id for t, _ in members),
+                                 ExecutionLayout((0, 1))))
+    assert ok == (len(sigs) == 1)
+    if ok:
+        for c in cp.backend.poll():
+            cp.on_completion(c)
+        assert not cp.running
+        # artifact isolation: each member's outputs materialized in its
+        # OWN graph only; no cross-request artifact sharing
+        for t, r in members:
+            g = cp.graphs[r.id]
+            assert all(g.artifacts[a].materialized for a in t.outputs)
+            assert all(a in g.artifacts for a in t.outputs)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(min_value=2, max_value=4),
+       st.integers(min_value=0, max_value=3))
+def test_prop_preempted_pack_requeues_all(n, victim_choice):
+    cp = _cp(num_ranks=4)
+    reqs = [_request(f"r{i}", steps=3) for i in range(n)]
+    _submit(cp, *reqs)
+    _drain_encodes(cp)
+    members = [_ready_denoise(cp, r.id) for r in reqs]
+    assert cp.apply(PackedDispatch(tuple(t.id for t in members),
+                                   ExecutionLayout((0,))))
+    victim = members[victim_choice % n]
+    assert cp.apply(Preempt(victim.id))
+    assert set(cp.preempting) == {t.id for t in members}
+    for c in cp.backend.poll():
+        cp.on_completion(c)
+    for t in members:
+        assert t.state == "pending"
+        g = cp.graphs[t.request_id]
+        assert all(g.artifacts[a].materialized for a in t.inputs)
+        assert all(not g.artifacts[a].materialized for a in t.outputs)
+    cp.policy = make_policy("fcfs-sp1", 4)
+    cp.run()
+    assert cp.metrics()["completed"] == n
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.integers(min_value=2, max_value=6))
+def test_prop_policy_packs_are_homogeneous(seed, n):
+    """PackingPolicy on a random mixed-shape burst: every pack it forms
+    is signature-homogeneous and the workload completes."""
+    rnd = seed
+    reqs = []
+    for i in range(n):
+        rnd = (1103515245 * rnd + 12345) % (1 << 31)
+        model, res = _SHAPES[rnd % len(_SHAPES)]
+        reqs.append(_request(f"r{i}", res=res, model=model, steps=3,
+                             arrival=0.02 * i))
+    cost = CostModel()
+    cp = ControlPlane(4, PackingPolicy(degree=1, max_pack=4), cost,
+                      SimBackend(cost))
+    _submit(cp, *reqs)
+    cp.run()
+    assert cp.metrics()["completed"] == n
+    for e in cp.events:
+        if e["ev"] != "packed_dispatch":
+            continue
+        sigs = set()
+        for rid in e["reqs"]:
+            g = cp.graphs[rid]
+            t = g.tasks[[ev["task"] for ev in cp.events
+                         if ev["ev"] == "dispatch"
+                         and ev.get("pack") == e["pack"]
+                         and ev["req"] == rid][0]]
+            sigs.add((cp.requests[rid].model, t.meta["tokens"]))
+        assert len(sigs) == 1, f"pack mixed signatures: {sigs}"
