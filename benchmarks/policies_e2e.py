@@ -11,6 +11,11 @@ steps across requests and must beat non-packing ``elastic`` on
 throughput while holding SLO violations (``--only small-burst`` runs
 just this slice; CI tracks it per PR).
 
+And the multi-host topology workload (DESIGN.md §10): on a simulated
+2-host x 4-rank cluster, the topology-aware ``elastic`` policy must beat
+the topology-blind ``elastic-blind`` variant on throughput AND SLO
+violation rate (``--only multi-host``; CI gates it per PR).
+
 Simulation-driven (paper §5.5: the simulator is an execution backend for
 the same policy interface; fidelity measured in sim_fidelity.py).
 """
@@ -25,6 +30,7 @@ from repro.core.cost_model import CostModel
 from repro.core.policies import make_policy
 from repro.core.scheduler import ControlPlane
 from repro.core.simulator import SimBackend
+from repro.core.trajectory import ClusterTopology
 from repro.diffusion.adapters import convert_request
 from repro.diffusion.workloads import foreground_burst_trace, short_trace
 
@@ -34,6 +40,8 @@ POLICIES = ["legacy", "fcfs-sp1", "srtf-sp1", "srtf-spmax", "edf",
             "elastic"]
 NUM_RANKS = 4
 STEPS = 25
+# multi-host topology workload (DESIGN.md §10)
+MH_TOPO = ClusterTopology(num_hosts=2, ranks_per_host=4)
 
 
 def _trace(model: str, workload: str):
@@ -135,10 +143,43 @@ def _run_small_burst(out: dict):
         out[f"small|burst|{pol}"] = m
 
 
+def _run_multi_host(out: dict):
+    """2-host x 4-rank simulated cluster (DESIGN.md §10): the
+    topology-aware elastic policy places SP groups host-locally, re-pins
+    spanning stragglers, and prices candidate degrees at their span; the
+    blind variant takes free ranks by bare index and routinely straddles
+    the inter-host link.  Acceptance: aware beats blind on throughput
+    AND SLO violation rate."""
+    from repro.diffusion.workloads import (multi_host_trace,
+                                           standalone_service_time)
+    for pol in ("elastic", "elastic-blind", "edf"):
+        cost = CostModel()
+        cp = ControlPlane(MH_TOPO, make_policy(pol, MH_TOPO.num_ranks),
+                          cost, SimBackend(cost, jitter=0.05))
+        trace = multi_host_trace(CostModel(), duration=240, load=1.0,
+                                 num_ranks=MH_TOPO.num_ranks,
+                                 steps=STEPS, seed=23)
+        for r in trace:
+            cp.submit(r, convert_request(r, DIT_IMAGE))
+        cp.run()
+        timeout = 12 * standalone_service_time("dit-image", "M",
+                                               CostModel(), STEPS)
+        m = _metrics_with_timeout(cp, timeout)
+        spans: dict[int, int] = {}
+        for e in cp.events:
+            if e["ev"] == "dispatch" and e["kind"] == "denoise":
+                s = MH_TOPO.span_of(e["ranks"])
+                spans[s] = spans.get(s, 0) + 1
+        m["denoise_dispatches_by_span"] = {str(k): v
+                                           for k, v in sorted(spans.items())}
+        out[f"multi|host|{pol}"] = m
+
+
 def run(only: str | None = None) -> dict:
     out = {}
-    if only == "small-burst":
-        _run_small_burst(out)
+    if only in ("small-burst", "multi-host"):
+        (_run_small_burst if only == "small-burst"
+         else _run_multi_host)(out)
         RESULTS.mkdir(exist_ok=True)
         existing = {}
         path = RESULTS / "policies_e2e.json"
@@ -148,6 +189,7 @@ def run(only: str | None = None) -> dict:
         path.write_text(json.dumps(existing, indent=1))
         return out
     _run_small_burst(out)
+    _run_multi_host(out)
     _run_mixed(out)
     for model_cfg in (DIT_IMAGE, DIT_VIDEO):
         model = model_cfg.name
@@ -227,7 +269,58 @@ def rows(data: dict):
     out.append(("policies.best_slo_violation_reduction", best["slo"] * 1e6,
                 "paper_90pct"))
     out.extend(small_burst_rows(data))
+    out.extend(multi_host_rows(data))
     return out
+
+
+def multi_host_rows(data: dict):
+    """Topology-workload headline numbers (accepts partial --only runs)."""
+    out = []
+    if "multi|host|elastic" not in data:
+        return out
+    for pol in ("elastic", "elastic-blind", "edf"):
+        m = data.get(f"multi|host|{pol}")
+        if m is None:
+            continue
+        spans = m.get("denoise_dispatches_by_span", {})
+        out.append((f"policies.multi.host.{pol}.mean_lat",
+                    m["mean_latency_s"] * 1e6,
+                    f"slo={m['slo_attainment']:.3f}"
+                    f";thr={m['throughput_rps']:.4f}"
+                    f";span2={spans.get('2', 0)}"))
+    aware = data["multi|host|elastic"]
+    blind = data.get("multi|host|elastic-blind")
+    if blind and blind["throughput_rps"]:
+        out.append(("policies.multi.aware_vs_blind.throughput_x",
+                    aware["throughput_rps"] / blind["throughput_rps"] * 1e6,
+                    f"aware={aware['throughput_rps']:.4f}"
+                    f";blind={blind['throughput_rps']:.4f};accept>1x"))
+        out.append(("policies.multi.aware_vs_blind.slo_viol_delta",
+                    ((1 - aware["slo_attainment"])
+                     - (1 - blind["slo_attainment"])) * 1e6,
+                    f"aware_viol={1 - aware['slo_attainment']:.3f}"
+                    f";blind_viol={1 - blind['slo_attainment']:.3f}"
+                    f";accept<0"))
+    return out
+
+
+def check_multi_host(data: dict) -> list[str]:
+    """Topology acceptance gate (CI fails on regression): on the 2-host
+    x 4-rank cluster the topology-aware elastic policy must improve
+    throughput AND lower the SLO violation rate vs the blind variant."""
+    problems = []
+    aware = data["multi|host|elastic"]
+    blind = data["multi|host|elastic-blind"]
+    if aware["throughput_rps"] <= blind["throughput_rps"]:
+        problems.append(
+            f"aware throughput {aware['throughput_rps']:.4f} <= blind "
+            f"{blind['throughput_rps']:.4f} (accept: strictly higher)")
+    if (1 - aware["slo_attainment"]) >= (1 - blind["slo_attainment"]):
+        problems.append(
+            f"aware SLO violations {1 - aware['slo_attainment']:.3f} >= "
+            f"blind {1 - blind['slo_attainment']:.3f} "
+            f"(accept: strictly lower)")
+    return problems
 
 
 def small_burst_rows(data: dict):
@@ -286,15 +379,26 @@ def check_small_burst(data: dict) -> list[str]:
 if __name__ == "__main__":
     import sys
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=["small-burst"], default=None,
-                    help="run just the step-packing workload (CI slice)")
+    ap.add_argument("--only", choices=["small-burst", "multi-host"],
+                    default=None,
+                    help="run just one workload slice (CI legs)")
     args = ap.parse_args()
     d = run(only=args.only)
-    table = rows(d) if args.only is None else small_burst_rows(d)
+    if args.only is None:
+        table = rows(d)
+    elif args.only == "small-burst":
+        table = small_burst_rows(d)
+    else:
+        table = multi_host_rows(d)
     for name, us, derived in table:
         print(f"{name},{us:.1f},{derived}")
     if args.only == "small-burst":
         problems = check_small_burst(d)
+    elif args.only == "multi-host":
+        problems = check_multi_host(d)
+    else:
+        problems = []
+    if args.only is not None:
         for p in problems:
             print(f"ACCEPTANCE FAILURE: {p}", file=sys.stderr)
         sys.exit(1 if problems else 0)

@@ -8,9 +8,11 @@ the exact request trace and policy logic using measured stage costs").
 Paper: <= 4.7 pp divergence.
 
 Additionally runs the ElasticPolicy preempt/reallocate scenario
-(repro.serving.elastic_demo) AND the step-packing scenario
-(repro.serving.packing_demo, DESIGN.md §9) on both backends and checks
-the canonical control-plane decision traces — which canonicalize
+(repro.serving.elastic_demo), the step-packing scenario
+(repro.serving.packing_demo, DESIGN.md §9), AND the multi-host topology
+scenario (repro.serving.topology_demo, DESIGN.md §10 — hierarchical
+GFC + cross-host reallocation) on both backends and checks the
+canonical control-plane decision traces — which canonicalize
 PackedDispatch membership — are IDENTICAL.
 """
 from __future__ import annotations
@@ -131,11 +133,28 @@ def _packing_fidelity(cfg) -> dict:
     }
 
 
+def _topology_fidelity(cfg) -> dict:
+    """Topology fidelity (DESIGN.md §10): the 2-host scenario must trace
+    identically on the simulator and the thread runtime, and
+    hierarchical collectives must not change the output pixels."""
+    from repro.serving.topology_demo import run_demo
+    d = run_demo(cfg)
+    return {
+        "trace_match": d["trace_match"],
+        "pixels_match": d["pixels_match"],
+        "hierarchical_collectives": d["wall"]["hierarchical_collectives"],
+        "sim_migrated_bytes": d["sim"]["migrated_bytes"],
+        "real_completed": d["wall"]["metrics"]["completed"],
+        "sim_completed": d["sim"]["metrics"]["completed"],
+    }
+
+
 def run() -> dict:
     import dataclasses
     cfg = DIT_IMAGE.reduced()
     out = {"elastic_trace": _elastic_fidelity(cfg),
-           "packing_trace": _packing_fidelity(cfg)}
+           "packing_trace": _packing_fidelity(cfg),
+           "topology_trace": _topology_fidelity(cfg)}
     for pol_name in POLICIES:
         cost = _profile_costs(cfg)
         trace0 = _mini_trace(cost)
@@ -185,6 +204,14 @@ def rows(data: dict):
                         f"identical_packs={m['trace_match']}"
                         f";real_packs={m['real_packs']}"
                         f";sim_packs={m['sim_packs']}"))
+            continue
+        if pol == "topology_trace":
+            out.append(("sim_fidelity.topology.trace_match",
+                        1e6 if (m["trace_match"]
+                                and m["pixels_match"]) else 0.0,
+                        f"identical_traces={m['trace_match']}"
+                        f";pixels_bitexact={m['pixels_match']}"
+                        f";hier={m['hierarchical_collectives']}"))
             continue
         out.append((f"sim_fidelity.{pol}.gap", m["gap_pp"] * 1e4,
                     f"real={m['real_slo']:.3f};sim={m['sim_slo']:.3f};"

@@ -19,6 +19,14 @@ executor call that co-schedules N batch-compatible tasks (DESIGN.md §9).
 The analytical pack curve is sub-linear — collectives and per-call
 overhead are paid once, and compute is roughly free until the pack fills
 the per-rank roofline, then additive.
+
+Topology (DESIGN.md §10): collective terms split into intra-host and
+inter-host components keyed by *span* — the number of hosts a layout
+touches.  Span-1 keys are byte-identical to the pre-topology keys, so
+every existing measurement (and saved table) is reused for single-host
+layouts; spanning keys append ``|s{span}``.  An uncalibrated spanning
+cell is priced by scaling the span-1 estimate through the analytical
+intra/inter ratio before falling to the raw analytical curve.
 """
 from __future__ import annotations
 
@@ -40,14 +48,28 @@ _DECODE_PER_MPIX = 0.35          # VAE decode per megapixel(-frame)
 _PACK_SAT_TOKENS = 8192
 _PACK_MEMBER_OVERHEAD = 0.04     # per extra member, fraction of base cost
 
+# Topology (DESIGN.md §10): default cost ratio of an inter-host byte to
+# an intra-host byte when no ClusterTopology is attached to the model.
+_INTER_COST_FACTOR = 4.0
 
-def sp_efficiency(degree: int, tokens: int) -> float:
+
+def sp_efficiency(degree: int, tokens: int, span: int = 1,
+                  inter_factor: float = _INTER_COST_FACTOR) -> float:
     """Parallel efficiency of sequence parallelism (Fig. 3b shape):
-    large token counts amortize collectives; small ones don't."""
+    large token counts amortize collectives; small ones don't.
+
+    ``span`` is the number of hosts the SP group touches: the collective
+    term splits into an intra-host component and an inter-host component
+    — the (span-1)/(degree-1) fraction of ring edges that cross hosts
+    pays ``inter_factor`` x the intra-host byte cost.
+    """
     if degree == 1:
         return 1.0
-    comm = 1.0 + 0.35 * (degree - 1) * (4096 / max(tokens, 256)) ** 0.5
-    return 1.0 / comm
+    comm = 0.35 * (degree - 1) * (4096 / max(tokens, 256)) ** 0.5
+    if span > 1:
+        inter_frac = min(span - 1, degree - 1) / (degree - 1)
+        comm *= 1.0 + (inter_factor - 1.0) * inter_frac
+    return 1.0 / (1.0 + comm)
 
 
 def pack_scale(batch: int, tokens: int, degree: int) -> float:
@@ -75,6 +97,9 @@ class CostModel:
     pack_table: dict = field(default_factory=dict)       # packed key -> s
     pack_calibration: dict = field(default_factory=dict)
     ema: float = 0.5
+    # attached by the control plane (DESIGN.md §10); prices the
+    # inter-host share of collective terms for spanning layouts
+    topology: object = None
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -82,40 +107,61 @@ class CostModel:
         return 1 << max(0, int(math.log2(max(tokens, 1))))
 
     @staticmethod
-    def _key(model: str, kind: str, tokens: int, degree: int) -> str:
+    def _key(model: str, kind: str, tokens: int, degree: int,
+             span: int = 1) -> str:
+        """Span-1 keys stay byte-identical to the pre-topology format so
+        single-host measurements (and saved tables) are reused."""
         bucket = CostModel._bucket(tokens)
-        return f"{model}|{kind}|{bucket}|{degree}"
+        base = f"{model}|{kind}|{bucket}|{degree}"
+        return base if span <= 1 else base + f"|s{span}"
 
     @staticmethod
     def _pack_key(model: str, kind: str, tokens: int, degree: int,
-                  batch: int) -> str:
-        return CostModel._key(model, kind, tokens, degree) + f"|b{batch}"
+                  batch: int, span: int = 1) -> str:
+        return CostModel._key(model, kind, tokens, degree,
+                              span) + f"|b{batch}"
+
+    def _inter_factor(self) -> float:
+        topo = self.topology
+        if topo is not None and getattr(topo, "num_hosts", 1) > 1:
+            return topo.inter_cost_factor
+        return _INTER_COST_FACTOR
 
     # ------------------------------------------------------------------
     def estimate(self, model: str, kind: str, tokens: int,
-                 degree: int) -> float:
-        key = self._key(model, kind, tokens, degree)
+                 degree: int, span: int = 1) -> float:
+        key = self._key(model, kind, tokens, degree, span)
         if key in self.calibration:
             return self.calibration[key]
         if key in self.table:
             return self.table[key]
+        if span > 1:
+            # scale the (measured-where-possible) span-1 estimate through
+            # the analytical intra/inter collective ratio
+            base = self.estimate(model, kind, tokens, degree, 1)
+            ref = self.analytical(model, kind, tokens, degree, 1)
+            if ref > 0:
+                return base * (self.analytical(model, kind, tokens,
+                                               degree, span) / ref)
+            return base
         interp = self._interpolate(model, kind, tokens, degree)
         if interp is not None:
             return interp
         return self.analytical(model, kind, tokens, degree)
 
     def analytical(self, model: str, kind: str, tokens: int,
-                   degree: int) -> float:
+                   degree: int, span: int = 1) -> float:
+        factor = self._inter_factor()
         if kind == "encode":
             return _ENCODE_COST
         if kind == "decode":
             base = _DECODE_PER_MPIX * (tokens / 4096)
-            eff = sp_efficiency(degree, tokens)
+            eff = sp_efficiency(degree, tokens, span, factor)
             return base / (degree * eff) + 0.01
         # denoise: attention ~ tokens^2/flops but MLP dominates until long
         scale = 2.2 if model.endswith("video") else 1.0
         work = scale * (tokens / 4096) ** 1.35
-        eff = sp_efficiency(degree, tokens)
+        eff = sp_efficiency(degree, tokens, span, factor)
         return max(work / (degree * eff), 1e-4) + 0.004 * (degree > 1)
 
     # ------------------------------------------------------------------
@@ -182,15 +228,15 @@ class CostModel:
 
     # ------------------------------------------------------------------
     def estimate_packed(self, model: str, kind: str, tokens: int,
-                        degree: int, batch: int) -> float:
+                        degree: int, batch: int, span: int = 1) -> float:
         """Duration of ONE executor call running `batch` compatible tasks
         (stacked along the batch axis, collectives shared — DESIGN.md §9).
         Priority: packed calibration -> packed table -> calibrated
         neighbor batch scaled by the analytical pack curve -> single-task
         estimate times the analytical pack multiplier."""
         if batch <= 1:
-            return self.estimate(model, kind, tokens, degree)
-        key = self._pack_key(model, kind, tokens, degree, batch)
+            return self.estimate(model, kind, tokens, degree, span)
+        key = self._pack_key(model, kind, tokens, degree, batch, span)
         if key in self.pack_calibration:
             return self.pack_calibration[key]
         if key in self.pack_table:
@@ -201,43 +247,48 @@ class CostModel:
                          key=lambda b: (abs(b - batch), b)):
             if nb == batch:
                 continue
-            k = self._pack_key(model, kind, tokens, degree, nb)
+            k = self._pack_key(model, kind, tokens, degree, nb, span)
             v = self.pack_calibration.get(k, self.pack_table.get(k))
             if v is not None:
                 ref = pack_scale(nb, tokens, degree)
                 if ref > 0:
                     return v * (anchor / ref)
-        return self.estimate(model, kind, tokens, degree) * anchor
+        return self.estimate(model, kind, tokens, degree, span) * anchor
 
     # ------------------------------------------------------------------
     def observe(self, model: str, kind: str, tokens: int, degree: int,
-                seconds: float):
-        """Online calibration from measured durations (EMA)."""
-        key = self._key(model, kind, tokens, degree)
+                seconds: float, span: int = 1):
+        """Online calibration from measured durations (EMA); spanning
+        layouts calibrate their own span-keyed cell (DESIGN.md §10)."""
+        key = self._key(model, kind, tokens, degree, span)
         old = self.calibration.get(key)
         self.calibration[key] = (seconds if old is None
                                  else self.ema * seconds +
                                  (1 - self.ema) * old)
 
     def observe_packed(self, model: str, kind: str, tokens: int,
-                       degree: int, batch: int, seconds: float):
+                       degree: int, batch: int, seconds: float,
+                       span: int = 1):
         """Online calibration from one measured pack duration (EMA over
         the packed key; a batch of 1 calibrates the single-task key)."""
         if batch <= 1:
-            return self.observe(model, kind, tokens, degree, seconds)
-        key = self._pack_key(model, kind, tokens, degree, batch)
+            return self.observe(model, kind, tokens, degree, seconds,
+                                span)
+        key = self._pack_key(model, kind, tokens, degree, batch, span)
         old = self.pack_calibration.get(key)
         self.pack_calibration[key] = (seconds if old is None
                                       else self.ema * seconds +
                                       (1 - self.ema) * old)
 
     # ------------------------------------------------------------------
-    def request_remaining(self, model: str, graph, degree: int = 1) -> float:
+    def request_remaining(self, model: str, graph, degree: int = 1,
+                          span: int = 1) -> float:
         """Remaining trajectory work of a request at `degree` (for SRTF)."""
         total = 0.0
         for t in graph.remaining_tasks():
             total += self.estimate(model, t.kind,
-                                   t.meta.get("tokens", 4096), degree)
+                                   t.meta.get("tokens", 4096), degree,
+                                   span)
         return total
 
     # ------------------------------------------------------------------

@@ -20,6 +20,16 @@ Backend-aware execution (§4.5): payloads are staged into the symmetric
 plane in chunks; the backend selector picks chunk sizes per message-size
 range from a microbenchmark table.
 
+Topology-aware execution (DESIGN.md §10): when the comm is constructed
+with a :class:`~repro.core.trajectory.ClusterTopology` and a group spans
+more than one host, ``all_gather`` runs the hierarchical two-stage
+protocol — intra-host gather, inter-host leader exchange, intra-host
+broadcast — so each payload byte crosses the slow inter-host link once
+instead of ``(group-local peers)`` times.  The result is bit-exact
+versus the flat single-stage path (property-tested in
+tests/test_gfc_hierarchical.py): the final concatenation follows the
+descriptor's rank order regardless of which stage moved each part.
+
 Hardware adaptation note (DESIGN.md §2): on a real TPU deployment the
 expensive per-group state is the compiled XLA executable, not a NCCL
 communicator — see ``core/executable_cache.py`` for the compile-once-per-
@@ -92,12 +102,20 @@ class GroupFreeComm:
 
     def __init__(self, world_size: int, *, num_slots: int = 2,
                  strict: bool = True, session: int = 0,
-                 selector: Optional[BackendSelector] = None):
+                 selector: Optional[BackendSelector] = None,
+                 topology=None):
         self.world_size = world_size
         self.num_slots = num_slots
         self.strict = strict
         self.session = session
         self.selector = selector or BackendSelector()
+        # ClusterTopology (DESIGN.md §10) or None; spanning groups then
+        # execute hierarchical two-stage collectives.  Plans are keyed
+        # by the RANKS tuple, not the parent gid: the control plane
+        # registers a fresh descriptor per dispatch, and a gid-keyed
+        # cache would rebuild (and leak) sub-descriptors every step.
+        self.topology = topology
+        self._hier: dict[tuple[int, ...], dict] = {}
         self._cv = threading.Condition()
         # per ordered edge (src, dst): signal slots + local phase bit at src
         self._slots: dict[tuple[int, int], list[_Slot]] = {
@@ -112,7 +130,8 @@ class GroupFreeComm:
         self._gids = itertools.count()
         self.violations: list[str] = []
         self.stats = {"registrations": 0, "collectives": 0,
-                      "bytes_staged": 0, "reg_seconds": 0.0}
+                      "bytes_staged": 0, "reg_seconds": 0.0,
+                      "hierarchical": 0}
 
     # ------------------------------------------------------------------
     # group registration: METADATA ONLY (the paper's ~60 us operation)
@@ -224,11 +243,89 @@ class GroupFreeComm:
                 del self._stage[k]
 
     # ------------------------------------------------------------------
+    # hierarchical execution for host-spanning groups (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def _spans_hosts(self, desc: GroupDescriptor) -> bool:
+        return (self.topology is not None
+                and self.topology.span_of(desc.ranks) > 1)
+
+    def _hier_plan(self, desc: GroupDescriptor) -> dict:
+        """Memoized two-stage plan for a spanning group: one intra-host
+        sub-descriptor per host (group rank order preserved within the
+        host) plus a leader descriptor over each host's first group
+        rank.  Keyed by the ranks tuple so every dispatch of the same
+        layout — each of which registers a fresh parent descriptor —
+        reuses one set of sub-groups (bounded by distinct layouts, not
+        by steps).  Built once under the lock so every member rank
+        shares the same sub-group gids; registration stays
+        metadata-only."""
+        with self._cv:
+            plan = self._hier.get(desc.ranks)
+            if plan is None:
+                by_host: dict[int, list[int]] = {}
+                for r in desc.ranks:
+                    by_host.setdefault(self.topology.host_of(r),
+                                       []).append(r)
+                hosts = sorted(by_host)
+                plan = {
+                    "hosts": hosts,
+                    "by_host": by_host,
+                    "local": {h: self.register_group(tuple(by_host[h]))
+                              for h in hosts},
+                    "leader": self.register_group(
+                        tuple(by_host[h][0] for h in hosts)),
+                }
+                self._hier[desc.ranks] = plan
+        return plan
+
+    def _gather_parts(self, desc: GroupDescriptor, rank: int,
+                      payload) -> list:
+        """All-gather that returns the per-rank parts list (aligned with
+        ``desc.ranks``) instead of a concatenation — the hierarchical
+        path reassembles in the PARENT group's rank order for
+        bit-exactness versus the flat path."""
+        epoch = self._epoch.get((rank, desc.gid), 0)
+        self._stage_put(desc, epoch, rank, payload)
+        self.barrier(desc, rank)
+        parts = [self._stage_get(desc, epoch, p) for p in desc.ranks]
+        self._prune(desc, epoch)
+        return parts
+
+    def _all_gather_hier(self, desc: GroupDescriptor, rank: int,
+                         shard: np.ndarray, axis: int) -> np.ndarray:
+        plan = self._hier_plan(desc)
+        host = self.topology.host_of(rank)
+        local = plan["local"][host]
+        # stage 1: intra-host gather of this host's parts
+        parts = self._gather_parts(local, rank, shard)
+        # stage 3 epoch is read BEFORE the stage-2 barrier advances it
+        epoch3 = self._epoch.get((rank, local.gid), 0)
+        if rank == local.ranks[0]:
+            # stage 2: leaders exchange whole host blocks (each block
+            # crosses the inter-host fabric exactly once)
+            blocks = self._gather_parts(plan["leader"], rank, parts)
+            by_rank = {}
+            for h, block in zip(plan["hosts"], blocks):
+                for r, part in zip(plan["by_host"][h], block):
+                    by_rank[r] = part
+            # stage 3: intra-host broadcast of the assembled mapping
+            # (staged directly — the mapping is not an ndarray payload)
+            self._stage_put(local, epoch3, rank, by_rank)
+        self.barrier(local, rank)
+        out = self._stage_get(local, epoch3, local.ranks[0])
+        self._prune(local, epoch3)
+        with self._cv:
+            self.stats["hierarchical"] += 1
+        return np.concatenate([out[r] for r in desc.ranks], axis=axis)
+
+    # ------------------------------------------------------------------
     # collectives (issued by every member rank)
     # ------------------------------------------------------------------
     def all_gather(self, desc: GroupDescriptor, rank: int,
                    shard: np.ndarray, axis: int = 0) -> np.ndarray:
         shard = np.asarray(shard)
+        if self._spans_hosts(desc):
+            return self._all_gather_hier(desc, rank, shard, axis)
         epoch = self._epoch.get((rank, desc.gid), 0)
         self._stage_put(desc, epoch, rank, shard)     # stage local input
         self.barrier(desc, rank)                      # Algorithm 1

@@ -113,6 +113,35 @@ def plan_bytes(entries: list[TransferEntry]) -> int:
     return sum(e.nbytes for e in entries)
 
 
+def migration_cost(entries: list[TransferEntry], topo) -> float:
+    """Topology-priced execution time of a transfer plan (DESIGN.md §10).
+
+    Bytes are aggregated per physical link: an intra-host rank pair is
+    its own link; all traffic between one host pair shares one
+    inter-host link.  Distinct links transfer in parallel, so the plan's
+    time is the slowest link plus one setup (inter-host setup when any
+    slice crosses hosts).  This is how ``Reallocate`` across hosts is
+    priced honestly: the same byte count costs
+    ``intra_bw/inter_bw`` x more once it leaves the host.
+    """
+    if not entries:
+        return 0.0
+    intra: dict[tuple[int, int], int] = {}
+    inter: dict[tuple[int, int], int] = {}
+    for e in entries:
+        hs, hd = topo.host_of(e.src_rank), topo.host_of(e.dst_rank)
+        if hs == hd:
+            key = (min(e.src_rank, e.dst_rank), max(e.src_rank, e.dst_rank))
+            intra[key] = intra.get(key, 0) + e.nbytes
+        else:
+            key = (min(hs, hd), max(hs, hd))
+            inter[key] = inter.get(key, 0) + e.nbytes
+    t_intra = max((b / topo.intra_bw for b in intra.values()), default=0.0)
+    t_inter = max((b / topo.inter_bw for b in inter.values()), default=0.0)
+    setup = topo.inter_lat if inter else topo.intra_lat
+    return setup + max(t_intra, t_inter)
+
+
 # ---------------------------------------------------------------------------
 # distributed execution over GFC pair groups
 # ---------------------------------------------------------------------------

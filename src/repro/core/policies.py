@@ -20,14 +20,109 @@ from typing import Optional
 from repro.core.scheduler import (Action, Decision, Dispatch, PackedDispatch,
                                   Policy, Preempt, Reallocate, SchedulerView,
                                   pack_signature)
-from repro.core.trajectory import ExecutionLayout
+from repro.core.trajectory import ClusterTopology, ExecutionLayout
 
 
-def _contiguous(free: list[int], k: int) -> Optional[tuple[int, ...]]:
-    """Pick k free ranks (ordered)."""
-    if len(free) < k:
+# ---------------------------------------------------------------------------
+# locality-aware placement helpers (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def _by_host(free: list[int], topo: ClusterTopology) -> dict[int, list[int]]:
+    out: dict[int, list[int]] = {}
+    for r in free:
+        out.setdefault(topo.host_of(r), []).append(r)
+    return out
+
+
+def _pick_ranks(free: list[int], k: int,
+                topo: Optional[ClusterTopology] = None
+                ) -> Optional[tuple[int, ...]]:
+    """Pick k free ranks, preferring intra-host contiguous groups: the
+    tightest-fitting single host first (leaving large pools intact for
+    wide groups), spilling across the fewest hosts (largest pools first)
+    only when no single host can satisfy the degree.  On a one-host
+    topology this is exactly ``free[:k]`` — existing traces unchanged."""
+    if k <= 0 or len(free) < k:
         return None
-    return tuple(free[:k])
+    if topo is None or topo.num_hosts == 1:
+        return tuple(free[:k])
+    pools = _by_host(free, topo)
+    fits = [h for h, rs in pools.items() if len(rs) >= k]
+    if fits:
+        h = min(fits, key=lambda h: (len(pools[h]), h))
+        return tuple(pools[h][:k])
+    picked: list[int] = []
+    for h in sorted(pools, key=lambda h: (-len(pools[h]), h)):
+        take = min(k - len(picked), len(pools[h]))
+        picked.extend(pools[h][:take])
+        if len(picked) == k:
+            break
+    return tuple(sorted(picked))
+
+
+def _grow_ranks(free: list[int], n: int, topo: Optional[ClusterTopology],
+                base: tuple[int, ...]) -> tuple[int, ...]:
+    """Pick n extra ranks to grow `base`, preferring ranks on hosts the
+    layout already touches (growth should not widen the span when it
+    doesn't have to).  Single-host: exactly ``free[:n]``."""
+    if topo is None or topo.num_hosts == 1:
+        return tuple(free[:n])
+    base_hosts = {topo.host_of(r) for r in base}
+    same = [r for r in free if topo.host_of(r) in base_hosts]
+    if len(same) >= n:
+        return tuple(same[:n])
+    rest = [r for r in free if topo.host_of(r) not in base_hosts]
+    spill = _pick_ranks(rest, n - len(same), topo) or \
+        tuple(rest[:n - len(same)])
+    return tuple(same) + tuple(spill)
+
+
+def _shrink_ranks(ranks: tuple[int, ...], tgt: int,
+                  topo: Optional[ClusterTopology] = None
+                  ) -> tuple[int, ...]:
+    """Keep tgt of `ranks`, dropping the hosts with the fewest members
+    first so the shrunk pin *reduces* span whenever it can.  Original
+    rank order is preserved.  Single-host: exactly ``ranks[:tgt]``."""
+    if topo is None or topo.num_hosts == 1:
+        return ranks[:tgt]
+    count: dict[int, int] = {}
+    for r in ranks:
+        count[topo.host_of(r)] = count.get(topo.host_of(r), 0) + 1
+    keep: set[int] = set()
+    for h in sorted(count, key=lambda h: (-count[h], h)):
+        for r in ranks:
+            if topo.host_of(r) == h and len(keep) < tgt:
+                keep.add(r)
+        if len(keep) >= tgt:
+            break
+    return tuple(r for r in ranks if r in keep)
+
+
+def _repin_ranks(lay_ranks: tuple[int, ...], free: list[int], k: int,
+                 topo: ClusterTopology) -> Optional[tuple[int, ...]]:
+    """A same-degree single-host replacement for a spanning layout,
+    preferring the host already holding the most of the layout's ranks
+    (fewest migrated bytes).  ``None`` when no host fits the degree."""
+    best = None
+    for h in range(topo.num_hosts):
+        own = [r for r in lay_ranks if topo.host_of(r) == h]
+        fr = [r for r in free if topo.host_of(r) == h]
+        if len(own) + len(fr) < k:
+            continue
+        key = (-len(own), h)
+        if best is None or key < best[0]:
+            best = (key, own, fr)
+    if best is None:
+        return None
+    _, own, fr = best
+    return tuple(sorted((own + fr)[:k]))
+
+
+def _contiguous(free: list[int], k: int,
+                topo: Optional[ClusterTopology] = None
+                ) -> Optional[tuple[int, ...]]:
+    """Pick k free ranks (ordered; locality-aware under a topology)."""
+    return _pick_ranks(free, k, topo)
 
 
 def _edf_key(trg) -> tuple:
@@ -138,7 +233,8 @@ class LegacyPolicy(Policy):
             self._active = ready[0][1].id
         for t, req, g in ready:
             if req.id == self._active:
-                ranks = _contiguous(view.free_ranks, min(k, view.num_ranks))
+                ranks = _contiguous(view.free_ranks, min(k, view.num_ranks),
+                                    view.topology)
                 if ranks is None:
                     return []
                 return [Decision(t.id, ExecutionLayout(ranks))]
@@ -262,8 +358,8 @@ class EDFPolicy(Policy):
                     if eta <= req.deadline:
                         choice = d
                         break
-            ranks = tuple(free[:choice])
-            free = free[choice:]
+            ranks = _pick_ranks(free, choice, view.topology)
+            free = [r for r in free if r not in set(ranks)]
             out.append(Decision(t.id, ExecutionLayout(ranks)))
         return out
 
@@ -338,8 +434,9 @@ class PackingPolicy(Policy):
         for t, req, g in ready:
             if t.kind in ("encode", "decode"):
                 if free:
-                    actions.append(Dispatch(
-                        t.id, ExecutionLayout((free.pop(0),))))
+                    pick = _pick_ranks(free, 1, view.topology)
+                    free = [r for r in free if r not in set(pick)]
+                    actions.append(Dispatch(t.id, ExecutionLayout(pick)))
                     dispatched_reqs.add(req.id)
             else:
                 denoise.append((t, req, g))
@@ -355,8 +452,11 @@ class PackingPolicy(Policy):
                                        running_reqs)
                 if pack is None:
                     break                   # held for an imminent peer
-                ranks = tuple(free[:self.degree])
-                free = free[self.degree:]
+                # pack layouts rank by topology-priced cost: a pack's
+                # collectives are paid once per step, so the minimal-span
+                # placement _pick_ranks prefers is also the cheapest
+                ranks = _pick_ranks(free, self.degree, view.topology)
+                free = [r for r in free if r not in set(ranks)]
                 dispatched_reqs.update(req.id for _, req, _ in pack)
                 if len(pack) == 1:
                     actions.append(Dispatch(pack[0][0].id,
@@ -397,7 +497,8 @@ class ElasticPolicy(Policy):
                  max_degree: Optional[int] = None,
                  shrink_queue_factor: float = 1.0,
                  preempt_min_degree: int = 2,
-                 pack: bool = False, max_pack: int = 8):
+                 pack: bool = False, max_pack: int = 8,
+                 topology_aware: bool = True):
         self.candidates = candidate_degrees
         self.max_degree = max_degree
         self.shrink_queue_factor = shrink_queue_factor
@@ -405,6 +506,12 @@ class ElasticPolicy(Policy):
         # dispatches of one schedule point merge into PackedDispatch
         self.pack = pack
         self.max_pack = max_pack
+        # topology awareness (DESIGN.md §10): when on, placement prefers
+        # intra-host groups, degree choice prices the span a candidate
+        # layout would touch, and spanning requests re-pin onto one host
+        # when capacity opens up.  ``False`` is the topology-blind
+        # baseline (identical to pre-topology behavior on any cluster).
+        self.topology_aware = topology_aware
         # Preemption takes effect at the victim's device boundary (the
         # in-flight slice cannot be killed on either backend), so evicting
         # a single-rank task frees its rank no earlier than letting it
@@ -418,13 +525,32 @@ class ElasticPolicy(Policy):
         return self.candidates or \
             [d for d in (1, 2, 4, 8, 16, 32) if d <= maxd]
 
+    def _topo(self, view: SchedulerView) -> Optional[ClusterTopology]:
+        """The topology placement/pricing should see (None when blind
+        or single-host — both reduce to the pre-topology behavior)."""
+        topo = view.topology
+        if not self.topology_aware or topo is None or topo.num_hosts == 1:
+            return None
+        return topo
+
+    def _min_span(self, view: SchedulerView, d: int) -> int:
+        """Smallest span a degree-d layout can achieve on this cluster
+        (what a locality-aware placement would produce)."""
+        topo = self._topo(view)
+        if topo is None:
+            return 1
+        return -(-d // topo.ranks_per_host)
+
     @staticmethod
-    def _remaining(view, req, g, d) -> float:
-        return view.cost.request_remaining(req.model, g, d)
+    def _remaining(view, req, g, d, span: int = 1) -> float:
+        return view.cost.request_remaining(req.model, g, d, span)
 
     def _need_degree(self, view, req, g) -> int:
         """Smallest degree predicted to meet the deadline; the largest
-        candidate when nothing meets it (degrade gracefully)."""
+        candidate when nothing meets it (degrade gracefully).  Candidate
+        degrees are priced at the span their locality-aware placement
+        would touch (DESIGN.md §10) — a spanning degree-8 layout is NOT
+        assumed to cost the same as a host-local one."""
         cands = self._cands(view)
         if req.deadline is None:
             return 1
@@ -432,7 +558,9 @@ class ElasticPolicy(Policy):
                    for t in g.tasks.values()):
             return 1        # only single-rank encode/decode stages left
         for d in cands:
-            if view.now + self._remaining(view, req, g, d) <= req.deadline:
+            if view.now + self._remaining(view, req, g, d,
+                                          self._min_span(view, d)) \
+                    <= req.deadline:
                 return d
         return cands[-1]
 
@@ -505,6 +633,8 @@ class ElasticPolicy(Policy):
                    if t.kind == "denoise" and t.id not in view.preempting]
             return den[0][1] if den else None
 
+        topo = self._topo(view)
+
         # ---- 1. shrink over-provisioned work when the queue grows ----
         # (a pin replacement keeps the victim progressing at a smaller
         # degree — strictly cheaper than preemption, which discards the
@@ -520,8 +650,11 @@ class ElasticPolicy(Policy):
                     continue
                 tgt = self._need_degree(view, req, view.graphs[rid])
                 if tgt < lay.degree:
+                    # drop the minority hosts first: the shrunk pin
+                    # should reduce span whenever it can (DESIGN.md §10)
                     actions.append(Reallocate(
-                        rid, ExecutionLayout(lay.ranks[:tgt])))
+                        rid, ExecutionLayout(
+                            _shrink_ranks(lay.ranks, tgt, topo))))
                     shrink_reclaim += lay.degree - tgt
 
         # ---- 2. preempt best-effort work for SLO-critical arrivals ---
@@ -563,20 +696,28 @@ class ElasticPolicy(Policy):
             lay = effective_layout(rid)
             if lay is None:
                 continue
+            cur_span = topo.span_of(lay.ranks) if topo else 1
             if req.deadline is not None:
                 # straggler: grant ranks so the next boundary can meet
                 # (or come closest to) the deadline
-                eta = view.now + self._remaining(view, req, g, lay.degree)
+                eta = view.now + self._remaining(view, req, g, lay.degree,
+                                                 cur_span)
                 if eta <= req.deadline:
                     continue
                 # grow only when the larger degree actually rescues the
                 # deadline — a lost deadline is sunk cost, and grabbing
-                # the machine for it starves still-winnable requests
+                # the machine for it starves still-winnable requests.
+                # The rescue test prices the span the grown layout would
+                # actually touch (DESIGN.md §10).
                 want = None
                 for d in cands:
                     if d <= lay.degree or d - lay.degree > len(free):
                         continue
-                    if view.now + self._remaining(view, req, g, d) \
+                    ext = _grow_ranks(free, d - lay.degree, topo,
+                                      lay.ranks)
+                    span_d = topo.span_of(lay.ranks + ext) if topo else 1
+                    if view.now + self._remaining(view, req, g, d,
+                                                  span_d) \
                             <= req.deadline:
                         want = d
                         break
@@ -590,10 +731,39 @@ class ElasticPolicy(Policy):
                 want = bigger[-1] if bigger else None
             if want is None or want <= lay.degree:
                 continue
-            extra = tuple(free[:want - lay.degree])
-            free = free[want - lay.degree:]
+            extra = _grow_ranks(free, want - lay.degree, topo, lay.ranks)
+            free = [r for r in free if r not in set(extra)]
             actions.append(Reallocate(rid, ExecutionLayout(
                 lay.ranks + extra)))
+
+        # ---- 3b. topology: re-pin spanning work onto fewer hosts -----
+        # A running request whose layout straddles hosts pays the
+        # inter-host collective tax every step; once a single host can
+        # seat its degree, a same-degree re-pin (preferring the host
+        # already holding most of its ranks) reduces span at the next
+        # boundary for one bounded migration (DESIGN.md §10).
+        if topo is not None:
+            realloced = {a.request_id for a in actions
+                         if isinstance(a, Reallocate)}
+            for rid in sorted(run_by_req):
+                if rid in realloced or rid in view.pinned:
+                    continue
+                lay = effective_layout(rid)
+                if lay is None or topo.span_of(lay.ranks) <= 1:
+                    continue
+                g = view.graphs[rid]
+                # the re-pin migrates once but saves every remaining
+                # step: only worth it with >= 2 denoise steps left
+                pending = sum(1 for t in g.tasks.values()
+                              if t.kind == "denoise"
+                              and t.state == "pending")
+                if pending < 2:
+                    continue
+                cand = _repin_ranks(lay.ranks, free, lay.degree, topo)
+                if cand is None:
+                    continue
+                free = [r for r in free if r not in set(cand)]
+                actions.append(Reallocate(rid, ExecutionLayout(cand)))
 
         # ---- 4. dispatch ready tasks on what's left ------------------
         # count ranks an incomplete SLO request still needs beyond what
@@ -622,12 +792,12 @@ class ElasticPolicy(Policy):
 
         def dispatch(t, req, g, k) -> bool:
             # callers attempt try_join first; by this point the task
-            # needs its own ranks
+            # needs its own ranks (locality-aware under a topology)
             nonlocal free
             if k <= 0 or k > len(free):
                 return False
-            ranks = tuple(free[:k])
-            free = free[k:]
+            ranks = _pick_ranks(free, k, topo)
+            free = [r for r in free if r not in set(ranks)]
             granted[req.id] = granted.get(req.id, 0) + k
             if self.pack and t.kind == "denoise":
                 open_packs.append({"sig": pack_signature(t, req), "k": k,
@@ -718,7 +888,14 @@ class ElasticPolicy(Policy):
 
 
 def make_policy(name: str, num_ranks: int) -> Policy:
-    """Registry used by benchmarks/examples (--policy flag)."""
+    """Registry used by benchmarks/examples (--policy flag).
+
+    ``num_ranks`` stays a bare count (back-compat); policies read the
+    cluster topology from their SchedulerView at schedule time.
+    ``elastic-blind`` is the topology-blind baseline: identical to
+    ``elastic`` on one host, but it places by bare rank index on
+    multi-host clusters (benchmarks/policies_e2e.py --only multi-host).
+    """
     table = {
         "legacy": lambda: LegacyPolicy(),
         "fcfs-sp1": lambda: FCFSPolicy(group_size=1),
@@ -727,6 +904,7 @@ def make_policy(name: str, num_ranks: int) -> Policy:
         "srtf-spmax": lambda: SRTFPolicy(sp_degree=num_ranks),
         "edf": lambda: EDFPolicy(),
         "elastic": lambda: ElasticPolicy(),
+        "elastic-blind": lambda: ElasticPolicy(topology_aware=False),
         "elastic-pack": lambda: ElasticPolicy(pack=True),
         "packing": lambda: PackingPolicy(),
     }

@@ -46,8 +46,9 @@ from typing import Optional, Union
 
 from repro.core.cost_model import CostModel
 from repro.core.event_loop import EventLoop, VirtualClock
-from repro.core.trajectory import (ExecutionLayout, Request, RequestGraph,
-                                   TrajectoryTask)
+from repro.core.trajectory import (ClusterTopology, ExecutionLayout,
+                                   Request, RequestGraph, TrajectoryTask,
+                                   as_topology)
 
 
 @dataclass
@@ -131,6 +132,18 @@ class SchedulerView:
     graphs: dict[str, RequestGraph] = field(default_factory=dict)
     pinned: dict[str, ExecutionLayout] = field(default_factory=dict)
     preempting: frozenset = frozenset()
+    # cluster topology (DESIGN.md §10); None only when a view is built
+    # by hand in tests — the control plane always supplies one
+    topology: Optional[ClusterTopology] = None
+
+    @property
+    def free_by_host(self) -> dict[int, list[int]]:
+        """Per-host free-rank view (sorted within each host)."""
+        topo = self.topology or ClusterTopology.single_host(self.num_ranks)
+        out: dict[int, list[int]] = {}
+        for r in sorted(self.free_ranks):
+            out.setdefault(topo.host_of(r), []).append(r)
+        return out
 
 
 class Policy:
@@ -141,17 +154,29 @@ class Policy:
 
 
 class ControlPlane:
-    def __init__(self, num_ranks: int, policy: Policy, cost: CostModel,
-                 backend, *, dispatch_overhead: float = 0.0):
-        self.num_ranks = num_ranks
+    def __init__(self, topology=None, policy: Policy = None,
+                 cost: CostModel = None, backend=None, *,
+                 dispatch_overhead: float = 0.0, num_ranks=None):
+        # `topology` accepts a ClusterTopology or a bare rank count
+        # (back-compat shim: ControlPlane(num_ranks=N) — positional or
+        # keyword — synthesizes a one-host topology with identical
+        # behavior, DESIGN.md §10)
+        if topology is None:
+            topology = num_ranks
+        assert topology is not None, "topology (or num_ranks=) required"
+        self.topology = as_topology(topology)
+        self.num_ranks = self.topology.num_ranks
         self.policy = policy
         self.cost = cost
+        # the plane's topology governs pricing: a cost model reused
+        # across planes must not keep a previous plane's topology
+        cost.topology = self.topology
         self.backend = backend
         self.dispatch_overhead = dispatch_overhead
         self.graphs: dict[str, RequestGraph] = {}
         self.requests: dict[str, Request] = {}
         self.running: dict[str, tuple[TrajectoryTask, ExecutionLayout]] = {}
-        self.free_ranks: set[int] = set(range(num_ranks))
+        self.free_ranks: set[int] = set(range(self.num_ranks))
         self.now = 0.0
         self.events: list[dict] = []        # trace for benchmarks
         # elastic state
@@ -214,7 +239,8 @@ class ControlPlane:
                              running=dict(self.running),
                              requests=self.requests, graphs=self.graphs,
                              pinned=dict(self.pinned),
-                             preempting=frozenset(self.preempting))
+                             preempting=frozenset(self.preempting),
+                             topology=self.topology)
 
     # ------------------------------------------------------------------
     # action application (validated; invalid actions are skipped)
@@ -312,7 +338,7 @@ class ControlPlane:
         self.packs[pack_id] = {
             "members": tuple(t.id for t, _, _ in members),
             "layout": a.layout, "model": model, "tokens": tokens,
-            "seqs": seqs,
+            "seqs": seqs, "span": a.layout.span(self.topology),
         }
         self.events.append({"t": self.now, "ev": "packed_dispatch",
                             "pack": pack_id, "batch": len(members),
@@ -456,7 +482,7 @@ class ControlPlane:
                 seq=rec["seqs"][tid]), observe=False)
         self.cost.observe_packed(rec["model"], "denoise", rec["tokens"],
                                  rec["layout"].degree, len(rec["members"]),
-                                 c.duration)
+                                 c.duration, span=rec["span"])
 
     def _complete_task(self, c: Completion, observe: bool = True):
         if c.task_id not in self.running:
@@ -501,7 +527,8 @@ class ControlPlane:
         if observe:
             self.cost.observe(self.requests[task.request_id].model,
                               task.kind, task.meta.get("tokens", 4096),
-                              layout.degree, c.duration)
+                              layout.degree, c.duration,
+                              span=layout.span(self.topology))
         req = self.requests[task.request_id]
         if graph.is_done() and req.done_time is None:
             req.done_time = c.finish_time

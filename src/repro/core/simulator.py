@@ -17,6 +17,12 @@ exactly when the thread backend's drain finishes — and the control plane
 discards it (freeing the ranks) instead of committing outputs, so both
 backends share identical reclaim timing.  Completions of superseded
 dispatches are rejected by the plane via the `seq` guard.
+
+Topology (DESIGN.md §10): the backend reads the plane's
+:class:`~repro.core.trajectory.ClusterTopology` — spanning layouts are
+priced via span-keyed cost estimates, and layout changes that cross
+hosts are priced from the actual migration plan (inter-host slices over
+the slow link) instead of the flat single-link formula.
 """
 from __future__ import annotations
 
@@ -26,8 +32,8 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.scheduler import Completion
-from repro.core.trajectory import (ExecutionLayout, RequestGraph,
-                                   TrajectoryTask)
+from repro.core.trajectory import (ClusterTopology, ExecutionLayout,
+                                   RequestGraph, TrajectoryTask)
 
 # migration pricing: staged copies over the interconnect + software setup
 _LINK_BW = 50e9                  # bytes/s (ICI-class)
@@ -36,6 +42,8 @@ _MIGRATION_SETUP = 60e-6         # GFC logical-pair registration (paper: 60us)
 
 def migration_seconds(nbytes: int, src: ExecutionLayout,
                       dst: ExecutionLayout) -> float:
+    """Single-host migration pricing (the pre-topology model, kept
+    byte-identical for one-host topologies)."""
     if src is None or src.ranks == dst.ranks:
         return 0.0
     # each byte moves once; transfers parallel across rank pairs
@@ -71,11 +79,30 @@ class SimBackend:
         return (x % 10_000) / 10_000.0
 
     # ------------------------------------------------------------------
+    @property
+    def topology(self) -> ClusterTopology:
+        if self.plane is not None:
+            return self.plane.topology
+        return ClusterTopology.single_host(1 << 16)     # detached: flat
+
+    def _migration(self, art, layout: ExecutionLayout) -> float:
+        """Price one artifact's move into `layout`.  One-host topologies
+        keep the flat single-link formula; multi-host topologies price
+        the actual transfer plan, with cross-host slices over the slow
+        inter-host link (DESIGN.md §10)."""
+        topo = self.topology
+        if topo.num_hosts <= 1 or not art.fields:
+            return migration_seconds(art.nbytes, art.layout, layout)
+        from repro.core.migration import migration_cost, plan_migration
+        entries = plan_migration(art.fields, art.layout, layout)
+        return migration_cost(entries, topo)
+
     def dispatch(self, task: TrajectoryTask, layout: ExecutionLayout,
                  graph: RequestGraph, now: float):
         model = graph.request.model
         tokens = task.meta.get("tokens", 4096)
-        dur = self.cost.estimate(model, task.kind, tokens, layout.degree)
+        dur = self.cost.estimate(model, task.kind, tokens, layout.degree,
+                                 span=layout.span(self.topology))
         if self.jitter:
             dur *= 1.0 + self.jitter * (self._rand() - 0.5)
         # migration latency when the input artifact lives in another layout
@@ -83,8 +110,7 @@ class SimBackend:
         for aid in task.inputs:
             art = graph.artifacts[aid]
             if art.layout is not None and art.layout.ranks != layout.ranks:
-                m = migration_seconds(art.nbytes, art.layout, layout)
-                mig += m
+                mig += self._migration(art, layout)
                 self.migrated_bytes += art.nbytes
                 art.layout = layout      # artifact now lives here
         # duration excludes migration, matching the thread backend (which
@@ -110,7 +136,8 @@ class SimBackend:
         model = graph0.request.model
         tokens = task0.meta.get("tokens", 4096)
         dur = self.cost.estimate_packed(model, "denoise", tokens,
-                                        layout.degree, len(members))
+                                        layout.degree, len(members),
+                                        span=layout.span(self.topology))
         if self.jitter:
             dur *= 1.0 + self.jitter * (self._rand() - 0.5)
         mig = 0.0
@@ -119,7 +146,7 @@ class SimBackend:
                 art = graph.artifacts[aid]
                 if art.layout is not None and \
                         art.layout.ranks != layout.ranks:
-                    mig += migration_seconds(art.nbytes, art.layout, layout)
+                    mig += self._migration(art, layout)
                     self.migrated_bytes += art.nbytes
                     art.layout = layout      # artifact now lives here
         finish = now + self.dispatch_overhead + mig + dur

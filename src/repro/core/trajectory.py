@@ -65,6 +65,69 @@ class Artifact:
 
 
 # ---------------------------------------------------------------------------
+# Cluster topology (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ClusterTopology:
+    """Hosts x local ranks, with link parameters.
+
+    Global rank ``r`` lives on host ``r // ranks_per_host``.  Intra-host
+    links model ICI/NVLink-class interconnect; inter-host links model
+    NIC-class fabric — the dominant communication cost on any real
+    multi-host deployment, which is why placement, cost estimation, GFC
+    execution, and migration pricing are all keyed by the *span* (number
+    of hosts a layout touches).  The defaults keep the single-host
+    numbers identical to the pre-topology runtime (`_LINK_BW`,
+    `_MIGRATION_SETUP` in core/simulator.py).
+    """
+    num_hosts: int = 1
+    ranks_per_host: int = 1
+    intra_bw: float = 50e9          # bytes/s within a host
+    inter_bw: float = 12.5e9        # bytes/s across hosts
+    intra_lat: float = 60e-6        # per-transfer setup within a host
+    inter_lat: float = 250e-6      # per-transfer setup across hosts
+
+    def __post_init__(self):
+        assert self.num_hosts >= 1 and self.ranks_per_host >= 1
+
+    @property
+    def num_ranks(self) -> int:
+        return self.num_hosts * self.ranks_per_host
+
+    @property
+    def inter_cost_factor(self) -> float:
+        """How much more expensive an inter-host byte is (>= 1)."""
+        return max(self.intra_bw / self.inter_bw, 1.0)
+
+    def host_of(self, rank: int) -> int:
+        return rank // self.ranks_per_host
+
+    def host_ranks(self, host: int) -> tuple[int, ...]:
+        base = host * self.ranks_per_host
+        return tuple(range(base, base + self.ranks_per_host))
+
+    def hosts_of(self, ranks) -> tuple[int, ...]:
+        return tuple(sorted({self.host_of(r) for r in ranks}))
+
+    def span_of(self, ranks) -> int:
+        return len({self.host_of(r) for r in ranks})
+
+    @classmethod
+    def single_host(cls, num_ranks: int) -> "ClusterTopology":
+        return cls(num_hosts=1, ranks_per_host=num_ranks)
+
+
+def as_topology(topo) -> ClusterTopology:
+    """Back-compat shim: ``num_ranks=N`` call sites synthesize a one-host
+    topology; existing behavior (placement, pricing, traces) is
+    unchanged under it."""
+    if isinstance(topo, ClusterTopology):
+        return topo
+    return ClusterTopology.single_host(int(topo))
+
+
+# ---------------------------------------------------------------------------
 # Execution layouts (paper §3.2)
 # ---------------------------------------------------------------------------
 
@@ -77,6 +140,13 @@ class ExecutionLayout:
     @property
     def degree(self) -> int:
         return len(self.ranks)
+
+    def span(self, topo: ClusterTopology) -> int:
+        """Hosts touched by this layout under `topo`."""
+        return topo.span_of(self.ranks)
+
+    def hosts(self, topo: ClusterTopology) -> tuple[int, ...]:
+        return topo.hosts_of(self.ranks)
 
     def __post_init__(self):
         assert len(set(self.ranks)) == len(self.ranks), "duplicate ranks"

@@ -166,6 +166,42 @@ def small_image_burst_trace(cost: CostModel, *, duration: float = 90.0,
     return out
 
 
+def multi_host_trace(cost: CostModel, *, duration: float = 240.0,
+                     load: float = 1.0, num_ranks: int = 8,
+                     steps: int = 25, seed: int = 23,
+                     m_alpha: float = 0.8, s_alpha: float = 1.5
+                     ) -> list[Request]:
+    """Topology-stress workload (DESIGN.md §10): a Poisson M-image SLO
+    stream plus periodic dense S-image bursts on a multi-host cluster.
+
+    Deadlines are tight enough that requests need SP degrees of 2-4 —
+    placements that FIT inside one host of a 2-host x 4-rank cluster but
+    only if the policy packs them there.  A topology-blind policy grabs
+    free ranks by bare index, routinely straddling hosts; every such
+    step pays the inter-host collective tax, which is exactly the margin
+    between meeting and missing these SLOs."""
+    rand = _lcg(seed)
+    out: list[Request] = []
+    t_m = standalone_service_time("dit-image", "M", cost, steps)
+    rate = load * num_ranks / t_m * 0.55
+    t = 0.0
+    while t < duration:
+        t += -math.log(max(rand(), 1e-9)) / rate
+        r = make_request("dit-image", "M", t, cost, steps)
+        r.deadline = r.arrival + m_alpha * t_m + SLO_ALLOWANCE["dit-image"]
+        out.append(r)
+    t_s = standalone_service_time("dit-image", "S", cost, steps)
+    for bt in (duration * f for f in (0.2, 0.45, 0.7, 0.9)):
+        for i in range(8):
+            r = make_request("dit-image", "S", bt + i * t_s * 0.05, cost,
+                             steps)
+            r.deadline = r.arrival + s_alpha * t_s \
+                + SLO_ALLOWANCE["dit-image"]
+            out.append(r)
+    out.sort(key=lambda r: r.arrival)
+    return out
+
+
 def foreground_burst_trace(model: str, cost: CostModel, *,
                            duration: float = 120.0, load: float = 0.5,
                            num_ranks: int = 4, steps: int = 50,

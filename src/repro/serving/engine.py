@@ -19,20 +19,25 @@ from repro.core.event_loop import EventLoop, WallClock
 from repro.core.executor import ThreadBackend
 from repro.core.gfc import GroupFreeComm
 from repro.core.scheduler import ControlPlane, Policy
-from repro.core.trajectory import Request
+from repro.core.trajectory import Request, as_topology
 from repro.diffusion.adapters import convert_request
 from repro.diffusion.pipeline import DiTPipeline
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, policy: Policy, num_ranks: int,
+    def __init__(self, cfg: ModelConfig, policy: Policy, num_ranks,
                  cost: Optional[CostModel] = None, seed: int = 0):
+        # `num_ranks` accepts a bare rank count (back-compat: synthesizes
+        # a one-host topology) or a ClusterTopology (DESIGN.md §10);
+        # spanning GFC groups then run hierarchical collectives
+        topo = as_topology(num_ranks)
         self.cfg = cfg
+        self.topology = topo
         self.pipeline = DiTPipeline(cfg, seed=seed)
-        self.comm = GroupFreeComm(num_ranks)
-        self.backend = ThreadBackend(self.pipeline, num_ranks,
+        self.comm = GroupFreeComm(topo.num_ranks, topology=topo)
+        self.backend = ThreadBackend(self.pipeline, topo.num_ranks,
                                      comm=self.comm)
-        self.cp = ControlPlane(num_ranks, policy, cost or CostModel(),
+        self.cp = ControlPlane(topo, policy, cost or CostModel(),
                                self.backend)
 
     # ------------------------------------------------------------------

@@ -165,6 +165,79 @@ def test_cancel_drains_and_counts_failed():
     assert not cp.running and not cp.preempting
 
 
+def test_cancel_pinned_request_clears_pin():
+    """Cancel edge case: a cancelled request must not leave its
+    reallocation pin behind (a stale pin would keep its rank
+    reservation out of every future policy view)."""
+    cp = _cp()
+    req = _request(steps=4)
+    cp.submit(req, convert_request(req, DIT_IMAGE))
+    cp.schedule_point()
+    assert _advance_until(cp, lambda c: _running_denoise(c)[0] is not None)
+    assert cp.apply(Reallocate(req.id, ExecutionLayout((2, 3))))
+    assert req.id in cp.pinned
+    assert cp.apply(Cancel(req.id))
+    assert req.id not in cp.pinned, "cancel leaked the reallocation pin"
+    cp.run()
+    m = cp.metrics()
+    assert m["completed"] == 0 and m["failed"] == 1
+    assert not cp.running and not cp.preempting and not cp.pinned
+
+
+def test_cancel_one_pack_member_drops_only_its_outputs():
+    """Cancel edge case: cancelling ONE member of a running pack drops
+    only that member's outputs at the boundary; the surviving members'
+    outputs commit and their requests complete."""
+    from repro.core.policies import make_policy as mk
+    from repro.core.scheduler import PackedDispatch, Policy
+
+    class _Null(Policy):
+        name = "null"
+
+        def schedule(self, view):
+            return []
+
+    cost = CostModel()
+    cp = ControlPlane(4, _Null(), cost, SimBackend(cost))
+    reqs = [_request(rid, steps=2) for rid in ("keep", "drop")]
+    for r in reqs:
+        cp.submit(r, convert_request(r, DIT_IMAGE))
+    for rid in ("keep", "drop"):
+        g = cp.graphs[rid]
+        enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+        assert cp.apply(Dispatch(enc.id, ExecutionLayout((0,))))
+        for c in cp.backend.poll():
+            cp.on_completion(c)
+    tasks = {rid: [t for t in cp.graphs[rid].ready_tasks()
+                   if t.kind == "denoise"][0] for rid in ("keep", "drop")}
+    assert cp.apply(PackedDispatch((tasks["keep"].id, tasks["drop"].id),
+                                   ExecutionLayout((0, 1))))
+    assert len(cp.packs) == 1
+    assert cp.apply(Cancel("drop"))
+    # the batched slice drains; its single completion fans out
+    for c in cp.backend.poll():
+        cp.on_completion(c)
+    assert not cp.packs and not cp.running
+    keep_t, drop_t = tasks["keep"], tasks["drop"]
+    assert keep_t.state == "done"
+    for aid in keep_t.outputs:
+        assert cp.graphs["keep"].artifacts[aid].materialized, \
+            "surviving pack member lost its outputs"
+    assert drop_t.state != "done"
+    for aid in drop_t.outputs:
+        assert not cp.graphs["drop"].artifacts[aid].materialized, \
+            "cancelled pack member leaked outputs"
+    assert cp.free_ranks == set(range(4))
+    # the surviving request runs to completion; the cancelled one stays
+    # failed and is never rescheduled
+    cp.policy = mk("fcfs-sp1", 4)
+    cp.run()
+    m = cp.metrics()
+    assert m["completed"] == 1 and m["failed"] == 1
+    assert cp.requests["keep"].done_time is not None
+    assert cp.requests["drop"].failed
+
+
 def test_invalid_actions_rejected():
     cp = _cp()
     req = _request(steps=2)

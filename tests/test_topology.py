@@ -1,0 +1,309 @@
+"""Cluster-topology layer (DESIGN.md §10): topology model, locality-aware
+placement helpers, span-keyed cost model, topology-priced migration, the
+single-host back-compat shim (identical traces), and the multi-host
+simulator behavior of the elastic policy."""
+import numpy as np
+import threading
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.core.cost_model import CostModel
+from repro.core.gfc import GroupFreeComm
+from repro.core.migration import migration_cost, plan_migration
+from repro.core.policies import (ElasticPolicy, _grow_ranks, _pick_ranks,
+                                 _repin_ranks, _shrink_ranks, make_policy)
+from repro.core.scheduler import ControlPlane, trace_signature
+from repro.core.simulator import SimBackend, migration_seconds
+from repro.core.trajectory import (ClusterTopology, ExecutionLayout,
+                                   FieldSpec, Request, as_topology)
+from repro.diffusion.adapters import convert_request
+
+TOPO = ClusterTopology(num_hosts=2, ranks_per_host=4)
+
+
+# ---------------------------------------------------------------------------
+# topology model
+# ---------------------------------------------------------------------------
+
+def test_policy_view_exposes_per_host_free_ranks():
+    """ControlPlane views expose the per-host free-rank split, and the
+    num_ranks= keyword shim still constructs (DESIGN.md §10)."""
+    from repro.core.scheduler import SchedulerView
+    cost = CostModel()
+    cp = ControlPlane(TOPO, make_policy("elastic", 8), cost,
+                      SimBackend(cost))
+    view = cp._view()
+    assert view.topology is TOPO
+    assert view.free_by_host == {0: [0, 1, 2, 3], 1: [4, 5, 6, 7]}
+    # hand-built view without a topology falls back to one host
+    v = SchedulerView(now=0.0, ready=[], free_ranks=[3, 1], num_ranks=4,
+                      cost=cost, running={})
+    assert v.free_by_host == {0: [1, 3]}
+    # keyword back-compat shim + plane topology always governs pricing
+    cp2 = ControlPlane(num_ranks=4, policy=make_policy("edf", 4),
+                       cost=cost, backend=SimBackend(cost))
+    assert cp2.topology.num_hosts == 1 and cp2.num_ranks == 4
+    assert cost.topology is cp2.topology    # re-attached, not stale
+
+
+def test_topology_basics():
+    assert TOPO.num_ranks == 8
+    assert TOPO.host_of(0) == 0 and TOPO.host_of(4) == 1
+    assert TOPO.host_ranks(1) == (4, 5, 6, 7)
+    assert TOPO.hosts_of((1, 5, 2)) == (0, 1)
+    assert TOPO.span_of((0, 1, 2)) == 1
+    assert TOPO.span_of((3, 4)) == 2
+    lay = ExecutionLayout((2, 3, 4))
+    assert lay.span(TOPO) == 2 and lay.hosts(TOPO) == (0, 1)
+    one = as_topology(4)
+    assert one.num_hosts == 1 and one.num_ranks == 4
+    assert as_topology(TOPO) is TOPO
+
+
+# ---------------------------------------------------------------------------
+# placement helpers
+# ---------------------------------------------------------------------------
+
+def test_pick_ranks_single_host_is_prefix():
+    free = [3, 5, 6, 7]
+    for k in (1, 2, 4):
+        assert _pick_ranks(free, k, None) == tuple(free[:k])
+        assert _pick_ranks(free, k,
+                           ClusterTopology.single_host(8)) == tuple(free[:k])
+    assert _pick_ranks(free, 5, TOPO) is None
+
+
+def test_pick_ranks_prefers_tightest_single_host():
+    # host 0 has 3 free, host 1 has 2 free: a degree-2 group should take
+    # the TIGHTER host (1), leaving host 0's pool intact for wide groups
+    free = [0, 1, 2, 4, 5]
+    assert _pick_ranks(free, 2, TOPO) == (4, 5)
+    assert _pick_ranks(free, 3, TOPO) == (0, 1, 2)
+    # nothing fits on one host: spill across the fewest hosts
+    assert _pick_ranks(free, 5, TOPO) == (0, 1, 2, 4, 5)
+
+
+def test_grow_prefers_hosts_already_spanned():
+    free = [2, 3, 4, 5]
+    assert _grow_ranks(free, 2, TOPO, base=(0, 1)) == (2, 3)
+    assert _grow_ranks(free, 2, TOPO, base=(6, 7)) == (4, 5)
+    assert _grow_ranks(free, 2, None, base=(6, 7)) == (2, 3)   # blind
+
+
+def test_shrink_drops_minority_host_first():
+    ranks = (0, 1, 4, 5)
+    assert _shrink_ranks(ranks, 2, TOPO) == (0, 1)
+    assert _shrink_ranks((4, 5, 1), 2, TOPO) == (4, 5)
+    assert _shrink_ranks(ranks, 2, None) == (0, 1)             # prefix
+    # span reduced whenever the target degree fits fewer hosts
+    assert TOPO.span_of(_shrink_ranks((0, 4, 1, 5), 2, TOPO)) == 1
+
+
+def test_repin_prefers_host_holding_most_ranks():
+    # layout straddles hosts, host 1 holds more of it -> re-pin there
+    cand = _repin_ranks((3, 4, 5), [6, 7], 3, TOPO)
+    assert cand == (4, 5, 6)
+    assert TOPO.span_of(cand) == 1
+    # no host can seat the degree -> None
+    assert _repin_ranks((0, 1, 4, 5, 2, 6), [], 6, TOPO) is None
+
+
+# ---------------------------------------------------------------------------
+# span-keyed cost model
+# ---------------------------------------------------------------------------
+
+def test_span_keys_reuse_single_host_measurements():
+    cost = CostModel()
+    # span-1 key format is byte-identical to the pre-topology format
+    assert cost._key("m", "denoise", 4096, 4) == "m|denoise|4096|4"
+    assert cost._key("m", "denoise", 4096, 4, 2) == "m|denoise|4096|4|s2"
+    cost.observe("m", "denoise", 4096, 4, 1.0)          # span-1 sample
+    cost.observe("m", "denoise", 4096, 4, 3.0, span=2)  # spanning sample
+    assert cost.calibration["m|denoise|4096|4"] == 1.0
+    assert cost.calibration["m|denoise|4096|4|s2"] == 3.0
+    assert cost.estimate("m", "denoise", 4096, 4) == 1.0
+    assert cost.estimate("m", "denoise", 4096, 4, span=2) == 3.0
+
+
+def test_uncalibrated_span_scales_span1_estimate():
+    cost = CostModel()
+    cost.observe("dit-image", "denoise", 4096, 4, 2.0)
+    est1 = cost.estimate("dit-image", "denoise", 4096, 4)
+    est2 = cost.estimate("dit-image", "denoise", 4096, 4, span=2)
+    ratio = (cost.analytical("dit-image", "denoise", 4096, 4, 2)
+             / cost.analytical("dit-image", "denoise", 4096, 4, 1))
+    assert est2 > est1
+    assert abs(est2 - est1 * ratio) < 1e-9
+
+
+def test_analytical_span_penalty_monotone():
+    cost = CostModel()
+    for deg in (2, 4, 8):
+        vals = [cost.analytical("dit-image", "denoise", 4096, deg, s)
+                for s in (1, 2, min(deg, 4))]
+        assert vals == sorted(vals)
+        assert vals[1] > vals[0]
+    # degree 1 has no collectives: span is irrelevant
+    assert cost.analytical("dit-image", "denoise", 4096, 1, 2) == \
+        cost.analytical("dit-image", "denoise", 4096, 1, 1)
+
+
+# ---------------------------------------------------------------------------
+# topology-priced migration
+# ---------------------------------------------------------------------------
+
+def _latent_fields(n=256, pd=64):
+    return {"latent": FieldSpec("sharded", (n, pd), "float32", 0)}
+
+
+def test_cross_host_migration_costs_more():
+    fields = _latent_fields()
+    src = ExecutionLayout((0, 1))
+    intra = plan_migration(fields, src, ExecutionLayout((2, 3)))
+    inter = plan_migration(fields, src, ExecutionLayout((4, 5)))
+    t_intra = migration_cost(intra, TOPO)
+    t_inter = migration_cost(inter, TOPO)
+    assert t_inter > t_intra > 0
+    # inter-host slices ride the slow link: the bandwidth term scales by
+    # at least ~intra_bw/inter_bw once setup is subtracted
+    bw_intra = t_intra - TOPO.intra_lat
+    bw_inter = t_inter - TOPO.inter_lat
+    assert bw_inter > 2.0 * bw_intra
+    assert migration_cost([], TOPO) == 0.0
+
+
+def test_single_host_migration_pricing_unchanged():
+    """The one-host shim keeps the flat pre-topology formula."""
+    a, b = ExecutionLayout((0,)), ExecutionLayout((1, 2))
+    assert migration_seconds(1 << 20, a, b) > 0
+    cost = CostModel()
+    cp = ControlPlane(4, make_policy("fcfs-sp1", 4), cost,
+                      SimBackend(cost))
+    assert cp.topology.num_hosts == 1
+
+
+# ---------------------------------------------------------------------------
+# back-compat shim: identical traces through the synthesized topology
+# ---------------------------------------------------------------------------
+
+def _run_sim(topo, policy_name="elastic", n=6):
+    cost = CostModel()
+    cp = ControlPlane(topo, make_policy(policy_name, as_topology(topo)
+                                        .num_ranks), cost,
+                      SimBackend(cost))
+    t = 0.0
+    for i in range(n):
+        res = 128 if i % 2 else 256
+        r = Request(id=f"r{i}", model="dit-image", height=res, width=res,
+                    frames=1, steps=3, arrival=t,
+                    deadline=t + 2.0 if i % 3 else None)
+        cp.submit(r, convert_request(r, DIT_IMAGE))
+        t += 0.11
+    cp.run()
+    return cp
+
+
+def test_num_ranks_shim_trace_identical():
+    for pol in ("elastic", "edf", "fcfs-sp1", "packing", "elastic-pack"):
+        a = _run_sim(4, pol)
+        b = _run_sim(ClusterTopology.single_host(4), pol)
+        assert trace_signature(a.events) == trace_signature(b.events), pol
+        assert a.metrics()["completed"] == b.metrics()["completed"]
+
+
+def test_blind_equals_aware_on_single_host():
+    a = _run_sim(4, "elastic")
+    b = _run_sim(4, "elastic-blind")
+    assert trace_signature(a.events) == trace_signature(b.events)
+
+
+# ---------------------------------------------------------------------------
+# multi-host behavior
+# ---------------------------------------------------------------------------
+
+def test_spanning_dispatch_simulates_slower():
+    """The simulator prices a host-straddling layout above a host-local
+    one of the same degree."""
+    def run_one(ranks):
+        cost = CostModel()
+        cp = ControlPlane(TOPO, make_policy("legacy", 8), cost,
+                          SimBackend(cost))
+        r = Request(id="x", model="dit-image", height=256, width=256,
+                    frames=1, steps=3, arrival=0.0)
+        cp.submit(r, convert_request(r, DIT_IMAGE))
+        g = cp.graphs["x"]
+        from repro.core.scheduler import Dispatch
+        enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+        cp.apply(Dispatch(enc.id, ExecutionLayout((0,))))
+        for c in cp.backend.poll():
+            cp.on_completion(c)
+        den = [t for t in g.ready_tasks() if t.kind == "denoise"][0]
+        cp.apply(Dispatch(den.id, ExecutionLayout(ranks)))
+        (finish, _, c), = cp.backend._heap
+        return c.duration
+    local = run_one((0, 1, 2, 3))
+    spanning = run_one((2, 3, 4, 5))
+    assert spanning > local * 1.2
+
+
+def test_elastic_places_host_locally_on_multi_host():
+    """Topology-aware elastic keeps (nearly) all denoise groups inside
+    one host; the blind variant straddles hosts routinely."""
+    from repro.diffusion.workloads import multi_host_trace
+
+    def run(pol):
+        cost = CostModel()
+        cp = ControlPlane(TOPO, make_policy(pol, 8), cost,
+                          SimBackend(cost, jitter=0.05))
+        for r in multi_host_trace(CostModel(), duration=60, load=1.0,
+                                  num_ranks=8, steps=10, seed=23):
+            cp.submit(r, convert_request(r, DIT_IMAGE))
+        cp.run()
+        spans = {}
+        for e in cp.events:
+            if e["ev"] == "dispatch" and e["kind"] == "denoise":
+                s = TOPO.span_of(e["ranks"])
+                spans[s] = spans.get(s, 0) + 1
+        return cp.metrics(), spans
+
+    m_aware, s_aware = run("elastic")
+    m_blind, s_blind = run("elastic-blind")
+    total_aware = sum(s_aware.values())
+    assert total_aware > 0
+    assert s_aware.get(2, 0) / total_aware < 0.05
+    assert s_blind.get(2, 0) > s_aware.get(2, 0)
+    assert m_aware["completed"] > 0
+
+
+def test_hierarchical_axis1_kv_gather_matches_flat():
+    """The DiT adapter gathers KV along axis=1; the hierarchical path
+    must honor the axis and the descriptor's rank order."""
+    topo = ClusterTopology(num_hosts=2, ranks_per_host=2)
+    ranks = (0, 2, 1, 3)
+    rng = np.random.default_rng(0)
+    arrs = {r: rng.normal(size=(2, 3, 5)).astype(np.float32)
+            for r in ranks}
+
+    def gather(comm):
+        desc = comm.register_group(ranks)
+        out, errs = {}, []
+
+        def fn(r):
+            try:
+                out[r] = comm.all_gather(desc, r, arrs[r], axis=1)
+            except Exception as e:   # noqa: BLE001
+                errs.append(e)
+        ts = [threading.Thread(target=fn, args=(r,)) for r in ranks]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join(timeout=30)
+        assert not errs and not any(t.is_alive() for t in ts)
+        return out
+
+    a = gather(GroupFreeComm(4))
+    hier_comm = GroupFreeComm(4, topology=topo)
+    b = gather(hier_comm)
+    for r in ranks:
+        assert a[r].shape == (2, 12, 5)
+        assert np.array_equal(a[r], b[r])
+    assert hier_comm.stats["hierarchical"] == 4

@@ -1,0 +1,52 @@
+"""Cross-backend topology fidelity (DESIGN.md §10, paper §5.5).
+
+The 2-host x 2-rank scenario of repro.serving.topology_demo must:
+* produce IDENTICAL control-plane decision traces on the simulator and
+  the wall-clock thread runtime (spanning dispatches, the cross-host
+  Reallocate boundary, pinned re-dispatches — all structural);
+* execute hierarchical two-stage collectives on the thread backend for
+  the spanning steps;
+* produce pixels bit-identical to a flat one-host run of the same
+  script — topology changes the path bytes take, never the result.
+"""
+import pytest
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.serving import topology_demo
+
+
+@pytest.fixture(scope="module")
+def demo():
+    return topology_demo.run_demo(DIT_IMAGE.reduced())
+
+
+def test_trace_identical_across_backends(demo):
+    assert demo["trace_match"], (
+        demo["wall"]["signature"], demo["sim"]["signature"])
+
+
+def test_hierarchical_collectives_ran_on_wall_leg(demo):
+    assert demo["wall"]["hierarchical_collectives"] > 0
+    # the flat one-host reference leg must never take the spanning path
+    assert demo["flat"]["hierarchical_collectives"] == 0
+
+
+def test_pixels_bit_identical_vs_flat_run(demo):
+    assert demo["pixels_match"]
+
+
+def test_cross_host_migration_priced_and_executed(demo):
+    # sim leg: the Reallocate boundary migrated latent bytes
+    assert demo["sim"]["migrated_bytes"] > 0
+    # both legs completed the request and dispatched the pinned steps on
+    # the host-local layout
+    for leg in ("wall", "sim"):
+        assert demo[leg]["metrics"]["completed"] == 1
+        realloc = [e for e in demo[leg]["events"]
+                   if e["ev"] == "dispatch" and e.get("realloc")]
+        assert realloc and all(tuple(e["ranks"]) == (0, 1)
+                               for e in realloc)
+    spans = {tuple(e["ranks"])
+             for e in demo["sim"]["events"]
+             if e["ev"] == "dispatch" and e["kind"] == "denoise"}
+    assert (0, 1, 2, 3) in spans and (0, 1) in spans
