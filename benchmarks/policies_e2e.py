@@ -16,6 +16,15 @@ And the multi-host topology workload (DESIGN.md §10): on a simulated
 the topology-blind ``elastic-blind`` variant on throughput AND SLO
 violation rate (``--only multi-host``; CI gates it per PR).
 
+And the feature-cache workload (DESIGN.md §11): cached elastic
+(``cache_interval=4`` plane + cache-affine policy) must beat non-cached
+elastic on throughput on an M-image SLO stream whose min SP degree is 2
+(per-rank activation memory rules out SP1 for M-class requests — the
+regime where KV-gather collectives are unavoidable), while a wall-clock
+probe holds the stale-reuse pixel error inside the §11 budget and
+asserts ``cache_interval=1`` bit-exactness (``--only cache``; CI gates
+it per PR).
+
 Simulation-driven (paper §5.5: the simulator is an execution backend for
 the same policy interface; fidelity measured in sim_fidelity.py).
 """
@@ -143,6 +152,55 @@ def _run_small_burst(out: dict):
         out[f"small|burst|{pol}"] = m
 
 
+CACHE_INTERVAL = 4          # staleness window of the cached leg
+CACHE_MIN_DEGREE = [2, 4]   # M-class requests do not fit on one rank
+
+
+def _run_cache(out: dict):
+    """Feature-cache workload (DESIGN.md §11): an M-image SLO stream at
+    1.6x uncached degree-4 capacity, candidate degrees {2, 4} for BOTH
+    legs (symmetric: SP1 is ruled out by per-rank activation memory, not
+    by the policy under test).  The cached plane skips the KV all-gather
+    on interval-1 of every interval steps and the cache-affine policy
+    keeps requests seated on their snapshots.  Acceptance: cached
+    elastic >= 1.2x throughput of non-cached elastic, stale-reuse pixel
+    error inside the budget, interval=1 bit-exact."""
+    from repro.core.policies import ElasticPolicy
+    from repro.diffusion.workloads import (cache_trace,
+                                           standalone_service_time)
+    for pol, interval, affinity in (("elastic", None, False),
+                                    ("elastic-cache", CACHE_INTERVAL,
+                                     True)):
+        cost = CostModel()
+        cp = ControlPlane(
+            NUM_RANKS,
+            ElasticPolicy(candidate_degrees=list(CACHE_MIN_DEGREE),
+                          cache_affinity=affinity),
+            cost, SimBackend(cost, jitter=0.05),
+            cache_interval=interval)
+        trace = cache_trace(CostModel(), duration=240, load=1.6,
+                            num_ranks=NUM_RANKS, steps=STEPS, seed=29)
+        for r in trace:
+            cp.submit(r, convert_request(r, DIT_IMAGE))
+        cp.run()
+        timeout = 12 * standalone_service_time("dit-image", "M",
+                                               CostModel(), STEPS)
+        m = _metrics_with_timeout(cp, timeout)
+        m["cache_hits"] = sum(
+            1 for e in cp.events if e["ev"] == "dispatch"
+            and str(e.get("cache", "")).startswith("hit"))
+        m["cache_refreshes"] = sum(
+            1 for e in cp.events if e["ev"] == "dispatch"
+            and e.get("cache") == "refresh")
+        out[f"cache|burst|{pol}"] = m
+    # wall-clock accuracy probe (the simulator has no pixels): the §11
+    # error budget and the interval-1 bit-exactness are REAL runtime
+    # claims, so they are measured on the thread backend
+    from repro.serving.cache_demo import pixel_error_report
+    out["cache|error"] = pixel_error_report(DIT_IMAGE.reduced(),
+                                            interval=CACHE_INTERVAL)
+
+
 def _run_multi_host(out: dict):
     """2-host x 4-rank simulated cluster (DESIGN.md §10): the
     topology-aware elastic policy places SP groups host-locally, re-pins
@@ -177,9 +235,10 @@ def _run_multi_host(out: dict):
 
 def run(only: str | None = None) -> dict:
     out = {}
-    if only in ("small-burst", "multi-host"):
-        (_run_small_burst if only == "small-burst"
-         else _run_multi_host)(out)
+    if only in ("small-burst", "multi-host", "cache"):
+        {"small-burst": _run_small_burst,
+         "multi-host": _run_multi_host,
+         "cache": _run_cache}[only](out)
         RESULTS.mkdir(exist_ok=True)
         existing = {}
         path = RESULTS / "policies_e2e.json"
@@ -190,6 +249,7 @@ def run(only: str | None = None) -> dict:
         return out
     _run_small_burst(out)
     _run_multi_host(out)
+    _run_cache(out)
     _run_mixed(out)
     for model_cfg in (DIT_IMAGE, DIT_VIDEO):
         model = model_cfg.name
@@ -270,7 +330,62 @@ def rows(data: dict):
                 "paper_90pct"))
     out.extend(small_burst_rows(data))
     out.extend(multi_host_rows(data))
+    out.extend(cache_rows(data))
     return out
+
+
+def cache_rows(data: dict):
+    """Feature-cache headline numbers (accepts partial --only runs)."""
+    out = []
+    if "cache|burst|elastic" not in data:
+        return out
+    for pol in ("elastic", "elastic-cache"):
+        m = data.get(f"cache|burst|{pol}")
+        if m is None:
+            continue
+        out.append((f"policies.cache.burst.{pol}.mean_lat",
+                    m["mean_latency_s"] * 1e6,
+                    f"slo={m['slo_attainment']:.3f}"
+                    f";thr={m['throughput_rps']:.4f}"
+                    f";hits={m.get('cache_hits', 0)}"
+                    f";refreshes={m.get('cache_refreshes', 0)}"))
+    ela = data["cache|burst|elastic"]
+    cac = data.get("cache|burst|elastic-cache")
+    if cac and ela["throughput_rps"]:
+        out.append(("policies.cache.cached_vs_elastic.throughput_x",
+                    cac["throughput_rps"] / ela["throughput_rps"] * 1e6,
+                    f"cached={cac['throughput_rps']:.4f}"
+                    f";elastic={ela['throughput_rps']:.4f}"
+                    f";accept>=1.2x"))
+    err = data.get("cache|error")
+    if err:
+        out.append(("policies.cache.rel_l2_err", err["rel_l2_err"] * 1e6,
+                    f"budget<=5e-2"
+                    f";interval1_exact={err['interval1_exact']}"
+                    f";hits={err['hits']};refreshes={err['refreshes']}"))
+    return out
+
+
+def check_cache(data: dict) -> list[str]:
+    """Feature-cache acceptance gate (CI fails on regression): cached
+    elastic must hold >= 1.2x throughput over non-cached elastic at a
+    bounded pixel-error budget, and cache_interval=1 must stay bit-exact
+    with the non-cached runtime (DESIGN.md §11)."""
+    problems = []
+    ela = data["cache|burst|elastic"]
+    cac = data["cache|burst|elastic-cache"]
+    ratio = cac["throughput_rps"] / max(ela["throughput_rps"], 1e-9)
+    if ratio < 1.2:
+        problems.append(f"cached elastic throughput {ratio:.2f}x "
+                        f"non-cached (accept >= 1.2x)")
+    err = data["cache|error"]
+    if err["rel_l2_err"] > 5e-2:
+        problems.append(f"stale-reuse pixel error {err['rel_l2_err']:.4f}"
+                        f" > 5e-2 budget")
+    if not err["interval1_exact"]:
+        problems.append("cache_interval=1 output is NOT bit-exact with "
+                        "the non-cached runtime")
+    return problems
 
 
 def multi_host_rows(data: dict):
@@ -379,7 +494,8 @@ def check_small_burst(data: dict) -> list[str]:
 if __name__ == "__main__":
     import sys
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=["small-burst", "multi-host"],
+    ap.add_argument("--only",
+                    choices=["small-burst", "multi-host", "cache"],
                     default=None,
                     help="run just one workload slice (CI legs)")
     args = ap.parse_args()
@@ -388,6 +504,8 @@ if __name__ == "__main__":
         table = rows(d)
     elif args.only == "small-burst":
         table = small_burst_rows(d)
+    elif args.only == "cache":
+        table = cache_rows(d)
     else:
         table = multi_host_rows(d)
     for name, us, derived in table:
@@ -396,6 +514,8 @@ if __name__ == "__main__":
         problems = check_small_burst(d)
     elif args.only == "multi-host":
         problems = check_multi_host(d)
+    elif args.only == "cache":
+        problems = check_cache(d)
     else:
         problems = []
     if args.only is not None:

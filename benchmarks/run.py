@@ -1,9 +1,17 @@
 """Benchmark orchestrator — one function per paper table/figure.
 
+Runs the FULL perf trajectory by default — the microbenches (group
+setup, GFC collectives, migration, roofline), the end-to-end policy
+suite (policies_e2e, including the step-packing, multi-host, and
+feature-cache workloads), and the cross-backend fidelity suite
+(sim_fidelity).  ``--suite`` substring-filters the listing for a quick
+single-suite run, e.g. ``--suite fidelity`` or ``--suite policies``.
+
 Prints ``name,us_per_call,derived`` CSV per the harness contract.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
@@ -24,6 +32,17 @@ def main() -> None:
         ("overhead_fcfs_sp4(Fig8)", overhead_fcfs_sp4),
         ("roofline(deliverable_g)", roofline),
     ]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default=None,
+                    help="run only suites whose label contains this "
+                         "substring (default: all)")
+    args = ap.parse_args()
+    if args.suite:
+        suites = [(label, mod) for label, mod in suites
+                  if args.suite.lower() in label.lower()]
+        if not suites:
+            print(f"no suite matches {args.suite!r}", file=sys.stderr)
+            sys.exit(2)
     print("name,us_per_call,derived")
     failures = 0
     for label, mod in suites:

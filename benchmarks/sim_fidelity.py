@@ -9,11 +9,14 @@ Paper: <= 4.7 pp divergence.
 
 Additionally runs the ElasticPolicy preempt/reallocate scenario
 (repro.serving.elastic_demo), the step-packing scenario
-(repro.serving.packing_demo, DESIGN.md §9), AND the multi-host topology
+(repro.serving.packing_demo, DESIGN.md §9), the multi-host topology
 scenario (repro.serving.topology_demo, DESIGN.md §10 — hierarchical
-GFC + cross-host reallocation) on both backends and checks the
-canonical control-plane decision traces — which canonicalize
-PackedDispatch membership — are IDENTICAL.
+GFC + cross-host reallocation), AND the feature-cache scenario
+(repro.serving.cache_demo, DESIGN.md §11 — stale-KV reuse with a
+mid-trace same-degree Reallocate migrating the warm cache) on both
+backends and checks the canonical control-plane decision traces —
+which canonicalize PackedDispatch membership and the plane's cache
+hit/refresh/migrate calls — are IDENTICAL.
 """
 from __future__ import annotations
 
@@ -65,7 +68,7 @@ def _profile_costs(cfg) -> CostModel:
 
         dt = timeit(lambda: dit_mod.forward_sp_tokens(
             pipe.dit_params, x, t, txt, cfg, pos_offset=0, n_total=n_tok,
-            kv_gather=lambda k, v: (k, v)))
+            kv_gather=lambda k, v, layer: (k, v)))
         toks = jnp.zeros((1, 77), jnp.int32)
         enc = timeit(lambda: text_encoder.encode(
             pipe.txt_params, toks, pipe.txt_cfg, dtype=jnp.float32))
@@ -149,12 +152,32 @@ def _topology_fidelity(cfg) -> dict:
     }
 
 
+def _cache_fidelity(cfg) -> dict:
+    """Feature-cache fidelity (DESIGN.md §11): the cache scenario must
+    trace identically — hit/refresh/migrate decisions included — on the
+    simulator and the thread runtime, with interval-1 bit-exactness and
+    the stale-reuse error inside the budget."""
+    from repro.serving.cache_demo import run_demo
+    d = run_demo(cfg)
+    return {
+        "trace_match": d["trace_match"],
+        "modes": d["modes"],
+        "interval1_exact": d["interval1_exact"],
+        "rel_l2_err": d["rel_l2_err"],
+        "migration_bitexact": d["migration_bitexact"],
+        "sim_migrated_bytes": d["sim_migrated_bytes"],
+        "real_completed": d["wall"]["metrics"]["completed"],
+        "sim_completed": d["sim"]["metrics"]["completed"],
+    }
+
+
 def run() -> dict:
     import dataclasses
     cfg = DIT_IMAGE.reduced()
     out = {"elastic_trace": _elastic_fidelity(cfg),
            "packing_trace": _packing_fidelity(cfg),
-           "topology_trace": _topology_fidelity(cfg)}
+           "topology_trace": _topology_fidelity(cfg),
+           "cache_trace": _cache_fidelity(cfg)}
     for pol_name in POLICIES:
         cost = _profile_costs(cfg)
         trace0 = _mini_trace(cost)
@@ -212,6 +235,16 @@ def rows(data: dict):
                         f"identical_traces={m['trace_match']}"
                         f";pixels_bitexact={m['pixels_match']}"
                         f";hier={m['hierarchical_collectives']}"))
+            continue
+        if pol == "cache_trace":
+            ok = m["trace_match"] and m["interval1_exact"] \
+                and m["migration_bitexact"]
+            out.append(("sim_fidelity.cache.trace_match",
+                        1e6 if ok else 0.0,
+                        f"identical_traces={m['trace_match']}"
+                        f";interval1_bitexact={m['interval1_exact']}"
+                        f";mig_bitexact={m['migration_bitexact']}"
+                        f";rel_l2={m['rel_l2_err']:.2e}"))
             continue
         out.append((f"sim_fidelity.{pol}.gap", m["gap_pp"] * 1e4,
                     f"real={m['real_slo']:.3f};sim={m['sim_slo']:.3f};"

@@ -3,18 +3,61 @@ REAL GF-DiT runtime — thread workers, GFC sequence parallelism, layout
 migration — on a reduced image DiT, producing decoded images.
 
     PYTHONPATH=src python examples/serve_image_dit.py
+    PYTHONPATH=src python examples/serve_image_dit.py \
+        --cache-interval 3 --min-degree 2
+
+``--cache-interval`` enables the cross-step feature cache (DESIGN.md
+§11): multi-rank denoise steps reuse the previous step's gathered remote
+KV shards and skip the GFC all-gather for up to interval-1 steps between
+full refresh gathers (interval=1 refreshes every step — bit-exact).
+``--min-degree`` floors the SP degree (emulating per-rank activation
+memory limits); at the default of 1 a lightly-loaded machine serves at
+SP1, where there is no collective for the cache to skip.
 """
+import argparse
+
 import numpy as np
 
 from repro.configs.dit_models import DIT_IMAGE
-from repro.core.policies import make_policy
+from repro.core.policies import EDFPolicy, ElasticPolicy, make_policy
 from repro.core.trajectory import Request
 from repro.serving.engine import ServingEngine
 
 
+def _policy(name: str, num_ranks: int, min_degree: int):
+    if min_degree <= 1:
+        return make_policy(name, num_ranks)
+    cands = [d for d in (1, 2, 4, 8, 16, 32)
+             if min_degree <= d <= num_ranks]
+    if name == "edf":
+        return EDFPolicy(candidate_degrees=cands)
+    if name in ("elastic", "elastic-cache"):
+        return ElasticPolicy(candidate_degrees=cands,
+                             cache_affinity=name == "elastic-cache")
+    raise SystemExit(f"--min-degree supports edf/elastic/elastic-cache, "
+                     f"not {name!r}")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="edf",
+                    help="scheduling policy (see core/policies.py "
+                         "registry; e.g. edf, elastic, elastic-cache)")
+    ap.add_argument("--cache-interval", type=int, default=None,
+                    help="feature-cache staleness window (DESIGN.md §11)"
+                         "; omit to serve uncached, 1 = cached path with"
+                         " bit-exact refresh-every-step")
+    ap.add_argument("--min-degree", type=int, default=1,
+                    help="minimum SP degree (emulates per-rank memory "
+                         "limits; degree >= 2 exercises the cached "
+                         "KV-gather path)")
+    args = ap.parse_args()
+
     cfg = DIT_IMAGE.reduced()
-    engine = ServingEngine(cfg, make_policy("edf", 4), num_ranks=4)
+    engine = ServingEngine(cfg,
+                           _policy(args.policy, 4, args.min_degree),
+                           num_ranks=4,
+                           cache_interval=args.cache_interval)
 
     classes = {"S": 128, "M": 192, "L": 256}
     requests = []
@@ -26,7 +69,10 @@ def main():
             frames=1, steps=4, arrival=i * 0.3,
             deadline=i * 0.3 + 120.0, size_class=cls))
 
-    print(f"serving {len(requests)} requests on 4 ranks (EDF policy)...")
+    label = f"{args.policy} policy" + (
+        f", cache_interval={args.cache_interval}"
+        if args.cache_interval else ", uncached")
+    print(f"serving {len(requests)} requests on 4 ranks ({label})...")
     metrics = engine.serve(requests, timeout=600)
     for k, v in metrics.items():
         print(f"  {k}: {v:.3f}" if isinstance(v, float) else f"  {k}: {v}")
@@ -39,6 +85,14 @@ def main():
     elastic = {len(ev["ranks"]) for ev in engine.cp.events
                if ev["ev"] == "dispatch"}
     print(f"group sizes used across tasks: {sorted(elastic)}")
+    if args.cache_interval:
+        hits = sum(1 for ev in engine.cp.events if ev["ev"] == "dispatch"
+                   and str(ev.get("cache", "")).startswith("hit"))
+        refreshes = sum(1 for ev in engine.cp.events
+                        if ev["ev"] == "dispatch"
+                        and ev.get("cache") == "refresh")
+        print(f"feature cache: {hits} hit steps (all-gather skipped), "
+              f"{refreshes} refresh steps")
     engine.shutdown()
 
 

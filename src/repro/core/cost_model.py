@@ -27,6 +27,17 @@ every existing measurement (and saved table) is reused for single-host
 layouts; spanning keys append ``|s{span}``.  An uncalibrated spanning
 cell is priced by scaling the span-1 estimate through the analytical
 intra/inter ratio before falling to the raw analytical curve.
+
+Feature cache (DESIGN.md §11): a cache-hit denoise step skips the KV
+all-gather, so its analytical cost drops the collective term entirely
+(SP efficiency 1.0 — compute still shards over the degree, and the
+per-step multi-rank dispatch overhead remains).  Cached cells calibrate
+under their own ``|c``-suffixed keys — hit durations must never poison
+the uncached calibration the policies compare against — and an
+uncalibrated cached cell scales the best uncached estimate through the
+analytical cached/uncached ratio.  ``request_remaining`` prices a
+request served under a staleness window of ``cache_interval`` steps as
+the 1-refresh : (interval-1)-hits mixture.
 """
 from __future__ import annotations
 
@@ -108,18 +119,21 @@ class CostModel:
 
     @staticmethod
     def _key(model: str, kind: str, tokens: int, degree: int,
-             span: int = 1) -> str:
-        """Span-1 keys stay byte-identical to the pre-topology format so
-        single-host measurements (and saved tables) are reused."""
+             span: int = 1, cached: bool = False) -> str:
+        """Span-1 uncached keys stay byte-identical to the pre-topology
+        format so single-host measurements (and saved tables) are
+        reused; cache-hit cells append ``|c`` (DESIGN.md §11)."""
         bucket = CostModel._bucket(tokens)
         base = f"{model}|{kind}|{bucket}|{degree}"
-        return base if span <= 1 else base + f"|s{span}"
+        if span > 1:
+            base += f"|s{span}"
+        return base + "|c" if cached else base
 
     @staticmethod
     def _pack_key(model: str, kind: str, tokens: int, degree: int,
-                  batch: int, span: int = 1) -> str:
-        return CostModel._key(model, kind, tokens, degree,
-                              span) + f"|b{batch}"
+                  batch: int, span: int = 1, cached: bool = False) -> str:
+        return CostModel._key(model, kind, tokens, degree, span,
+                              cached) + f"|b{batch}"
 
     def _inter_factor(self) -> float:
         topo = self.topology
@@ -129,12 +143,24 @@ class CostModel:
 
     # ------------------------------------------------------------------
     def estimate(self, model: str, kind: str, tokens: int,
-                 degree: int, span: int = 1) -> float:
-        key = self._key(model, kind, tokens, degree, span)
+                 degree: int, span: int = 1,
+                 cached: bool = False) -> float:
+        key = self._key(model, kind, tokens, degree, span, cached)
         if key in self.calibration:
             return self.calibration[key]
         if key in self.table:
             return self.table[key]
+        if cached:
+            # scale the best uncached estimate (measured where possible)
+            # through the analytical cached/uncached ratio — the ratio
+            # captures exactly the dropped collective term
+            base = self.estimate(model, kind, tokens, degree, span)
+            ref = self.analytical(model, kind, tokens, degree, span)
+            if ref > 0:
+                return base * (self.analytical(model, kind, tokens,
+                                               degree, span, cached=True)
+                               / ref)
+            return base
         if span > 1:
             # scale the (measured-where-possible) span-1 estimate through
             # the analytical intra/inter collective ratio
@@ -150,7 +176,8 @@ class CostModel:
         return self.analytical(model, kind, tokens, degree)
 
     def analytical(self, model: str, kind: str, tokens: int,
-                   degree: int, span: int = 1) -> float:
+                   degree: int, span: int = 1,
+                   cached: bool = False) -> float:
         factor = self._inter_factor()
         if kind == "encode":
             return _ENCODE_COST
@@ -161,7 +188,11 @@ class CostModel:
         # denoise: attention ~ tokens^2/flops but MLP dominates until long
         scale = 2.2 if model.endswith("video") else 1.0
         work = scale * (tokens / 4096) ** 1.35
-        eff = sp_efficiency(degree, tokens, span, factor)
+        # a cache-hit step (DESIGN.md §11) runs no KV all-gather: the
+        # collective term vanishes (efficiency 1.0 at any span) while
+        # compute still shards and the multi-rank dispatch overhead stays
+        eff = 1.0 if cached else sp_efficiency(degree, tokens, span,
+                                               factor)
         return max(work / (degree * eff), 1e-4) + 0.004 * (degree > 1)
 
     # ------------------------------------------------------------------
@@ -228,15 +259,20 @@ class CostModel:
 
     # ------------------------------------------------------------------
     def estimate_packed(self, model: str, kind: str, tokens: int,
-                        degree: int, batch: int, span: int = 1) -> float:
+                        degree: int, batch: int, span: int = 1,
+                        cached: bool = False) -> float:
         """Duration of ONE executor call running `batch` compatible tasks
         (stacked along the batch axis, collectives shared — DESIGN.md §9).
         Priority: packed calibration -> packed table -> calibrated
         neighbor batch scaled by the analytical pack curve -> single-task
-        estimate times the analytical pack multiplier."""
+        estimate times the analytical pack multiplier.  ``cached`` prices
+        a pack whose every member is a cache hit (DESIGN.md §11: packs
+        hit or refresh as a unit)."""
         if batch <= 1:
-            return self.estimate(model, kind, tokens, degree, span)
-        key = self._pack_key(model, kind, tokens, degree, batch, span)
+            return self.estimate(model, kind, tokens, degree, span,
+                                 cached)
+        key = self._pack_key(model, kind, tokens, degree, batch, span,
+                             cached)
         if key in self.pack_calibration:
             return self.pack_calibration[key]
         if key in self.pack_table:
@@ -247,20 +283,23 @@ class CostModel:
                          key=lambda b: (abs(b - batch), b)):
             if nb == batch:
                 continue
-            k = self._pack_key(model, kind, tokens, degree, nb, span)
+            k = self._pack_key(model, kind, tokens, degree, nb, span,
+                               cached)
             v = self.pack_calibration.get(k, self.pack_table.get(k))
             if v is not None:
                 ref = pack_scale(nb, tokens, degree)
                 if ref > 0:
                     return v * (anchor / ref)
-        return self.estimate(model, kind, tokens, degree, span) * anchor
+        return self.estimate(model, kind, tokens, degree, span,
+                             cached) * anchor
 
     # ------------------------------------------------------------------
     def observe(self, model: str, kind: str, tokens: int, degree: int,
-                seconds: float, span: int = 1):
+                seconds: float, span: int = 1, cached: bool = False):
         """Online calibration from measured durations (EMA); spanning
-        layouts calibrate their own span-keyed cell (DESIGN.md §10)."""
-        key = self._key(model, kind, tokens, degree, span)
+        layouts calibrate their own span-keyed cell (DESIGN.md §10), and
+        cache-hit steps their own ``|c`` cell (DESIGN.md §11)."""
+        key = self._key(model, kind, tokens, degree, span, cached)
         old = self.calibration.get(key)
         self.calibration[key] = (seconds if old is None
                                  else self.ema * seconds +
@@ -268,13 +307,14 @@ class CostModel:
 
     def observe_packed(self, model: str, kind: str, tokens: int,
                        degree: int, batch: int, seconds: float,
-                       span: int = 1):
+                       span: int = 1, cached: bool = False):
         """Online calibration from one measured pack duration (EMA over
         the packed key; a batch of 1 calibrates the single-task key)."""
         if batch <= 1:
             return self.observe(model, kind, tokens, degree, seconds,
-                                span)
-        key = self._pack_key(model, kind, tokens, degree, batch, span)
+                                span, cached)
+        key = self._pack_key(model, kind, tokens, degree, batch, span,
+                             cached)
         old = self.pack_calibration.get(key)
         self.pack_calibration[key] = (seconds if old is None
                                       else self.ema * seconds +
@@ -282,13 +322,26 @@ class CostModel:
 
     # ------------------------------------------------------------------
     def request_remaining(self, model: str, graph, degree: int = 1,
-                          span: int = 1) -> float:
-        """Remaining trajectory work of a request at `degree` (for SRTF)."""
+                          span: int = 1, cache_interval: int = 1) -> float:
+        """Remaining trajectory work of a request at `degree` (for SRTF).
+
+        With ``cache_interval > 1`` the denoise chain is priced as the
+        feature-cache mixture (DESIGN.md §11): one refresh step per
+        window, ``interval - 1`` cache hits — the steady-state rate of a
+        request whose placement holds still.  Degree-1 steps have no
+        collective to skip, so the mixture only applies at degree > 1.
+        """
         total = 0.0
         for t in graph.remaining_tasks():
-            total += self.estimate(model, t.kind,
-                                   t.meta.get("tokens", 4096), degree,
-                                   span)
+            tok = t.meta.get("tokens", 4096)
+            if t.kind == "denoise" and cache_interval > 1 and degree > 1:
+                full = self.estimate(model, t.kind, tok, degree, span)
+                hit = self.estimate(model, t.kind, tok, degree, span,
+                                    cached=True)
+                total += (full + (cache_interval - 1) * hit) \
+                    / cache_interval
+            else:
+                total += self.estimate(model, t.kind, tok, degree, span)
         return total
 
     # ------------------------------------------------------------------

@@ -121,14 +121,31 @@ class ThreadBackend:
     def _prepare_task(self, task: TrajectoryTask, layout: ExecutionLayout,
                       graph: RequestGraph):
         """CPU-side dispatch preparation shared by the solo and packed
-        paths: layout-aware migration of input artifacts (§5.3) and
-        output artifact rank slots (ranks fill their own)."""
+        paths: layout-aware migration of input artifacts (§5.3), output
+        artifact rank slots (ranks fill their own), and the feature
+        cache's plane-stamped effects (DESIGN.md §11) — migrate the warm
+        snapshot on a same-degree layout change, or re-home/allocate the
+        snapshot slots a refresh gather will fill."""
         for aid in task.inputs:
             art = graph.artifacts[aid]
             if art.data is not None and art.layout is not None and \
                     art.layout.ranks != layout.ranks:
                 entries = plan_migration(art.fields, art.layout, layout)
                 execute_migration(self.comm, art, layout, entries)
+        stamp = task.meta.get("cache")
+        if stamp is not None:
+            cart = graph.artifacts[stamp["art"]]
+            if stamp["migrate"] and cart.data is not None and \
+                    cart.layout is not None and \
+                    cart.layout.ranks != layout.ranks:
+                entries = plan_migration(cart.fields, cart.layout, layout)
+                execute_migration(self.comm, cart, layout, entries)
+            if cart.data is None:
+                cart.data = {}
+            for r in layout.ranks:
+                cart.data.setdefault(r, {})
+            if stamp["mode"] == "refresh":
+                cart.layout = layout
         for aid in task.outputs:
             art = graph.artifacts[aid]
             if art.data is None:

@@ -122,7 +122,10 @@ def migration_cost(entries: list[TransferEntry], topo) -> float:
     time is the slowest link plus one setup (inter-host setup when any
     slice crosses hosts).  This is how ``Reallocate`` across hosts is
     priced honestly: the same byte count costs
-    ``intra_bw/inter_bw`` x more once it leaves the host.
+    ``intra_bw/inter_bw`` x more once it leaves the host.  Heterogeneous
+    fabrics price each host pair at its own ``topo.inter_bw_of`` link
+    speed (``ClusterTopology.inter_bw_map``); without overrides this is
+    byte-identical to the flat ``inter_bw`` formula.
     """
     if not entries:
         return 0.0
@@ -137,7 +140,8 @@ def migration_cost(entries: list[TransferEntry], topo) -> float:
             key = (min(hs, hd), max(hs, hd))
             inter[key] = inter.get(key, 0) + e.nbytes
     t_intra = max((b / topo.intra_bw for b in intra.values()), default=0.0)
-    t_inter = max((b / topo.inter_bw for b in inter.values()), default=0.0)
+    t_inter = max((b / topo.inter_bw_of(*pair)
+                   for pair, b in inter.items()), default=0.0)
     setup = topo.inter_lat if inter else topo.intra_lat
     return setup + max(t_intra, t_inter)
 

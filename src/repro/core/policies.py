@@ -17,10 +17,12 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro.core.migration import migration_cost, plan_migration
 from repro.core.scheduler import (Action, Decision, Dispatch, PackedDispatch,
                                   Policy, Preempt, Reallocate, SchedulerView,
                                   pack_signature)
 from repro.core.trajectory import ClusterTopology, ExecutionLayout
+from repro.diffusion.feature_cache import cache_artifact
 
 
 # ---------------------------------------------------------------------------
@@ -498,7 +500,8 @@ class ElasticPolicy(Policy):
                  shrink_queue_factor: float = 1.0,
                  preempt_min_degree: int = 2,
                  pack: bool = False, max_pack: int = 8,
-                 topology_aware: bool = True):
+                 topology_aware: bool = True,
+                 cache_affinity: bool = False):
         self.candidates = candidate_degrees
         self.max_degree = max_degree
         self.shrink_queue_factor = shrink_queue_factor
@@ -506,6 +509,14 @@ class ElasticPolicy(Policy):
         # dispatches of one schedule point merge into PackedDispatch
         self.pack = pack
         self.max_pack = max_pack
+        # feature-cache affinity (DESIGN.md §11): when on and the plane
+        # serves with a staleness window, remaining-work estimates use
+        # the refresh/hit cost mixture, denoise dispatches re-use a warm
+        # cache's rank set when it is free, and a warm cache raises the
+        # bar for shrink (the re-refresh tax must re-amortize) and for
+        # re-pin (the snapshot's migration must pay for itself) — all
+        # priced through the cost model, never by fiat.
+        self.cache_affinity = cache_affinity
         # topology awareness (DESIGN.md §10): when on, placement prefers
         # intra-host groups, degree choice prices the span a candidate
         # layout would touch, and spanning requests re-pin onto one host
@@ -541,9 +552,21 @@ class ElasticPolicy(Policy):
             return 1
         return -(-d // topo.ranks_per_host)
 
-    @staticmethod
-    def _remaining(view, req, g, d, span: int = 1) -> float:
-        return view.cost.request_remaining(req.model, g, d, span)
+    def _interval(self, view: SchedulerView) -> int:
+        """Effective staleness window this policy prices with (1 when
+        affinity is off or the plane serves uncached)."""
+        return view.cache_interval if self.cache_affinity else 1
+
+    def _warm(self, view: SchedulerView, rid: str):
+        """The request's warm-cache entry, when affinity applies."""
+        if self._interval(view) <= 1:
+            return None
+        return view.cache_residency.get(rid)
+
+    def _remaining(self, view, req, g, d, span: int = 1) -> float:
+        itv = self._interval(view) if d > 1 else 1
+        return view.cost.request_remaining(req.model, g, d, span,
+                                           cache_interval=itv)
 
     def _need_degree(self, view, req, g) -> int:
         """Smallest degree predicted to meet the deadline; the largest
@@ -641,21 +664,60 @@ class ElasticPolicy(Policy):
         # in-flight slice for ranks that free at the same boundary)
         shrink_reclaim = 0
         if queue_depth > self.shrink_queue_factor * view.num_ranks:
-            for rid in sorted(run_by_req):
+            itv = self._interval(view)
+            # relief target: stop shrinking once the post-boundary free
+            # pool could hand every queued task a rank (capped by the
+            # machine) — shrinking further only slows victims without
+            # draining the queue any faster
+            relief = min(queue_depth, view.num_ranks)
+            # warm-cache victims go LAST (DESIGN.md §11): when partial
+            # relief suffices, cold requests give up their ranks first
+            # and warm caches survive
+            order = sorted(run_by_req,
+                           key=lambda r: (self._warm(view, r)
+                                          is not None, r))
+            for rid in order:
+                if len(free) + shrink_reclaim >= relief:
+                    break
                 req = view.requests[rid]
                 if req.deadline is not None:
                     continue        # SLO work is already best-fit sized
                 lay = effective_layout(rid)
                 if lay is None:
                     continue
-                tgt = self._need_degree(view, req, view.graphs[rid])
-                if tgt < lay.degree:
-                    # drop the minority hosts first: the shrunk pin
-                    # should reduce span whenever it can (DESIGN.md §10)
-                    actions.append(Reallocate(
-                        rid, ExecutionLayout(
-                            _shrink_ranks(lay.ranks, tgt, topo))))
-                    shrink_reclaim += lay.degree - tgt
+                g = view.graphs[rid]
+                tgt = self._need_degree(view, req, g)
+                if tgt >= lay.degree:
+                    continue
+                if tgt > 1 and self._warm(view, rid) is not None:
+                    # a degree change invalidates the warm cache: the
+                    # request pays ONE extra refresh (a full gather
+                    # where a hit was due) before hits resume at the new
+                    # degree.  The tax and the per-hit repayment are the
+                    # same cost-model quantity (uncached - cached step),
+                    # so the bar reduces to a structural runway test:
+                    # skip the shrink only when fewer than ~itv/(itv-1)
+                    # steps remain to repay the one lost hit.  When the
+                    # calibrated hit cell is not actually cheaper
+                    # (saving <= 0) the cache is worthless and the
+                    # shrink proceeds; at tgt=1 there is no collective
+                    # to refresh, so nothing is lost either way.
+                    pend = [t for t in g.tasks.values()
+                            if t.kind == "denoise" and t.state != "done"]
+                    tok = pend[0].meta.get("tokens", 4096) if pend \
+                        else 4096
+                    saving = view.cost.estimate(
+                        req.model, "denoise", tok, tgt) - \
+                        view.cost.estimate(req.model, "denoise", tok,
+                                           tgt, cached=True)
+                    if saving > 0 and len(pend) * (itv - 1) <= itv:
+                        continue
+                # drop the minority hosts first: the shrunk pin
+                # should reduce span whenever it can (DESIGN.md §10)
+                actions.append(Reallocate(
+                    rid, ExecutionLayout(
+                        _shrink_ranks(lay.ranks, tgt, topo))))
+                shrink_reclaim += lay.degree - tgt
 
         # ---- 2. preempt best-effort work for SLO-critical arrivals ---
         # only when no reclaim (preempt drain or shrink boundary) is
@@ -762,6 +824,25 @@ class ElasticPolicy(Policy):
                 cand = _repin_ranks(lay.ranks, free, lay.degree, topo)
                 if cand is None:
                     continue
+                ent = self._warm(view, rid)
+                if ent is not None and ent.layout.ranks == lay.ranks:
+                    # a same-degree re-pin MOVES the warm snapshot
+                    # (DESIGN.md §11): the span saving over the request's
+                    # remaining steps must pay for shipping the cache's
+                    # bytes across the cluster — priced from the actual
+                    # transfer plan, like any migration
+                    cart = cache_artifact(view.graphs[rid])
+                    req = view.requests[rid]
+                    move = migration_cost(
+                        plan_migration(cart.fields, ent.layout,
+                                       ExecutionLayout(cand)), topo) \
+                        if cart is not None else 0.0
+                    gain = self._remaining(
+                        view, req, g, lay.degree,
+                        topo.span_of(lay.ranks)) - self._remaining(
+                        view, req, g, lay.degree, 1)
+                    if move >= gain:
+                        continue
                 free = [r for r in free if r not in set(cand)]
                 actions.append(Reallocate(rid, ExecutionLayout(cand)))
 
@@ -796,7 +877,17 @@ class ElasticPolicy(Policy):
             nonlocal free
             if k <= 0 or k > len(free):
                 return False
-            ranks = _pick_ranks(free, k, topo)
+            ranks = None
+            if t.kind == "denoise" and k > 1:
+                # cache affinity (DESIGN.md §11): re-seat a warm request
+                # on the exact rank set its snapshot lives on — the next
+                # step is then a hit instead of a migrate or refresh
+                ent = self._warm(view, req.id)
+                if ent is not None and ent.layout.degree == k and \
+                        set(ent.layout.ranks) <= set(free):
+                    ranks = ent.layout.ranks
+            if ranks is None:
+                ranks = _pick_ranks(free, k, topo)
             free = [r for r in free if r not in set(ranks)]
             granted[req.id] = granted.get(req.id, 0) + k
             if self.pack and t.kind == "denoise":
@@ -895,6 +986,12 @@ def make_policy(name: str, num_ranks: int) -> Policy:
     ``elastic-blind`` is the topology-blind baseline: identical to
     ``elastic`` on one host, but it places by bare rank index on
     multi-host clusters (benchmarks/policies_e2e.py --only multi-host).
+    ``elastic-cache`` is the feature-cache-affine variant (DESIGN.md
+    §11): identical to ``elastic`` on an uncached plane, but on a plane
+    serving with a staleness window it prices remaining work as the
+    refresh/hit mixture, re-seats warm requests on their snapshot's
+    ranks, and raises the bar for shrink/re-pin of warm requests
+    (benchmarks/policies_e2e.py --only cache).
     """
     table = {
         "legacy": lambda: LegacyPolicy(),
@@ -906,6 +1003,7 @@ def make_policy(name: str, num_ranks: int) -> Policy:
         "elastic": lambda: ElasticPolicy(),
         "elastic-blind": lambda: ElasticPolicy(topology_aware=False),
         "elastic-pack": lambda: ElasticPolicy(pack=True),
+        "elastic-cache": lambda: ElasticPolicy(cache_affinity=True),
         "packing": lambda: PackingPolicy(),
     }
     return table[name]()

@@ -49,6 +49,7 @@ from repro.core.event_loop import EventLoop, VirtualClock
 from repro.core.trajectory import (ClusterTopology, ExecutionLayout,
                                    Request, RequestGraph, TrajectoryTask,
                                    as_topology)
+from repro.diffusion.feature_cache import CacheEntry, FeatureCachePlane
 
 
 @dataclass
@@ -135,6 +136,10 @@ class SchedulerView:
     # cluster topology (DESIGN.md §10); None only when a view is built
     # by hand in tests — the control plane always supplies one
     topology: Optional[ClusterTopology] = None
+    # feature-cache residency (DESIGN.md §11): request id -> warm-cache
+    # entry; interval 1 means caching is off (no stale reuse)
+    cache_residency: dict[str, CacheEntry] = field(default_factory=dict)
+    cache_interval: int = 1
 
     @property
     def free_by_host(self) -> dict[int, list[int]]:
@@ -156,7 +161,8 @@ class Policy:
 class ControlPlane:
     def __init__(self, topology=None, policy: Policy = None,
                  cost: CostModel = None, backend=None, *,
-                 dispatch_overhead: float = 0.0, num_ranks=None):
+                 dispatch_overhead: float = 0.0, num_ranks=None,
+                 cache_interval: Optional[int] = None):
         # `topology` accepts a ClusterTopology or a bare rank count
         # (back-compat shim: ControlPlane(num_ranks=N) — positional or
         # keyword — synthesizes a one-host topology with identical
@@ -190,7 +196,15 @@ class ControlPlane:
         self._arrivals: list[tuple[float, int, str]] = []
         self._sub_seq = itertools.count()
         self.released: set[str] = set()
+        # cross-step feature cache residency (DESIGN.md §11); None
+        # disables the subsystem (byte-identical pre-cache behavior)
+        self.cache = FeatureCachePlane(cache_interval,
+                                       emit=self._cache_event)
         backend.attach(self)
+
+    def _cache_event(self, rec: dict):
+        rec["t"] = self.now
+        self.events.append(rec)
 
     # ------------------------------------------------------------------
     def submit(self, request: Request, graph: RequestGraph):
@@ -240,7 +254,9 @@ class ControlPlane:
                              requests=self.requests, graphs=self.graphs,
                              pinned=dict(self.pinned),
                              preempting=frozenset(self.preempting),
-                             topology=self.topology)
+                             topology=self.topology,
+                             cache_residency=self.cache.residency_view(),
+                             cache_interval=self.cache.interval)
 
     # ------------------------------------------------------------------
     # action application (validated; invalid actions are skipped)
@@ -262,6 +278,12 @@ class ControlPlane:
         ev = {"t": self.now, "ev": "dispatch", "task": task.id,
               "req": task.request_id, "kind": task.kind,
               "step": task.step_index, "ranks": list(layout.ranks)}
+        stamp = task.meta.get("cache")
+        if stamp is not None:
+            # the plane-made cache decision is part of the decision
+            # trace: both backends must make (and price) the same call
+            ev["cache"] = stamp["mode"] + \
+                ("+mig" if stamp["migrate"] else "")
         if extra_ev:
             ev.update(extra_ev)
         self.events.append(ev)
@@ -269,6 +291,9 @@ class ControlPlane:
 
     def _dispatch(self, task: TrajectoryTask, layout: ExecutionLayout,
                   graph: RequestGraph, *, via_pin: bool = False):
+        # stamp the feature-cache decision (DESIGN.md §11) BEFORE the
+        # backend sees the task: both backends act on the plane's call
+        self.cache.stamp(task, layout, graph)
         self._mark_running(task, layout,
                            {"realloc": True} if via_pin else None)
         self.free_ranks -= set(layout.ranks)
@@ -326,6 +351,10 @@ class ControlPlane:
         model, tokens = next(iter(sigs))
         pack_id = f"pack-{next(self._pack_seq)}"
         membership = [(req.id, t.step_index) for t, req, _ in members]
+        # pack-level cache decision (DESIGN.md §11): one set of
+        # collectives -> the pack hits or refreshes as a unit
+        pack_mode = self.cache.stamp_pack(
+            [(t, g) for t, _, g in members], a.layout)
         seqs: dict[str, int] = {}
         for t, req, g in members:
             # an explicit placement overrides and clears a pin
@@ -339,12 +368,16 @@ class ControlPlane:
             "members": tuple(t.id for t, _, _ in members),
             "layout": a.layout, "model": model, "tokens": tokens,
             "seqs": seqs, "span": a.layout.span(self.topology),
+            "cached": pack_mode == "hit",
         }
-        self.events.append({"t": self.now, "ev": "packed_dispatch",
-                            "pack": pack_id, "batch": len(members),
-                            "reqs": [r for r, _ in membership],
-                            "tokens": tokens,
-                            "ranks": list(a.layout.ranks)})
+        pack_ev = {"t": self.now, "ev": "packed_dispatch",
+                   "pack": pack_id, "batch": len(members),
+                   "reqs": [r for r, _ in membership],
+                   "tokens": tokens,
+                   "ranks": list(a.layout.ranks)}
+        if pack_mode is not None:
+            pack_ev["cache"] = pack_mode
+        self.events.append(pack_ev)
         self.backend.dispatch_pack(
             pack_id, [(t, g) for t, _, g in members], a.layout, self.now)
         return True
@@ -379,6 +412,12 @@ class ControlPlane:
             # the pinned width before the policy runs, livelocking the
             # plane in a preempt/requeue cycle
             self.pinned.pop(task.request_id, None)
+            # eviction clears feature-cache residency (DESIGN.md §11):
+            # the requeued task will be re-placed, and a stale snapshot
+            # must never be trusted across an eviction — for a pack,
+            # EVERY member's cache invalidates (the batched slice was
+            # one collective set)
+            self.cache.invalidate(task.request_id, "preempt")
             self.preempting[tid] = "requeue"
             ev = {"t": self.now, "ev": "preempt",
                   "task": task.id, "req": task.request_id,
@@ -395,6 +434,7 @@ class ControlPlane:
             return False
         req.failed = True
         self.pinned.pop(a.request_id, None)
+        self.cache.invalidate(a.request_id, "cancel")
         for tid, (task, _) in list(self.running.items()):
             if task.request_id == a.request_id:
                 self.preempting[tid] = "drop"
@@ -482,7 +522,8 @@ class ControlPlane:
                 seq=rec["seqs"][tid]), observe=False)
         self.cost.observe_packed(rec["model"], "denoise", rec["tokens"],
                                  rec["layout"].degree, len(rec["members"]),
-                                 c.duration, span=rec["span"])
+                                 c.duration, span=rec["span"],
+                                 cached=rec.get("cached", False))
 
     def _complete_task(self, c: Completion, observe: bool = True):
         if c.task_id not in self.running:
@@ -523,16 +564,21 @@ class ControlPlane:
             if art.layout is None:
                 art.layout = layout
         # online cost-model calibration (§5.1); pack members skip this —
-        # the pack observes ONE batched sample instead
+        # the pack observes ONE batched sample instead.  Cache-hit steps
+        # calibrate their own |c cell (DESIGN.md §11).
         if observe:
+            stamp = task.meta.get("cache")
             self.cost.observe(self.requests[task.request_id].model,
                               task.kind, task.meta.get("tokens", 4096),
                               layout.degree, c.duration,
-                              span=layout.span(self.topology))
+                              span=layout.span(self.topology),
+                              cached=bool(stamp
+                                          and stamp["mode"] == "hit"))
         req = self.requests[task.request_id]
         if graph.is_done() and req.done_time is None:
             req.done_time = c.finish_time
             self.pinned.pop(req.id, None)
+            self.cache.invalidate(req.id, "done")
             self.events.append({"t": self.now, "ev": "request_done",
                                 "req": req.id})
 
@@ -541,6 +587,7 @@ class ControlPlane:
         recovery — re-enqueue the task; its input artifacts are intact."""
         task, layout = self.running.pop(task_id)
         self.preempting.pop(task_id, None)
+        self.cache.invalidate(task.request_id, "failure")
         pack_id = self._pack_of.pop(task_id, None)
         # a pack member shares its rank set with its siblings: the ranks
         # free only when no sibling still runs on them (at the pack's
@@ -612,6 +659,10 @@ def trace_signature(events: list[dict],
     Packed dispatches additionally record their full membership —
     canonicalized as ``(arrival index, step)`` pairs — so two traces only
     match when they formed the SAME packs (DESIGN.md §9).
+
+    Cache-stamped dispatches (DESIGN.md §11) record the plane's
+    hit/refresh/migrate decision, so two traces only match when they made
+    the SAME feature-cache calls; uncached traces are unchanged.
     """
     order: dict[str, int] = {}
     for ev in events:
@@ -624,6 +675,8 @@ def trace_signature(events: list[dict],
         idx = order.get(ev.get("req"), -1)
         rec = (ev["ev"], ev.get("kind"), ev.get("step"),
                tuple(ev.get("ranks", ())))
+        if ev.get("cache") is not None:
+            rec += (ev["cache"],)
         members = ev.get("pack_members")
         if members:
             rec += (tuple(sorted((order.get(rid, -1), step)

@@ -97,16 +97,38 @@ class SimBackend:
         entries = plan_migration(art.fields, art.layout, layout)
         return migration_cost(entries, topo)
 
+    def _cache_effects(self, task: TrajectoryTask, graph: RequestGraph,
+                       layout: ExecutionLayout) -> float:
+        """Feature-cache side of one dispatch (DESIGN.md §11): a
+        plane-stamped ``migrate`` moves the warm snapshot through the
+        SAME migration pricing as any artifact (same-degree Reallocate);
+        a refresh re-homes the snapshot to this layout for free (the
+        gather writes it here).  Returns migration seconds to add."""
+        stamp = task.meta.get("cache")
+        if stamp is None:
+            return 0.0
+        art = graph.artifacts[stamp["art"]]
+        mig = 0.0
+        if stamp["migrate"] and art.layout is not None \
+                and art.layout.ranks != layout.ranks:
+            mig = self._migration(art, layout)
+            self.migrated_bytes += art.nbytes
+        art.layout = layout
+        return mig
+
     def dispatch(self, task: TrajectoryTask, layout: ExecutionLayout,
                  graph: RequestGraph, now: float):
         model = graph.request.model
         tokens = task.meta.get("tokens", 4096)
+        stamp = task.meta.get("cache")
         dur = self.cost.estimate(model, task.kind, tokens, layout.degree,
-                                 span=layout.span(self.topology))
+                                 span=layout.span(self.topology),
+                                 cached=bool(stamp
+                                             and stamp["mode"] == "hit"))
         if self.jitter:
             dur *= 1.0 + self.jitter * (self._rand() - 0.5)
         # migration latency when the input artifact lives in another layout
-        mig = 0.0
+        mig = self._cache_effects(task, graph, layout)
         for aid in task.inputs:
             art = graph.artifacts[aid]
             if art.layout is not None and art.layout.ranks != layout.ranks:
@@ -135,13 +157,18 @@ class SimBackend:
         task0, graph0 = members[0]
         model = graph0.request.model
         tokens = task0.meta.get("tokens", 4096)
+        stamp0 = task0.meta.get("cache")
         dur = self.cost.estimate_packed(model, "denoise", tokens,
                                         layout.degree, len(members),
-                                        span=layout.span(self.topology))
+                                        span=layout.span(self.topology),
+                                        cached=bool(stamp0 and
+                                                    stamp0["mode"]
+                                                    == "hit"))
         if self.jitter:
             dur *= 1.0 + self.jitter * (self._rand() - 0.5)
         mig = 0.0
         for task, graph in members:
+            mig += self._cache_effects(task, graph, layout)
             for aid in task.inputs:
                 art = graph.artifacts[aid]
                 if art.layout is not None and \

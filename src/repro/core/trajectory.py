@@ -48,10 +48,17 @@ class FieldSpec:
 
 @dataclass
 class Artifact:
-    """Logical artifact: a dependency edge with a semantic role."""
+    """Logical artifact: a dependency edge with a semantic role.
+
+    Roles: ``text_embeds`` | ``latent`` | ``sched`` | ``output`` |
+    ``kv_cache`` (DESIGN.md §11 — the per-request cross-step feature
+    cache: a migratable side artifact that no task *depends* on, so it
+    never gates readiness; the control plane's residency tracker decides
+    when its bytes are live).
+    """
     id: str
     request_id: str
-    role: str                       # "text_embeds"|"latent"|"sched"|"output"
+    role: str
     fields: dict[str, FieldSpec] = field(default_factory=dict)
     # materialization (set when the producer completes)
     layout: Optional["ExecutionLayout"] = None
@@ -87,18 +94,50 @@ class ClusterTopology:
     inter_bw: float = 12.5e9        # bytes/s across hosts
     intra_lat: float = 60e-6        # per-transfer setup within a host
     inter_lat: float = 250e-6      # per-transfer setup across hosts
+    # heterogeneous fabrics: optional per-host-pair overrides of
+    # ``inter_bw`` (e.g. rack-local pairs faster than cross-rack).
+    # Accepts a {(h0, h1): bytes/s} mapping; stored canonicalized
+    # (sorted pairs, sorted tuple) so the dataclass stays hashable.
+    # Absent pairs fall back to ``inter_bw`` — byte-identical default.
+    inter_bw_map: Optional[tuple] = None
 
     def __post_init__(self):
         assert self.num_hosts >= 1 and self.ranks_per_host >= 1
+        if self.inter_bw_map is not None:
+            merged: dict[tuple[int, int], float] = {}
+            for (h0, h1), bw in dict(self.inter_bw_map).items():
+                key = (min(h0, h1), max(h0, h1))
+                prev = merged.setdefault(key, float(bw))
+                assert prev == float(bw), \
+                    f"conflicting inter_bw_map entries for hosts {key}"
+            assert all(bw > 0 for bw in merged.values())
+            object.__setattr__(self, "inter_bw_map",
+                               tuple(sorted(merged.items())))
 
     @property
     def num_ranks(self) -> int:
         return self.num_hosts * self.ranks_per_host
 
+    def inter_bw_of(self, h0: int, h1: int) -> float:
+        """Bandwidth of the link between two hosts (override or
+        default)."""
+        if self.inter_bw_map:
+            key = (min(h0, h1), max(h0, h1))
+            for pair, bw in self.inter_bw_map:
+                if pair == key:
+                    return bw
+        return self.inter_bw
+
     @property
     def inter_cost_factor(self) -> float:
-        """How much more expensive an inter-host byte is (>= 1)."""
-        return max(self.intra_bw / self.inter_bw, 1.0)
+        """How much more expensive an inter-host byte is (>= 1); with
+        per-pair overrides this is the WORST link's factor (cost
+        estimates for a spanning layout must not undersell the slowest
+        edge it might cross)."""
+        slowest = self.inter_bw
+        if self.inter_bw_map:
+            slowest = min(slowest, min(bw for _, bw in self.inter_bw_map))
+        return max(self.intra_bw / slowest, 1.0)
 
     def host_of(self, rank: int) -> int:
         return rank // self.ranks_per_host

@@ -75,6 +75,22 @@ def convert_request(req: Request, cfg: ModelConfig) -> RequestGraph:
         tasks[t.id] = t
         prev_latent = nxt
 
+    # cross-step feature cache (DESIGN.md §11): a side artifact — NOT an
+    # input of any task, so it never gates readiness — holding, per
+    # rank, the per-layer gathered K/V snapshot of the last refresh
+    # step.  Replicated fields: every rank's copy is the bit-identical
+    # snapshot of one gather, which is what lets a same-degree
+    # Reallocate move a warm cache through the ordinary migration
+    # planner.  The codec-declared shapes also give the planner/cost
+    # model an honest byte count for pricing that move.
+    kv_fields: dict[str, FieldSpec] = {}
+    for layer in range(cfg.num_layers):
+        for f in ("k", "v"):
+            kv_fields[f"{f}{layer}"] = FieldSpec(
+                "replicated", (n_tok, cfg.num_kv_heads, cfg.head_dim),
+                "float32")
+    art("kv_cache", kv_fields)
+
     out = art("output", {
         "pixels": FieldSpec("replicated",
                             (f_lat, h_lat * 8, w_lat * 8, 3), "float32"),

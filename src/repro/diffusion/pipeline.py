@@ -92,18 +92,40 @@ class DiTPipeline:
         task0, graph0 = members[0]
         spec = graph0.artifacts[task0.inputs[1]].fields["latent"]
         view = field_view(spec, layout)
-        off, _ = view.slices[rank]
+        off, size = view.slices[rank]
         n_total = spec.global_shape[0]
         t = jnp.array(t_steps, jnp.float32)
 
+        stamp = task0.meta.get("cache")
         if layout.degree == 1:
-            def kv_gather(k, v):
+            def kv_gather(k, v, layer):
                 return k, v
-        else:
-            def kv_gather(k, v):
+        elif stamp is None:
+            def kv_gather(k, v, layer):
                 K = comm.all_gather(desc, rank, np.asarray(k), axis=1)
                 V = comm.all_gather(desc, rank, np.asarray(v), axis=1)
                 return jnp.asarray(K), jnp.asarray(V)
+        else:
+            # cross-step feature cache (DESIGN.md §11): the pack shares
+            # ONE plane-stamped decision; per-member snapshots live in
+            # each member's kv_cache artifact, batch rows map to members
+            stores = [g.artifacts[tk.meta["cache"]["art"]].data[rank]
+                      for tk, g in members]
+            if stamp["mode"] == "refresh":
+                def kv_gather(k, v, layer):
+                    K = comm.all_gather(desc, rank, np.asarray(k), axis=1)
+                    V = comm.all_gather(desc, rank, np.asarray(v), axis=1)
+                    for j, store in enumerate(stores):
+                        store[f"k{layer}"] = K[j]
+                        store[f"v{layer}"] = V[j]
+                    return jnp.asarray(K), jnp.asarray(V)
+            else:
+                def kv_gather(k, v, layer):
+                    K = np.stack([s[f"k{layer}"] for s in stores])
+                    V = np.stack([s[f"v{layer}"] for s in stores])
+                    K[:, off:off + size] = np.asarray(k)
+                    V[:, off:off + size] = np.asarray(v)
+                    return jnp.asarray(K), jnp.asarray(V)
 
         x = jnp.stack([jnp.asarray(s) for s in xs])        # (B, N_loc, pd)
         txt = jnp.stack([jnp.asarray(s) for s in txts])    # (B, Lt, cond)
@@ -166,13 +188,38 @@ class DiTPipeline:
         sigma_next = float(sigmas[step + 1]) if step + 1 < req.steps else 0.0
         t = jnp.array([schedule.timestep_of_sigma(sigma_now)], jnp.float32)
 
+        stamp = task.meta.get("cache")
         if layout.degree == 1:
-            def kv_gather(k, v):
+            def kv_gather(k, v, layer):
                 return k, v
-        else:
-            def kv_gather(k, v):
+        elif stamp is None:
+            def kv_gather(k, v, layer):
                 K = comm.all_gather(desc, rank, np.asarray(k), axis=1)
                 V = comm.all_gather(desc, rank, np.asarray(v), axis=1)
+                return jnp.asarray(K), jnp.asarray(V)
+        elif stamp["mode"] == "refresh":
+            # full gather; snapshot this rank's copy per layer — every
+            # rank stores the SAME gathered bytes (replicated fields),
+            # and the returned arrays are exactly the uncached ones, so
+            # a refresh step is bit-exact with the non-cached path
+            store = graph.artifacts[stamp["art"]].data[rank]
+
+            def kv_gather(k, v, layer):
+                K = comm.all_gather(desc, rank, np.asarray(k), axis=1)
+                V = comm.all_gather(desc, rank, np.asarray(v), axis=1)
+                store[f"k{layer}"] = K[0]
+                store[f"v{layer}"] = V[0]
+                return jnp.asarray(K), jnp.asarray(V)
+        else:
+            # cache hit: stale remote shards from the last refresh, with
+            # THIS step's fresh local K/V spliced in — no collective
+            store = graph.artifacts[stamp["art"]].data[rank]
+
+            def kv_gather(k, v, layer):
+                K = store[f"k{layer}"][None].copy()
+                V = store[f"v{layer}"][None].copy()
+                K[:, off:off + size] = np.asarray(k)
+                V[:, off:off + size] = np.asarray(v)
                 return jnp.asarray(K), jnp.asarray(V)
 
         v_shard = dit.forward_sp_tokens(

@@ -202,6 +202,36 @@ def multi_host_trace(cost: CostModel, *, duration: float = 240.0,
     return out
 
 
+def cache_trace(cost: CostModel, *, duration: float = 240.0,
+                load: float = 1.0, num_ranks: int = 4, steps: int = 25,
+                seed: int = 29, alpha: float = 1.1) -> list[Request]:
+    """Feature-cache stress workload (DESIGN.md §11): a Poisson stream
+    of M-class images whose deadlines are only meetable at SP degrees
+    >= 2 — every denoise step therefore runs a multi-rank KV all-gather,
+    which is exactly the cost a staleness window removes.  ``load`` is
+    calibrated against UNCACHED degree-4 capacity, so the uncached
+    baseline saturates while a cached plane (collectives skipped on
+    interval-1 of every interval steps) clears the same stream with
+    margin — the throughput headroom the acceptance gate measures."""
+    rand = _lcg(seed)
+    t_m = standalone_service_time("dit-image", "M", cost, steps)
+    t_m4 = standalone_service_time("dit-image", "M", cost, steps,
+                                   degree=4)
+    # the uncached machine serves this stream as num_ranks/4 concurrent
+    # degree-4 requests (deadlines rule out degree 1)
+    rate = load * max(num_ranks / 4.0, 1.0) / t_m4
+    out: list[Request] = []
+    t = 0.0
+    while t < duration:
+        t += -math.log(max(rand(), 1e-9)) / rate
+        r = make_request("dit-image", "M", t, cost, steps)
+        # tight deadline: misses at degree 1, met at higher degrees
+        r.deadline = r.arrival + alpha * t_m4 + 0.25 * t_m \
+            + SLO_ALLOWANCE["dit-image"]
+        out.append(r)
+    return out
+
+
 def foreground_burst_trace(model: str, cost: CostModel, *,
                            duration: float = 120.0, load: float = 0.5,
                            num_ranks: int = 4, steps: int = 50,

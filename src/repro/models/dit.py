@@ -208,10 +208,14 @@ def forward_sp_tokens(params, tok_shard, t, txt_embeds, cfg: ModelConfig, *,
     """Denoiser forward over a TOKEN SHARD under sequence parallelism.
 
     tok_shard: (1, N_local, patch_dim) — this rank's patchified tokens.
-    kv_gather(k, v) -> (K, V) gathers key/value over the token axis across
-    the execution group (GFC all-gather in the thread runtime; identity at
-    SP1).  Queries stay local, so compute is token-sharded while attention
-    sees the full sequence — the paper's elastic SP layout.
+    kv_gather(k, v, layer) -> (K, V) gathers key/value over the token axis
+    across the execution group (GFC all-gather in the thread runtime;
+    identity at SP1).  Queries stay local, so compute is token-sharded
+    while attention sees the full sequence — the paper's elastic SP
+    layout.  The layer index keys the cross-step feature cache
+    (DESIGN.md §11): a cache-hit gather returns the stale remote shards
+    of THIS layer from the previous refresh step with the fresh local
+    shard spliced in, skipping the collective entirely.
 
     Returns the velocity prediction for the local token shard
     (1, N_local, patch_dim).
@@ -240,7 +244,7 @@ def forward_sp_tokens(params, tok_shard, t, txt_embeds, cfg: ModelConfig, *,
         q = jnp.einsum("bsd,dhk->bshk", h, ap["wq"].astype(dtype))
         k = jnp.einsum("bsd,dhk->bshk", h, ap["wk"].astype(dtype))
         v = jnp.einsum("bsd,dhk->bshk", h, ap["wv"].astype(dtype))
-        K, V = kv_gather(k, v)                      # GFC all-gather (axis=1)
+        K, V = kv_gather(k, v, i)                   # GFC all-gather (axis=1)
         attn = L.sdpa(q, K, V, causal=False)
         attn = jnp.einsum("bshk,hkd->bsd", attn, ap["wo"].astype(dtype))
         x = x + g_a[:, None] * attn

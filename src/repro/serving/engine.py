@@ -26,10 +26,15 @@ from repro.diffusion.pipeline import DiTPipeline
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, policy: Policy, num_ranks,
-                 cost: Optional[CostModel] = None, seed: int = 0):
+                 cost: Optional[CostModel] = None, seed: int = 0,
+                 cache_interval: Optional[int] = None):
         # `num_ranks` accepts a bare rank count (back-compat: synthesizes
         # a one-host topology) or a ClusterTopology (DESIGN.md §10);
-        # spanning GFC groups then run hierarchical collectives
+        # spanning GFC groups then run hierarchical collectives.
+        # `cache_interval` enables the cross-step feature cache
+        # (DESIGN.md §11): denoise steps reuse stale remote KV shards
+        # for up to interval-1 steps between full refresh gathers
+        # (interval=1 refreshes every step — bit-exact outputs).
         topo = as_topology(num_ranks)
         self.cfg = cfg
         self.topology = topo
@@ -38,7 +43,8 @@ class ServingEngine:
         self.backend = ThreadBackend(self.pipeline, topo.num_ranks,
                                      comm=self.comm)
         self.cp = ControlPlane(topo, policy, cost or CostModel(),
-                               self.backend)
+                               self.backend,
+                               cache_interval=cache_interval)
 
     # ------------------------------------------------------------------
     def serve(self, requests: list[Request], *, time_scale: float = 1.0,

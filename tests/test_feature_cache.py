@@ -1,0 +1,417 @@
+"""Cross-step feature cache (DESIGN.md §11): hit/refresh/migrate
+stamping, residency invalidation on Preempt/Cancel/failure/degree
+change (pack members invalidate together), bit-identical same-degree
+cache migration, and the cached cost-model cells."""
+import numpy as np
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.core.cost_model import CostModel
+from repro.core.gfc import GroupFreeComm
+from repro.core.migration import execute_migration, plan_migration
+from repro.core.scheduler import (Cancel, ControlPlane, Dispatch,
+                                  PackedDispatch, Policy, Preempt,
+                                  Reallocate)
+from repro.core.simulator import SimBackend
+from repro.core.trajectory import ExecutionLayout, Request
+from repro.diffusion.adapters import convert_request
+from repro.diffusion.feature_cache import (CacheEntry, FeatureCachePlane,
+                                           cache_artifact)
+
+CFG = DIT_IMAGE.reduced()
+
+
+class _Null(Policy):
+    name = "null"
+
+    def schedule(self, view):
+        return []
+
+
+class _FixedDegree(Policy):
+    """Denoise at a fixed degree on the lowest free ranks."""
+    name = "fixed"
+
+    def __init__(self, k: int):
+        self.k = k
+
+    def schedule(self, view):
+        out, free = [], list(view.free_ranks)
+        for t, req, g in sorted(view.ready, key=lambda x: x[0].id):
+            if req.id in view.pinned and t.kind == "denoise":
+                continue
+            k = 1 if t.kind in ("encode", "decode") else self.k
+            if len(free) < k:
+                break
+            out.append(Dispatch(t.id, ExecutionLayout(tuple(free[:k]))))
+            free = free[k:]
+        return out
+
+
+def _request(rid="r0", res=128, steps=6, arrival=0.0):
+    return Request(id=rid, model="dit-image", height=res, width=res,
+                   frames=1, steps=steps, arrival=arrival)
+
+
+def _cp(policy, num_ranks=4, cache_interval=None):
+    cost = CostModel()
+    return ControlPlane(num_ranks, policy, cost, SimBackend(cost),
+                        cache_interval=cache_interval)
+
+
+def _modes(cp):
+    return [(e["step"], e.get("cache")) for e in cp.events
+            if e["ev"] == "dispatch" and e["kind"] == "denoise"]
+
+
+def _invalidations(cp):
+    return [(e["req"], e["why"]) for e in cp.events
+            if e["ev"] == "cache_invalidate"]
+
+
+def _pump(cp, rounds=200):
+    for _ in range(rounds):
+        if cp.backend.peek() is None:
+            break
+        for c in cp.backend.poll():
+            cp.on_completion(c)
+        cp.release_arrivals()
+        cp.schedule_point()
+
+
+# ---------------------------------------------------------------------------
+# stamp cycle
+# ---------------------------------------------------------------------------
+
+def test_stamp_cycle_refresh_then_hits():
+    cp = _cp(_FixedDegree(2), cache_interval=3)
+    req = _request(steps=7)
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    assert cp.metrics()["completed"] == 1
+    assert _modes(cp) == [(0, "refresh"), (1, "hit"), (2, "hit"),
+                          (3, "refresh"), (4, "hit"), (5, "hit"),
+                          (6, "refresh")]
+    # residency is cleaned up when the request completes
+    assert not cp.cache.entries
+    assert ("r0", "done") in _invalidations(cp)
+
+
+def test_interval_one_refreshes_every_step():
+    cp = _cp(_FixedDegree(2), cache_interval=1)
+    req = _request(steps=4)
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    assert [m for _, m in _modes(cp)] == ["refresh"] * 4
+
+
+def test_disabled_plane_never_stamps():
+    cp = _cp(_FixedDegree(2), cache_interval=None)
+    req = _request(steps=3)
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    assert [m for _, m in _modes(cp)] == [None] * 3
+    assert not cp.cache.entries and not _invalidations(cp)
+
+
+def test_degree_one_bypasses_the_cache():
+    cp = _cp(_FixedDegree(1), cache_interval=3)
+    req = _request(steps=3)
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    assert [m for _, m in _modes(cp)] == [None] * 3
+    assert not cp.cache.entries
+
+
+# ---------------------------------------------------------------------------
+# invalidation rules (ISSUE satellite: residency edge cases)
+# ---------------------------------------------------------------------------
+
+def test_degree_change_invalidates_residency():
+    cp = _cp(_Null(), cache_interval=10)
+    req = _request(steps=3)
+    cp.submit(req, convert_request(req, CFG))
+    g = cp.graphs[req.id]
+    enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+    assert cp.apply(Dispatch(enc.id, ExecutionLayout((0,))))
+    _pump(cp, 1)
+    d0 = [t for t in g.ready_tasks() if t.kind == "denoise"][0]
+    assert cp.apply(Dispatch(d0.id, ExecutionLayout((0, 1))))
+    assert req.id in cp.cache.entries           # refresh committed
+    _pump(cp, 1)
+    d1 = [t for t in g.ready_tasks() if t.kind == "denoise"][0]
+    assert cp.apply(Dispatch(d1.id, ExecutionLayout((0, 1, 2, 3))))
+    assert (req.id, "degree-change") in _invalidations(cp)
+    assert d1.meta["cache"]["mode"] == "refresh"
+    assert cp.cache.entries[req.id].layout.degree == 4
+
+
+def test_preempt_clears_residency_and_next_dispatch_refreshes():
+    cp = _cp(_FixedDegree(2), cache_interval=10)
+    req = _request(steps=5)
+    cp.submit(req, convert_request(req, CFG))
+    cp.schedule_point()
+    _pump(cp, 2)        # encode done, denoise 0 (refresh) done, 1 running
+    running = [t for t, _ in cp.running.values() if t.kind == "denoise"]
+    assert running and req.id in cp.cache.entries
+    assert cp.apply(Preempt(running[0].id))
+    assert req.id not in cp.cache.entries
+    assert (req.id, "preempt") in _invalidations(cp)
+    cp.run()
+    assert cp.metrics()["completed"] == 1
+    # the re-dispatched step after the eviction must be a refresh: a
+    # stale snapshot is never trusted across an eviction
+    modes = _modes(cp)
+    requeue_step = running[0].step_index
+    post = [m for s, m in modes if s == requeue_step]
+    assert post[-1] == "refresh"
+
+
+def test_cancel_clears_residency():
+    cp = _cp(_FixedDegree(2), cache_interval=10)
+    req = _request(steps=5)
+    cp.submit(req, convert_request(req, CFG))
+    cp.schedule_point()
+    _pump(cp, 2)
+    assert req.id in cp.cache.entries
+    assert cp.apply(Cancel(req.id))
+    assert req.id not in cp.cache.entries
+    assert (req.id, "cancel") in _invalidations(cp)
+    cp.run()
+    assert cp.metrics()["failed"] == 1
+
+
+def test_worker_failure_clears_residency():
+    cp = _cp(_FixedDegree(2), cache_interval=10)
+    req = _request(steps=4)
+    cp.submit(req, convert_request(req, CFG))
+    cp.schedule_point()
+    _pump(cp, 2)
+    tid = [t.id for t, _ in cp.running.values()
+           if t.kind == "denoise"][0]
+    assert req.id in cp.cache.entries
+    cp.fail_task(tid, requeue=True)
+    assert req.id not in cp.cache.entries
+    assert (req.id, "failure") in _invalidations(cp)
+
+
+def test_pack_member_preempt_invalidates_every_member():
+    """A pack is one device slice with one set of collectives: evicting
+    any member evicts the pack, and EVERY member's cache residency must
+    clear with it (ISSUE satellite)."""
+    cp = _cp(_Null(), cache_interval=10)
+    reqs = [_request(rid, steps=3) for rid in ("a", "b")]
+    for r in reqs:
+        cp.submit(r, convert_request(r, CFG))
+    for r in reqs:
+        g = cp.graphs[r.id]
+        enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+        assert cp.apply(Dispatch(enc.id, ExecutionLayout((0,))))
+        _pump(cp, 1)
+    step0 = {r.id: [t for t in cp.graphs[r.id].ready_tasks()
+                    if t.kind == "denoise"][0] for r in reqs}
+    assert cp.apply(PackedDispatch((step0["a"].id, step0["b"].id),
+                                   ExecutionLayout((0, 1))))
+    assert step0["a"].meta["cache"]["mode"] == "refresh"
+    _pump(cp, 1)        # pack completes; both residencies warm
+    assert set(cp.cache.entries) == {"a", "b"}
+    step1 = {r.id: [t for t in cp.graphs[r.id].ready_tasks()
+                    if t.kind == "denoise"][0] for r in reqs}
+    assert cp.apply(PackedDispatch((step1["a"].id, step1["b"].id),
+                                   ExecutionLayout((0, 1))))
+    assert step1["a"].meta["cache"]["mode"] == "hit"
+    assert step1["b"].meta["cache"]["mode"] == "hit"
+    assert cp.apply(Preempt(step1["a"].id))     # evicts the whole pack
+    assert not cp.cache.entries
+    invs = _invalidations(cp)
+    assert ("a", "preempt") in invs and ("b", "preempt") in invs
+
+
+def test_pack_hits_only_when_every_member_hits():
+    """One cold member forces a full gather for the whole batch — which
+    then refreshes EVERY member's snapshot."""
+    cp = _cp(_Null(), cache_interval=10)
+    reqs = [_request(rid, steps=3) for rid in ("warm", "cold")]
+    for r in reqs:
+        cp.submit(r, convert_request(r, CFG))
+        g = cp.graphs[r.id]
+        enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+        assert cp.apply(Dispatch(enc.id, ExecutionLayout((0,))))
+        _pump(cp, 1)
+    # warm up only one request
+    d0 = [t for t in cp.graphs["warm"].ready_tasks()
+          if t.kind == "denoise"][0]
+    assert cp.apply(Dispatch(d0.id, ExecutionLayout((0, 1))))
+    _pump(cp, 1)
+    assert "warm" in cp.cache.entries and "cold" not in cp.cache.entries
+    nxt = {rid: [t for t in cp.graphs[rid].ready_tasks()
+                 if t.kind == "denoise"][0] for rid in ("warm", "cold")}
+    assert cp.apply(PackedDispatch((nxt["warm"].id, nxt["cold"].id),
+                                   ExecutionLayout((0, 1))))
+    assert nxt["warm"].meta["cache"]["mode"] == "refresh"
+    assert nxt["cold"].meta["cache"]["mode"] == "refresh"
+    _pump(cp, 1)
+    assert set(cp.cache.entries) == {"warm", "cold"}
+
+
+# ---------------------------------------------------------------------------
+# same-degree Reallocate migrates the warm cache
+# ---------------------------------------------------------------------------
+
+def test_same_degree_reallocate_stamps_migrate_hit():
+    cp = _cp(_FixedDegree(2), cache_interval=10)
+    req = _request(steps=5)
+    cp.submit(req, convert_request(req, CFG))
+    cp.schedule_point()
+    _pump(cp, 2)        # refresh step done on (0, 1)
+    assert cp.cache.entries[req.id].layout.ranks == (0, 1)
+    assert cp.apply(Reallocate(req.id, ExecutionLayout((2, 3))))
+    cp.run()
+    assert cp.metrics()["completed"] == 1
+    modes = _modes(cp)
+    assert ("hit+mig" in dict((m, m) for _, m in modes)) or \
+        any(m == "hit+mig" for _, m in modes), modes
+    # the sim priced the snapshot's migration
+    assert cp.backend.migrated_bytes > 0
+
+
+def test_cache_migration_is_bit_identical():
+    """The kv_cache artifact's replicated per-layer snapshots survive a
+    same-degree rank-set change bit for bit (ISSUE satellite)."""
+    req = _request(steps=2)
+    graph = convert_request(req, CFG)
+    art = cache_artifact(graph)
+    assert art is not None
+    src, dst = ExecutionLayout((0, 1)), ExecutionLayout((2, 3))
+    rng = np.random.default_rng(7)
+    art.layout = src
+    art.data = {}
+    snapshot = {}
+    for name, spec in art.fields.items():
+        snapshot[name] = rng.standard_normal(
+            spec.global_shape).astype(np.float32)
+    for r in src.ranks:
+        art.data[r] = {name: snapshot[name].copy()
+                       for name in art.fields}
+    comm = GroupFreeComm(4)
+    entries = plan_migration(art.fields, src, dst)
+    execute_migration(comm, art, dst, entries)
+    assert art.layout == dst
+    assert set(art.data) == {2, 3}
+    for r in dst.ranks:
+        for name in art.fields:
+            assert np.array_equal(art.data[r][name], snapshot[name]), \
+                f"field {name} corrupted on rank {r}"
+
+
+def test_stale_window_expiry_refreshes_instead_of_migrating():
+    """A rank-set change AFTER the window expired must not pay a
+    pointless migration: the step refreshes on the new ranks."""
+    plane = FeatureCachePlane(2)
+    req = _request(steps=8)
+    graph = convert_request(req, CFG)
+    tasks = sorted([t for t in graph.tasks.values()
+                    if t.kind == "denoise"], key=lambda t: t.step_index)
+    a, b = ExecutionLayout((0, 1)), ExecutionLayout((2, 3))
+    assert plane.stamp(tasks[0], a, graph)["mode"] == "refresh"
+    s1 = plane.stamp(tasks[1], b, graph)
+    assert s1["mode"] == "hit" and s1["migrate"]
+    # window (interval=2) expired relative to the step-0 refresh
+    s2 = plane.stamp(tasks[2], a, graph)
+    assert s2["mode"] == "refresh" and not s2["migrate"]
+
+
+# ---------------------------------------------------------------------------
+# cost model: cached cells
+# ---------------------------------------------------------------------------
+
+def test_cached_estimate_drops_the_collective_term():
+    cost = CostModel()
+    for tokens in (256, 1024, 4096):
+        for degree in (2, 4):
+            full = cost.estimate("dit-image", "denoise", tokens, degree)
+            hit = cost.estimate("dit-image", "denoise", tokens, degree,
+                                cached=True)
+            assert hit < full
+    # degree 1 has no collective: cached == uncached
+    assert cost.estimate("dit-image", "denoise", 4096, 1, cached=True) \
+        == cost.estimate("dit-image", "denoise", 4096, 1)
+
+
+def test_cached_observe_uses_its_own_cell():
+    cost = CostModel()
+    cost.observe("dit-image", "denoise", 4096, 4, 0.5)
+    cost.observe("dit-image", "denoise", 4096, 4, 0.1, cached=True)
+    assert cost.estimate("dit-image", "denoise", 4096, 4) == 0.5
+    assert cost.estimate("dit-image", "denoise", 4096, 4,
+                         cached=True) == 0.1
+    # span-1 uncached keys stay byte-identical to the legacy format
+    assert "dit-image|denoise|4096|4" in cost.calibration
+    assert "dit-image|denoise|4096|4|c" in cost.calibration
+
+
+def test_cached_estimate_scales_measured_uncached_cell():
+    cost = CostModel()
+    cost.observe("dit-image", "denoise", 4096, 4, 1.0)
+    hit = cost.estimate("dit-image", "denoise", 4096, 4, cached=True)
+    ratio = cost.analytical("dit-image", "denoise", 4096, 4,
+                            cached=True) \
+        / cost.analytical("dit-image", "denoise", 4096, 4)
+    assert abs(hit - ratio) < 1e-12     # 1.0 s measured x analytical ratio
+
+
+def test_request_remaining_cache_mixture():
+    cost = CostModel()
+    req = _request(steps=10)
+    graph = convert_request(req, CFG)
+    full = cost.request_remaining("dit-image", graph, 4)
+    mixed = cost.request_remaining("dit-image", graph, 4,
+                                   cache_interval=4)
+    assert mixed < full
+    # degree 1: no collectives, the mixture is a no-op
+    assert cost.request_remaining("dit-image", graph, 1,
+                                  cache_interval=4) == \
+        cost.request_remaining("dit-image", graph, 1)
+
+
+def test_estimate_packed_cached():
+    cost = CostModel()
+    full = cost.estimate_packed("dit-image", "denoise", 1024, 2, 4)
+    hit = cost.estimate_packed("dit-image", "denoise", 1024, 2, 4,
+                               cached=True)
+    assert hit < full
+    cost.observe_packed("dit-image", "denoise", 1024, 2, 4, 0.07,
+                        cached=True)
+    assert cost.estimate_packed("dit-image", "denoise", 1024, 2, 4,
+                                cached=True) == 0.07
+    assert cost.estimate_packed("dit-image", "denoise", 1024, 2, 4) \
+        == full     # uncached cell untouched
+
+
+def test_sim_prices_hits_below_refreshes():
+    """The simulator's per-step durations must reproduce the cached
+    speedup (collective term dropped on hits)."""
+    cp = _cp(_FixedDegree(4), cache_interval=4)
+    req = _request(res=256, steps=8)
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    # recover durations from the calibration the plane observed
+    cost = cp.cost
+    tok = [t for t in cp.graphs[req.id].tasks.values()
+           if t.kind == "denoise"][0].meta["tokens"]
+    full = cost.calibration[cost._key("dit-image", "denoise", tok, 4)]
+    hit = cost.calibration[cost._key("dit-image", "denoise", tok, 4,
+                                     cached=True)]
+    assert hit < full
+
+
+def test_residency_visible_in_scheduler_view():
+    cp = _cp(_FixedDegree(2), cache_interval=5)
+    req = _request(steps=4)
+    cp.submit(req, convert_request(req, CFG))
+    cp.schedule_point()
+    _pump(cp, 2)
+    view = cp._view()
+    assert view.cache_interval == 5
+    ent = view.cache_residency.get(req.id)
+    assert isinstance(ent, CacheEntry)
+    assert ent.layout.degree == 2

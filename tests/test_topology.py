@@ -2,6 +2,7 @@
 placement helpers, span-keyed cost model, topology-priced migration, the
 single-host back-compat shim (identical traces), and the multi-host
 simulator behavior of the elastic policy."""
+import pytest
 import numpy as np
 import threading
 
@@ -307,3 +308,83 @@ def test_hierarchical_axis1_kv_gather_matches_flat():
         assert a[r].shape == (2, 12, 5)
         assert np.array_equal(a[r], b[r])
     assert hier_comm.stats["hierarchical"] == 4
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous per-host-pair link speeds (ROADMAP PR 3 follow-up)
+# ---------------------------------------------------------------------------
+
+def test_inter_bw_map_default_is_byte_identical():
+    """Without overrides every consumer is unchanged: same per-pair
+    bandwidth, same cost factor, same migration pricing."""
+    topo3 = ClusterTopology(num_hosts=3, ranks_per_host=2)
+    assert topo3.inter_bw_of(0, 1) == topo3.inter_bw
+    assert topo3.inter_cost_factor == max(
+        topo3.intra_bw / topo3.inter_bw, 1.0)
+    fields = _latent_fields()
+    plan = plan_migration(fields, ExecutionLayout((0, 1)),
+                          ExecutionLayout((2, 3)))
+    empty = ClusterTopology(num_hosts=3, ranks_per_host=2,
+                            inter_bw_map={})
+    assert migration_cost(plan, topo3) == migration_cost(plan, empty)
+
+
+def test_inter_bw_map_overrides_per_pair():
+    topo3 = ClusterTopology(
+        num_hosts=3, ranks_per_host=2,
+        inter_bw_map={(1, 0): 25e9, (1, 2): 5e9})
+    # pair keys canonicalize (sorted), absent pairs use the default
+    assert topo3.inter_bw_of(0, 1) == 25e9
+    assert topo3.inter_bw_of(1, 0) == 25e9
+    assert topo3.inter_bw_of(1, 2) == 5e9
+    assert topo3.inter_bw_of(0, 2) == topo3.inter_bw
+    # the cost factor tracks the WORST link (a spanning layout must not
+    # be priced below its slowest edge)
+    assert topo3.inter_cost_factor == topo3.intra_bw / 5e9
+    # the topology stays hashable (frozen dataclass contract)
+    assert hash(topo3) == hash(topo3)
+
+
+def test_migration_cost_uses_per_pair_bandwidth():
+    """The same plan costs more over a slower host pair and less over a
+    faster one, and only the touched pair's override matters."""
+    fields = _latent_fields()
+    src = ExecutionLayout((0, 1))
+    plan = plan_migration(fields, src, ExecutionLayout((4, 5)))  # 0 -> 1
+    base = ClusterTopology(num_hosts=2, ranks_per_host=4)
+    fast = ClusterTopology(num_hosts=2, ranks_per_host=4,
+                           inter_bw_map={(0, 1): base.inter_bw * 4})
+    slow = ClusterTopology(num_hosts=2, ranks_per_host=4,
+                           inter_bw_map={(0, 1): base.inter_bw / 4})
+    t_base = migration_cost(plan, base)
+    assert migration_cost(plan, fast) < t_base < migration_cost(plan, slow)
+    # the bandwidth term scales exactly with the override
+    assert migration_cost(plan, slow) - slow.inter_lat == pytest.approx(
+        4 * (t_base - base.inter_lat))
+
+
+def test_sp_efficiency_consumes_hetero_factor():
+    """Cost estimates for spanning layouts pick up the worst-link factor
+    through CostModel._inter_factor -> sp_efficiency."""
+    cost_slow, cost_base = CostModel(), CostModel()
+    cost_base.topology = ClusterTopology(num_hosts=2, ranks_per_host=4)
+    cost_slow.topology = ClusterTopology(
+        num_hosts=2, ranks_per_host=4,
+        inter_bw_map={(0, 1): 1e9})     # 50x slower than intra
+    base = cost_base.estimate("dit-image", "denoise", 4096, 4, span=2)
+    slow = cost_slow.estimate("dit-image", "denoise", 4096, 4, span=2)
+    assert slow > base
+    # span-1 cells are untouched by link overrides
+    assert cost_slow.estimate("dit-image", "denoise", 4096, 4) == \
+        cost_base.estimate("dit-image", "denoise", 4096, 4)
+
+
+def test_inter_bw_map_canonicalizes_unordered_keys():
+    a = ClusterTopology(num_hosts=2, ranks_per_host=2,
+                        inter_bw_map={(0, 1): 25e9})
+    b = ClusterTopology(num_hosts=2, ranks_per_host=2,
+                        inter_bw_map={(1, 0): 25e9})
+    assert a == b and hash(a) == hash(b)
+    with pytest.raises(AssertionError):
+        ClusterTopology(num_hosts=2, ranks_per_host=2,
+                        inter_bw_map={(0, 1): 25e9, (1, 0): 5e9})
