@@ -1,4 +1,5 @@
-"""Deliverable (g): 3-term roofline per (arch x shape) from the dry-run.
+"""Deliverable (g): 3-term roofline per (arch x shape) from the dry-run,
+plus the Pallas fast-path kernel-traffic model (DESIGN.md §12).
 
   compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
   memory term     = HLO_bytes / (chips x HBM_bw)
@@ -14,6 +15,14 @@ MODEL_FLOPS = 6 N D (dense) or 6 N_active D (MoE) tokens-processed model
 flops; the ratio MODEL_FLOPS/HLO_FLOPs measures how much compiled compute
 is useful (remat/recompute waste shows up here; ~1/4 is expected for
 remat=full training: fwd 2ND + bwd 4ND + remat 2ND per token).
+
+The kernel-traffic section models per-denoise-step HBM bytes for the
+served DiT request classes under the fused Pallas fast path versus the
+unfused jnp reference, and ASSERTS fused < unfused for every shape —
+this is the CI gate for the fast path's raison d'etre (the flash kernel
+never writes the N^2 score matrix, the fused adaLN halves elementwise
+passes, and the §11 splice kernel never materializes the concatenated
+KV).  Results land in benchmarks/results/kernel_traffic.json.
 """
 from __future__ import annotations
 
@@ -77,12 +86,91 @@ def analyze(cells: list[dict]) -> list[dict]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Pallas fast-path kernel-traffic model (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+DTYPE_BYTES = 2              # bf16 serving activations
+
+#: served request classes (configs/dit_models.py docstring):
+#: Qwen-Image-style S/M/L squares; Wan-style S/M/L videos.
+REQUEST_CLASSES = [
+    ("dit-image", "img_S", 512, 512, 0),
+    ("dit-image", "img_M", 1024, 1024, 0),
+    ("dit-image", "img_L", 1536, 1536, 0),
+    ("dit-video", "vid_S", 480, 832, 49),
+    ("dit-video", "vid_M", 480, 832, 81),
+    ("dit-video", "vid_L", 720, 1280, 81),
+]
+
+
+def kernel_traffic_cell(cfg, label: str, h: int, w: int, f: int) -> dict:
+    """Modeled HBM bytes for ONE denoise step of one request, fused vs
+    unfused.  Counts whole-activation HBM passes (read or write of an
+    (N, D) activation = one pass); O(D) modulation vectors are ignored.
+
+      attention   unfused: QKVO + the score round trips — write S, read
+                  S, write P, read P = 4*H*N^2 elements on top of QKVO.
+                  fused (flash): QKVO only; softmax stats stay in VMEM.
+      adaLN       per block 2 modulated-norms (LN pass + modulate pass =
+                  4 unfused vs 2 fused) and 2 gated residuals (mul pass
+                  + add pass = 5 unfused vs 3 fused); final layer one
+                  modulated-norm.
+      §11 splice  unfused materializes splice(stale, fresh) for K and V
+                  (write + re-read by attention = 4*N*H*d extra
+                  elements); fused streams stale and patches fresh
+                  in-register.
+    """
+    from repro.models import dit
+
+    n = dit.token_count(cfg, h, w, f)
+    H, d, D, L, e = (cfg.num_heads, cfg.head_dim, cfg.d_model,
+                     cfg.num_layers, DTYPE_BYTES)
+    qkvo = 4 * n * H * d * e
+    score_rt = 4 * H * n * n * e
+    attn_unfused = L * (qkvo + score_rt)
+    attn_fused = L * qkvo
+    nde = n * D * e
+    adaln_unfused = L * (2 * 4 + 2 * 5) * nde + 4 * nde
+    adaln_fused = L * (2 * 2 + 2 * 3) * nde + 2 * nde
+    splice_extra = L * 4 * n * cfg.num_kv_heads * d * e
+    unfused = attn_unfused + adaln_unfused + splice_extra
+    fused = attn_fused + adaln_fused
+    return {
+        "model": cfg.name, "class": label, "tokens": n,
+        "attn_unfused_bytes": attn_unfused, "attn_fused_bytes": attn_fused,
+        "adaln_unfused_bytes": adaln_unfused,
+        "adaln_fused_bytes": adaln_fused,
+        "splice_saved_bytes": splice_extra,
+        "unfused_bytes": unfused, "fused_bytes": fused,
+        "traffic_ratio": unfused / fused,
+        "fused_hbm_s": fused / HBM_BW,
+        "unfused_hbm_s": unfused / HBM_BW,
+    }
+
+
+def kernel_traffic() -> list[dict]:
+    from repro.configs.dit_models import DIT_IMAGE, DIT_VIDEO
+
+    cfgs = {"dit-image": DIT_IMAGE, "dit-video": DIT_VIDEO}
+    table = [kernel_traffic_cell(cfgs[m], label, h, w, f)
+             for m, label, h, w, f in REQUEST_CLASSES]
+    for row in table:
+        # the CI gate: the fused path must win on modeled traffic for
+        # every served shape, strictly
+        assert row["fused_bytes"] < row["unfused_bytes"], row
+    return table
+
+
 def run() -> dict:
     cells = load_cells()
     table = analyze(cells)
+    ktable = kernel_traffic()
     RESULTS.mkdir(exist_ok=True)
     (RESULTS / "roofline.json").write_text(json.dumps(table, indent=1))
-    return {"table": table}
+    (RESULTS / "kernel_traffic.json").write_text(
+        json.dumps(ktable, indent=1))
+    return {"table": table, "kernel_traffic": ktable}
 
 
 def rows(data: dict):
@@ -95,6 +183,14 @@ def rows(data: dict):
             f"coll_s={row['collective_s']:.2e};"
             f"useful={row['useful_ratio']:.2f};"
             f"roofline_frac={row['roofline_fraction']:.2f}"))
+    for row in data["kernel_traffic"]:
+        out.append((
+            f"kernel_traffic.{row['model']}.{row['class']}",
+            row["fused_hbm_s"] * 1e6,
+            f"tokens={row['tokens']};"
+            f"fused_mb={row['fused_bytes'] / 2**20:.1f};"
+            f"unfused_mb={row['unfused_bytes'] / 2**20:.1f};"
+            f"ratio={row['traffic_ratio']:.2f}"))
     return out
 
 

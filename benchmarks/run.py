@@ -30,7 +30,7 @@ def main() -> None:
         ("stage_scaling(Fig3)", stage_scaling),
         ("migration_overhead(S5.3)", migration_overhead),
         ("overhead_fcfs_sp4(Fig8)", overhead_fcfs_sp4),
-        ("roofline(deliverable_g)", roofline),
+        ("roofline_kernels(deliverable_g)", roofline),
     ]
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default=None,

@@ -4,7 +4,7 @@ migration — on a reduced image DiT, producing decoded images.
 
     PYTHONPATH=src python examples/serve_image_dit.py
     PYTHONPATH=src python examples/serve_image_dit.py \
-        --cache-interval 3 --min-degree 2
+        --cache-interval 3 --min-degree 2 --use-pallas
 
 ``--cache-interval`` enables the cross-step feature cache (DESIGN.md
 §11): multi-rank denoise steps reuse the previous step's gathered remote
@@ -13,6 +13,9 @@ full refresh gathers (interval=1 refreshes every step — bit-exact).
 ``--min-degree`` floors the SP degree (emulating per-rank activation
 memory limits); at the default of 1 a lightly-loaded machine serves at
 SP1, where there is no collective for the cache to skip.
+``--use-pallas`` routes the model hot path through the fused Pallas
+kernel layer (DESIGN.md §12) — flash attention, fused adaLN, and (with
+caching on) the §11 cache-splice kernel; composes with both flags above.
 """
 import argparse
 
@@ -51,9 +54,14 @@ def main():
                     help="minimum SP degree (emulates per-rank memory "
                          "limits; degree >= 2 exercises the cached "
                          "KV-gather path)")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="serve through the fused Pallas kernel layer "
+                         "(DESIGN.md §12; interpret mode off-TPU)")
     args = ap.parse_args()
 
     cfg = DIT_IMAGE.reduced()
+    if args.use_pallas:
+        cfg = cfg.with_(use_pallas=True)
     engine = ServingEngine(cfg,
                            _policy(args.policy, 4, args.min_degree),
                            num_ranks=4,
@@ -71,7 +79,8 @@ def main():
 
     label = f"{args.policy} policy" + (
         f", cache_interval={args.cache_interval}"
-        if args.cache_interval else ", uncached")
+        if args.cache_interval else ", uncached") + (
+        ", pallas fast path" if args.use_pallas else "")
     print(f"serving {len(requests)} requests on 4 ranks ({label})...")
     metrics = engine.serve(requests, timeout=600)
     for k, v in metrics.items():

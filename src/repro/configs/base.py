@@ -118,6 +118,12 @@ class ModelConfig:
     # cost_analysis counts while-loop bodies once, so rooflines are derived
     # from small unrolled variants and extrapolated linearly in depth)
     scan_unroll: bool = False
+    # route the model hot path through the Pallas kernel layer
+    # (kernels/ops.py): fused adaLN-modulate, flash attention, and the
+    # §11 cache-splice kernel.  Numerics change within tolerance only —
+    # scheduling (control-plane traces) is bit-identical (DESIGN.md §12).
+    # Overridable at runtime via the REPRO_USE_PALLAS env var.
+    use_pallas: bool = False
 
     # ------------------------------------------------------------------
     def __post_init__(self):

@@ -34,6 +34,8 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Callable, Optional
 
+import numpy as np
+
 from repro.core.trajectory import ExecutionLayout, RequestGraph, TrajectoryTask
 
 #: artifact role owned by this subsystem (core/trajectory.py role set)
@@ -46,6 +48,17 @@ def cache_artifact(graph: RequestGraph):
         if a.role == CACHE_ROLE:
             return a
     return None
+
+
+def snapshot_kv(stores: list, layer: int) -> tuple[np.ndarray, np.ndarray]:
+    """Stack the per-member stale K/V snapshots for ``layer`` into fresh
+    (B, N_total, H, hd) arrays — the §11 hit path's batched view of the
+    storage layout this module owns.  ``np.stack`` copies, so executors
+    may splice rows in place (the jnp path) or hand the arrays to the
+    fused splice kernel untouched (the Pallas path, DESIGN.md §12)."""
+    K = np.stack([s[f"k{layer}"] for s in stores])
+    V = np.stack([s[f"v{layer}"] for s in stores])
+    return K, V
 
 
 @dataclass(frozen=True)

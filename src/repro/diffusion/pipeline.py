@@ -21,6 +21,8 @@ from repro.core.trajectory import (ExecutionLayout, RequestGraph,
                                    TrajectoryTask)
 from repro.diffusion import schedule
 from repro.diffusion.adapters import field_view
+from repro.diffusion.feature_cache import snapshot_kv
+from repro.kernels import ops
 from repro.models import dit, text_encoder, vae
 from repro.models.layers import split_params
 
@@ -119,10 +121,16 @@ class DiTPipeline:
                         store[f"k{layer}"] = K[j]
                         store[f"v{layer}"] = V[j]
                     return jnp.asarray(K), jnp.asarray(V)
+            elif ops.use_pallas_enabled(self.cfg.use_pallas):
+                # fast path: hand the stale snapshot + fresh shard to
+                # the fused splice kernel — no materialized concat
+                def kv_gather(k, v, layer):
+                    K, V = snapshot_kv(stores, layer)
+                    return ops.SplicedKV(jnp.asarray(K), jnp.asarray(V),
+                                         k, v, int(off))
             else:
                 def kv_gather(k, v, layer):
-                    K = np.stack([s[f"k{layer}"] for s in stores])
-                    V = np.stack([s[f"v{layer}"] for s in stores])
+                    K, V = snapshot_kv(stores, layer)
                     K[:, off:off + size] = np.asarray(k)
                     V[:, off:off + size] = np.asarray(v)
                     return jnp.asarray(K), jnp.asarray(V)
@@ -210,14 +218,24 @@ class DiTPipeline:
                 store[f"k{layer}"] = K[0]
                 store[f"v{layer}"] = V[0]
                 return jnp.asarray(K), jnp.asarray(V)
+        elif ops.use_pallas_enabled(self.cfg.use_pallas):
+            # cache hit on the Pallas fast path: the stale snapshot and
+            # the fresh local shard go to the fused splice kernel, which
+            # patches the K/V stream in-register (DESIGN.md §12) — no
+            # collective AND no materialized concat
+            store = graph.artifacts[stamp["art"]].data[rank]
+
+            def kv_gather(k, v, layer):
+                K, V = snapshot_kv([store], layer)
+                return ops.SplicedKV(jnp.asarray(K), jnp.asarray(V),
+                                     k, v, int(off))
         else:
             # cache hit: stale remote shards from the last refresh, with
             # THIS step's fresh local K/V spliced in — no collective
             store = graph.artifacts[stamp["art"]].data[rank]
 
             def kv_gather(k, v, layer):
-                K = store[f"k{layer}"][None].copy()
-                V = store[f"v{layer}"][None].copy()
+                K, V = snapshot_kv([store], layer)
                 K[:, off:off + size] = np.asarray(k)
                 V[:, off:off + size] = np.asarray(v)
                 return jnp.asarray(K), jnp.asarray(V)

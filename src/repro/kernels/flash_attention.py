@@ -4,10 +4,14 @@ Blockwise online-softmax attention with explicit BlockSpec VMEM tiling:
 the (block_q x d) query tile stays resident while (block_k x d) key/value
 tiles stream through VMEM; running max/denominator keep the softmax
 numerically exact.  MXU alignment: block sizes are multiples of 128 on the
-token dims and head_dim is padded to 128 lanes by the caller if needed.
+token dims and head_dim is padded to 128 lanes by the caller if needed
+(``sm_scale`` then carries the UNPADDED head dim's softmax scale).
 
 Supports causal masking (block-skipping: fully-masked k-blocks are not
-visited) and GQA (q-head group -> kv-head mapping via the grid).
+visited), GQA (q-head group -> kv-head mapping via the grid), and a
+static ``kv_valid`` key-validity bound so callers can zero-pad the key
+axis to the block size without the pad keys leaking probability mass
+(k-blocks past ``kv_valid`` are never visited at all).
 
 TARGET: TPU (pl.pallas_call + BlockSpec).  VALIDATED on CPU with
 ``interpret=True`` against ``ref.py``'s pure-jnp oracle.
@@ -25,7 +29,7 @@ NEG_INF = -1e30
 
 
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
-                 sm_scale: float, seq_k: int):
+                 sm_scale: float, seq_k: int, kv_valid: int):
     """One (batch*head, q-block) program: stream k/v blocks, online softmax.
 
     q_ref: (block_q, d) VMEM tile      k_ref/v_ref: (seq_k, d) full rows
@@ -39,23 +43,22 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
     l = jnp.zeros((block_q,), jnp.float32)              # running denom
     acc = jnp.zeros((block_q, d), jnp.float32)
 
-    num_k_blocks = seq_k // block_k
-    if causal:
-        # skip k-blocks strictly above the diagonal of this q-block
-        last = (q_idx + 1) * block_q                     # static per trace?
-        # q_idx is dynamic: bound loop by full range, mask inside
-        pass
+    # only k-blocks intersecting the valid key range are visited; the
+    # trailing partial block is mask-corrected below
+    num_k_blocks = -(-kv_valid // block_k)
 
     def body(kb, carry):
         m, l, acc = carry
         k = k_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
         v = v_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
         s = q @ k.T                                      # (bq, bk) MXU
+        kpos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
         if causal:
             qpos = q_idx * block_q + jax.lax.iota(jnp.int32, block_q)
-            kpos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
             mask = kpos[None, :] <= qpos[:, None]
             s = jnp.where(mask, s, NEG_INF)
+        if kv_valid % block_k:
+            s = jnp.where((kpos < kv_valid)[None, :], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=1))
         p = jnp.exp(s - m_new[:, None])
         alpha = jnp.exp(m - m_new)
@@ -74,20 +77,28 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "sm_scale",
+                              "kv_valid", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = False, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True):
+                    block_k: int = 128, sm_scale: float | None = None,
+                    kv_valid: int | None = None, interpret: bool = True):
     """q: (B, Sq, H, d); k/v: (B, Sk, KV, d) with H % KV == 0.
 
     Returns (B, Sq, H, d).  Sq/Sk must be multiples of the block sizes
-    (callers pad); d should be MXU-aligned (128) for peak throughput.
+    (kernels/ops.py pads, passing ``kv_valid`` = the true key count so
+    pad keys are masked out); d should be MXU-aligned (128) for peak
+    throughput — zero-pad d and pass ``sm_scale`` for the original dim.
     """
     b, sq, h, d = q.shape
     _, sk, kv, _ = k.shape
     assert h % kv == 0, (h, kv)
     group = h // kv
     assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
-    sm_scale = 1.0 / math.sqrt(d)
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    if kv_valid is None:
+        kv_valid = sk
+    assert 0 < kv_valid <= sk, (kv_valid, sk)
 
     # layout: fold batch*head into the grid's first axis; map each q-head
     # to its kv head (GQA)
@@ -99,7 +110,7 @@ def flash_attention(q, k, v, *, causal: bool = False, block_q: int = 128,
 
     out = pl.pallas_call(
         functools.partial(_attn_kernel, block_k=block_k, causal=causal,
-                          sm_scale=sm_scale, seq_k=sk),
+                          sm_scale=sm_scale, seq_k=sk, kv_valid=kv_valid),
         grid=grid,
         in_specs=[
             pl.BlockSpec((None, block_q, d), lambda bh, qb: (bh, qb, 0)),

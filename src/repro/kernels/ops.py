@@ -2,9 +2,25 @@
 
 ``use_pallas`` selects between the kernel (TPU target; interpret-mode on
 CPU) and the jnp reference path — model code calls these so the kernel is
-a drop-in layer, not a fork of the model.
+a drop-in layer, not a fork of the model.  Wrappers pad non-block-aligned
+sequence lengths AND head dims internally (mask-correct via the kernels'
+``kv_valid`` bound + an unpadded ``sm_scale``; outputs are sliced back),
+so callers never pre-pad.
+
+Environment overrides (CI / operator knobs, DESIGN.md §12):
+
+* ``REPRO_USE_PALLAS=1|0`` — force the kernel path on/off regardless of
+  what the caller (usually ``ModelConfig.use_pallas``) requested.
+* ``REPRO_PALLAS_INTERPRET=1|0`` — force Pallas interpret mode on/off;
+  default is interpret off-TPU, compiled on-TPU.  CI sets ``1`` so the
+  kernel leg is deterministic on CPU runners.
 """
 from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -12,58 +28,130 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.adaln import adaln_modulate
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.splice import splice_attention as _splice_kernel
 from repro.kernels.ssd import ssd_scan
+
+_TRUTHY = ("1", "true", "yes", "on")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def use_pallas_enabled(flag: bool) -> bool:
+    """Apply the ``REPRO_USE_PALLAS`` env override to a config flag."""
+    v = os.environ.get("REPRO_USE_PALLAS")
+    if v is None:
+        return bool(flag)
+    return v.strip().lower() in _TRUTHY
+
+
+def _interpret() -> bool:
+    """Interpret-mode selection (``REPRO_PALLAS_INTERPRET`` override)."""
+    v = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if v is None:
+        return not _on_tpu()
+    return v.strip().lower() in _TRUTHY
+
+
+@dataclasses.dataclass
+class SplicedKV:
+    """A §11 hit-path KV stream: the stale snapshot plus this step's
+    fresh local shard at ``offset`` — handed to :func:`splice_attention`
+    so the spliced tensor is never materialized (DESIGN.md §12)."""
+    k_stale: Any                  # (B, N_total, KV, d)
+    v_stale: Any
+    k_fresh: Any                  # (B, N_local, KV, d)
+    v_fresh: Any
+    offset: int
+
+
+def _pad_qkv(q, k, v):
+    """Zero-pad (q, k, v) to 128-aligned seq and head dims.
+
+    Returns the padded tensors plus (sq, sk, d) true extents; scores are
+    unchanged by zero-padding the contraction dim, pad keys are masked
+    via ``kv_valid``, and pad queries/lanes are sliced off the output.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    pq, pk, pd = (-sq) % 128, (-sk) % 128, (-d) % 128
+    if pq or pd:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, pd)))
+    if pk or pd:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, pd)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, pd)))
+    return q, k, v, sq, sk, d
+
+
 def attention(q, k, v, *, causal: bool = False,
               use_pallas: bool = False):
     """Dispatch: Pallas flash attention when requested/available, else ref.
 
-    Pads sequence dims to the 128 block size when needed.
+    Handles DiT-realistic shapes directly: non-multiple-of-128 sequence
+    lengths and head dims are padded internally (mask-correct — pad keys
+    never receive probability mass) and the output is returned unpadded.
     """
-    if not use_pallas:
+    if not use_pallas_enabled(use_pallas):
         return ref.attention_ref(q, k, v, causal=causal)
-    b, sq, h, d = q.shape
-    sk = k.shape[1]
-    pq, pk = (-sq) % 128, (-sk) % 128
-    if pq or pk:
-        qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
-        kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
-        vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
-        # padded keys must not contribute: rely on causal mask when causal;
-        # otherwise mask by writing -inf via a k-validity trick (pad keys
-        # are zeros -> exp(scores) contributes; so fall back to ref when
-        # non-causal and padded).
-        if not causal and pk:
-            return ref.attention_ref(q, k, v, causal=causal)
-        out = flash_attention(qp, kp, vp, causal=causal,
-                              interpret=not _on_tpu())
-        return out[:, :sq]
-    return flash_attention(q, k, v, causal=causal, interpret=not _on_tpu())
+    if causal:
+        assert q.shape[1] == k.shape[1], \
+            "causal kernel path requires aligned q/k lengths"
+    qp, kp, vp, sq, sk, d = _pad_qkv(q, k, v)
+    out = flash_attention(qp, kp, vp, causal=causal,
+                          sm_scale=1.0 / math.sqrt(d), kv_valid=sk,
+                          interpret=_interpret())
+    return out[:, :sq, :, :d]
 
 
-def fused_adaln(x, shift, scale, gate, residual, *,
-                use_pallas: bool = False):
-    if not use_pallas:
-        return ref.adaln_ref(x, shift, scale, gate, residual)
+def splice_attention(q, k_stale, v_stale, k_fresh, v_fresh, *, offset: int,
+                     use_pallas: bool = False):
+    """§11 hit-path attention over splice(stale, fresh @ offset).
+
+    The Pallas path streams the stale snapshot and patches the fresh
+    shard in-register (kernels/splice.py) — the concatenated KV never
+    hits HBM; the ref path materializes it (the jnp oracle).
+    """
+    if not use_pallas_enabled(use_pallas):
+        return ref.splice_attention_ref(q, k_stale, v_stale,
+                                        k_fresh, v_fresh, offset=offset)
+    qp, kp, vp, sq, sk, d = _pad_qkv(q, k_stale, v_stale)
+    pd = (-d) % 128
+    if pd:
+        k_fresh = jnp.pad(k_fresh, ((0, 0), (0, 0), (0, 0), (0, pd)))
+        v_fresh = jnp.pad(v_fresh, ((0, 0), (0, 0), (0, 0), (0, pd)))
+    out = _splice_kernel(qp, kp, vp, k_fresh, v_fresh, offset=int(offset),
+                         sm_scale=1.0 / math.sqrt(d), kv_valid=sk,
+                         interpret=_interpret())
+    return out[:, :sq, :, :d]
+
+
+def fused_adaln(x, shift=None, scale=None, gate=None, residual=None, *,
+                ln: bool = True, use_pallas: bool = False):
+    """Fused (LN +) modulate (+ gated residual); kernels/adaln.py.
+
+    Variants (all one HBM pass on the Pallas path):
+      shift/scale only          -> LN(x)*(1+scale)+shift
+      gate/residual, ln=False   -> residual + gate*x
+      everything                -> residual + gate*(LN(x)*(1+scale)+shift)
+    """
+    if not use_pallas_enabled(use_pallas):
+        return ref.adaln_ref(x, shift, scale, gate, residual, ln=ln)
     b, n, d = x.shape
     pad = (-n) % 128
     if pad:
-        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
-        rp = jnp.pad(residual, ((0, 0), (0, pad), (0, 0)))
-        out = adaln_modulate(xp, shift, scale, gate, rp,
-                             interpret=not _on_tpu())
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        if residual is not None:
+            residual = jnp.pad(residual, ((0, 0), (0, pad), (0, 0)))
+        out = adaln_modulate(x, shift, scale, gate, residual, ln=ln,
+                             interpret=_interpret())
         return out[:, :n]
-    return adaln_modulate(x, shift, scale, gate, residual,
-                          interpret=not _on_tpu())
+    return adaln_modulate(x, shift, scale, gate, residual, ln=ln,
+                          interpret=_interpret())
 
 
 def ssd(x, dt, A, B, C, *, chunk: int = 128, use_pallas: bool = False):
-    if not use_pallas:
+    if not use_pallas_enabled(use_pallas):
         return ref.ssd_ref(x, dt, A, B, C)
     l = x.shape[1]
     pad = (-l) % chunk
@@ -73,6 +161,6 @@ def ssd(x, dt, A, B, C, *, chunk: int = 128, use_pallas: bool = False):
         B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
         C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
         y, state = ssd_scan(x, dt, A, B, C, chunk=chunk,
-                            interpret=not _on_tpu())
+                            interpret=_interpret())
         return y[:, :l], state
-    return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=not _on_tpu())
+    return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=_interpret())

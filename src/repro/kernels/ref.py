@@ -23,21 +23,39 @@ def attention_ref(q, k, v, *, causal: bool = False):
     return out.astype(q.dtype)
 
 
-def adaln_ref(x, shift, scale, gate, residual, *, eps: float = 1e-6):
-    """Fused adaLN-Zero modulate: LN(x)*(1+scale)+shift, gated residual add.
+def adaln_ref(x, shift=None, scale=None, gate=None, residual=None, *,
+              ln: bool = True, eps: float = 1e-6):
+    """adaLN-Zero modulate oracle, matching kernels/adaln.py's variants.
 
     x/residual: (B, N, D); shift/scale/gate: (B, D).
-    Returns residual + gate * (LN(x) * (1 + scale) + shift).
+    Full form returns residual + gate * (LN(x) * (1 + scale) + shift);
+    omit gate/residual for the pre-branch modulated norm, omit
+    shift/scale with ``ln=False`` for the bare gated residual.
     """
-    xf = x.astype(jnp.float32)
-    mu = xf.mean(-1, keepdims=True)
-    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
-    ln = (xf - mu) * jax.lax.rsqrt(var + eps)
-    mod = ln * (1.0 + scale.astype(jnp.float32)[:, None]) \
-        + shift.astype(jnp.float32)[:, None]
-    out = residual.astype(jnp.float32) \
-        + gate.astype(jnp.float32)[:, None] * mod
+    out = x.astype(jnp.float32)
+    if ln:
+        mu = out.mean(-1, keepdims=True)
+        var = ((out - mu) ** 2).mean(-1, keepdims=True)
+        out = (out - mu) * jax.lax.rsqrt(var + eps)
+    if shift is not None:
+        out = out * (1.0 + scale.astype(jnp.float32)[:, None]) \
+            + shift.astype(jnp.float32)[:, None]
+    if gate is not None:
+        out = residual.astype(jnp.float32) \
+            + gate.astype(jnp.float32)[:, None] * out
     return out.astype(x.dtype)
+
+
+def splice_attention_ref(q, k_stale, v_stale, k_fresh, v_fresh, *,
+                         offset: int, causal: bool = False):
+    """Materialize-then-attend oracle for the §11 cache-splice kernel:
+    overwrite rows [offset, offset+L) of the stale snapshot with the
+    fresh local shard, then run plain attention."""
+    k = jax.lax.dynamic_update_slice_in_dim(
+        k_stale, k_fresh.astype(k_stale.dtype), offset, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        v_stale, v_fresh.astype(v_stale.dtype), offset, axis=1)
+    return attention_ref(q, k, v, causal=causal)
 
 
 def ssd_ref(x, dt, A, B, C, *, chunk: int = 0):

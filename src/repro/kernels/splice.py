@@ -1,0 +1,125 @@
+"""Fused §11 cache-splice flash attention Pallas TPU kernel.
+
+The cross-step feature cache's hit path (DESIGN.md §11) attends local
+queries against a KV stream that is *almost* the stale snapshot from the
+last refresh step: the rows at ``[offset, offset + local_len)`` — this
+rank's token shard — must come from the FRESH K/V computed this step.
+The jnp path materializes the spliced (B, N_total, H, d) tensors in HBM
+(write + re-read) before attention; at ``cache_interval > 1`` the hit
+path is the common case, so that concat round-trip is hot.
+
+This kernel fuses the splice into the attention K/V stream: the stale
+snapshot stays in HBM and streams through VMEM blockwise exactly like
+flash attention's K/V, the small fresh shard sits VMEM-resident, and
+each k-block is patched in-register (positional row select) before the
+online-softmax update.  The spliced tensor never exists in memory.
+
+TARGET: TPU.  VALIDATED on CPU with ``interpret=True`` against
+``ref.splice_attention_ref`` (materialize-then-attend oracle).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _splice_kernel(q_ref, ks_ref, vs_ref, kf_ref, vf_ref, o_ref, *,
+                   block_k: int, sm_scale: float, kv_valid: int,
+                   offset: int, local_len: int):
+    """One (batch*head, q-block) program.
+
+    q_ref: (block_q, d) tile      ks_ref/vs_ref: (seq_k, d) stale rows
+    kf_ref/vf_ref: (local_len, d) fresh local shard (VMEM-resident)
+    """
+    block_q, d = q_ref.shape
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    kf = kf_ref[...].astype(jnp.float32)            # stays in VMEM
+    vf = vf_ref[...].astype(jnp.float32)
+
+    m = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q,), jnp.float32)
+    acc = jnp.zeros((block_q, d), jnp.float32)
+    num_k_blocks = -(-kv_valid // block_k)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = ks_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        v = vs_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        kpos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        # in-register splice: rows inside the local shard's window take
+        # the fresh values (gathered from the VMEM-resident shard)
+        in_fresh = (kpos >= offset) & (kpos < offset + local_len)
+        lidx = jnp.clip(kpos - offset, 0, local_len - 1)
+        k = jnp.where(in_fresh[:, None], jnp.take(kf, lidx, axis=0), k)
+        v = jnp.where(in_fresh[:, None], jnp.take(vf, lidx, axis=0), v)
+        s = q @ k.T
+        if kv_valid % block_k:
+            s = jnp.where((kpos < kv_valid)[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_k_blocks, body, (m, l, acc))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("offset", "block_q", "block_k", "sm_scale",
+                              "kv_valid", "interpret"))
+def splice_attention(q, k_stale, v_stale, k_fresh, v_fresh, *, offset: int,
+                     block_q: int = 128, block_k: int = 128,
+                     sm_scale: float | None = None,
+                     kv_valid: int | None = None, interpret: bool = True):
+    """Attention over splice(stale, fresh @ offset), never materialized.
+
+    q: (B, Sq, H, d); k_stale/v_stale: (B, Sk, KV, d);
+    k_fresh/v_fresh: (B, L, KV, d) with offset + L <= kv_valid <= Sk.
+    Non-causal (the DiT denoise path).  Sq/Sk must be multiples of the
+    block sizes (kernels/ops.py pads and passes ``kv_valid``).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k_stale.shape
+    local_len = k_fresh.shape[1]
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    if kv_valid is None:
+        kv_valid = sk
+    assert 0 <= offset and offset + local_len <= kv_valid <= sk, \
+        (offset, local_len, kv_valid, sk)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    ksf = k_stale.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    vsf = v_stale.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    kff = k_fresh.transpose(0, 2, 1, 3).reshape(b * kv, local_len, d)
+    vff = v_fresh.transpose(0, 2, 1, 3).reshape(b * kv, local_len, d)
+
+    grid = (b * h, sq // block_q)
+    stale_spec = pl.BlockSpec((None, sk, d), lambda bh, qb: (bh // group, 0, 0))
+    fresh_spec = pl.BlockSpec((None, local_len, d),
+                              lambda bh, qb: (bh // group, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_splice_kernel, block_k=block_k,
+                          sm_scale=sm_scale, kv_valid=kv_valid,
+                          offset=offset, local_len=local_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda bh, qb: (bh, qb, 0)),
+            stale_spec, stale_spec, fresh_spec, fresh_spec,
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda bh, qb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        interpret=interpret,
+    )(qf, ksf, vsf, kff, vff)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models import layers as L
 from repro.models.layers import ParamSpec, pspec, pzeros, pones
 from repro.sharding.ctx import constrain
@@ -54,6 +55,23 @@ def modulate(x, shift, scale):
     return x * (1.0 + scale[:, None]) + shift[:, None]
 
 
+def _mod_norm(x, shift=None, scale=None, *, up: bool = False):
+    """LN (+ shift/scale modulate) — ONE fused HBM pass on the Pallas
+    fast path (DESIGN.md §12), the historic jnp sequence otherwise."""
+    if up:
+        return ops.fused_adaln(x, shift, scale, use_pallas=True)
+    h = _ln(x)
+    return modulate(h, shift, scale) if shift is not None else h
+
+
+def _gated_residual(residual, gate, branch, *, up: bool = False):
+    """residual + gate[:, None] * branch, fused on the Pallas path."""
+    if up:
+        return ops.fused_adaln(branch, gate=gate, residual=residual,
+                               ln=False, use_pallas=True)
+    return residual + gate[:, None] * branch
+
+
 # ---------------------------------------------------------------------------
 # DiT block
 # ---------------------------------------------------------------------------
@@ -73,25 +91,24 @@ def dit_block_init(key, cfg: ModelConfig):
 
 def dit_block_apply(p, x, c, txt, cfg: ModelConfig, *, sp_axis=None):
     """x: (B, N, D) latent tokens; c: (B, D) adaLN cond; txt: (B, Lt, D)."""
+    up = ops.use_pallas_enabled(cfg.use_pallas)
     mods = jnp.einsum("bd,dk->bk", jax.nn.silu(c),
                       p["ada_w"].astype(x.dtype)) + p["ada_b"].astype(x.dtype)
     sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mods, 6, axis=-1)
 
-    h = _ln(x)
-    h = modulate(h, sh_a, sc_a)
+    h = _mod_norm(x, sh_a, sc_a, up=up)
     attn, _ = L.attention_apply(p["attn"], h, cfg, causal=False,
                                 use_rope=False)
-    x = x + g_a[:, None] * attn
+    x = _gated_residual(x, g_a, attn, up=up)
 
     # cross-attention to text conditioning (not modulated, PixArt-style)
-    h = _ln(x)
+    h = _mod_norm(x, up=up)
     ca, _ = L.attention_apply(p["cross"], h, cfg, causal=False, kv_x=txt,
                               use_rope=False)
     x = x + ca
 
-    h = _ln(x)
-    h = modulate(h, sh_m, sc_m)
-    x = x + g_m[:, None] * L.swiglu_apply(p["mlp"], h)
+    h = _mod_norm(x, sh_m, sc_m, up=up)
+    x = _gated_residual(x, g_m, L.swiglu_apply(p["mlp"], h), up=up)
     return x
 
 
@@ -176,7 +193,7 @@ def forward(params, latents, t, txt_embeds, cfg: ModelConfig, *,
                       params["final_ada_w"].astype(dtype)) \
         + params["final_ada_b"].astype(dtype)
     sh, sc = jnp.split(mods, 2, axis=-1)
-    x = modulate(_ln(x), sh, sc)
+    x = _mod_norm(x, sh, sc, up=ops.use_pallas_enabled(cfg.use_pallas))
     x = jnp.einsum("bnd,dp->bnp", x, params["final_out"].astype(dtype))
     return unpatchify(x.astype(jnp.float32), shape, dc.patch_size)
 
@@ -215,11 +232,15 @@ def forward_sp_tokens(params, tok_shard, t, txt_embeds, cfg: ModelConfig, *,
     layout.  The layer index keys the cross-step feature cache
     (DESIGN.md §11): a cache-hit gather returns the stale remote shards
     of THIS layer from the previous refresh step with the fresh local
-    shard spliced in, skipping the collective entirely.
+    shard spliced in, skipping the collective entirely.  On the Pallas
+    fast path the hit gather instead returns a :class:`ops.SplicedKV`
+    and the splice happens inside the attention kernel's K/V stream —
+    the concatenated tensors never materialize (DESIGN.md §12).
 
     Returns the velocity prediction for the local token shard
     (1, N_local, patch_dim).
     """
+    up = ops.use_pallas_enabled(cfg.use_pallas)
     x = jnp.einsum("bnp,pd->bnd", tok_shard.astype(dtype),
                    params["x_embed"].astype(dtype))
     pe = pos_embedding(n_total, cfg.d_model).astype(dtype)
@@ -239,27 +260,35 @@ def forward_sp_tokens(params, tok_shard, t, txt_embeds, cfg: ModelConfig, *,
                           p["ada_w"].astype(dtype)) + p["ada_b"].astype(dtype)
         sh_a, sc_a, g_a, sh_m, sc_m, g_m = jnp.split(mods, 6, axis=-1)
 
-        h = modulate(_ln(x), sh_a, sc_a)
+        h = _mod_norm(x, sh_a, sc_a, up=up)
         ap = p["attn"]
         q = jnp.einsum("bsd,dhk->bshk", h, ap["wq"].astype(dtype))
         k = jnp.einsum("bsd,dhk->bshk", h, ap["wk"].astype(dtype))
         v = jnp.einsum("bsd,dhk->bshk", h, ap["wv"].astype(dtype))
-        K, V = kv_gather(k, v, i)                   # GFC all-gather (axis=1)
-        attn = L.sdpa(q, K, V, causal=False)
+        kv = kv_gather(k, v, i)                     # GFC all-gather (axis=1)
+        if isinstance(kv, ops.SplicedKV):           # §11 hit, fused splice
+            attn = ops.splice_attention(q, kv.k_stale, kv.v_stale,
+                                        kv.k_fresh, kv.v_fresh,
+                                        offset=kv.offset, use_pallas=True)
+        elif up:                                    # sharded-Q / full-KV
+            attn = ops.attention(q, *kv, causal=False, use_pallas=True)
+        else:
+            K, V = kv
+            attn = L.sdpa(q, K, V, causal=False)
         attn = jnp.einsum("bshk,hkd->bsd", attn, ap["wo"].astype(dtype))
-        x = x + g_a[:, None] * attn
+        x = _gated_residual(x, g_a, attn, up=up)
 
-        h = _ln(x)
+        h = _mod_norm(x, up=up)
         ca, _ = L.attention_apply(p["cross"], h, cfg, causal=False,
                                   kv_x=txt, use_rope=False)
         x = x + ca
 
-        h = modulate(_ln(x), sh_m, sc_m)
-        x = x + g_m[:, None] * L.swiglu_apply(p["mlp"], h)
+        h = _mod_norm(x, sh_m, sc_m, up=up)
+        x = _gated_residual(x, g_m, L.swiglu_apply(p["mlp"], h), up=up)
 
     mods = jnp.einsum("bd,dk->bk", jax.nn.silu(c),
                       params["final_ada_w"].astype(dtype)) \
         + params["final_ada_b"].astype(dtype)
     sh, sc = jnp.split(mods, 2, axis=-1)
-    x = modulate(_ln(x), sh, sc)
+    x = _mod_norm(x, sh, sc, up=up)
     return jnp.einsum("bnd,dp->bnp", x, params["final_out"].astype(dtype))

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 
 # ---------------------------------------------------------------------------
 # Param creation with logical axes
@@ -167,6 +168,17 @@ def sdpa(q, k, v, *, causal: bool, window: int = 0,
     return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
 
 
+def _full_attention(q, k, v, *, causal: bool, cfg: ModelConfig):
+    """Full (uncached, unwindowed) attention: the Pallas flash kernel
+    when the config opts in (DESIGN.md §12), else the jnp sdpa path.
+    Kernel dispatch (kernels/ops.py) pads odd lengths/head dims
+    internally, so cross-attention's Lt=77 and DiT token counts route
+    through the kernel unchanged."""
+    if ops.use_pallas_enabled(cfg.use_pallas):
+        return ops.attention(q, k, v, causal=causal, use_pallas=True)
+    return sdpa(q, k, v, causal=causal)
+
+
 def _sp_decode_ok(cache) -> bool:
     from repro.sharding.ctx import current_mesh
     mesh = current_mesh()
@@ -210,14 +222,17 @@ def attention_apply(p, x, cfg: ModelConfig, *, causal=True, window=0,
         else:
             k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(x.dtype))
             v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(x.dtype))
-        out = sdpa(q, k, v, causal=False)
+        out = _full_attention(q, k, v, causal=False, cfg=cfg)
         new_cache = {"k": k, "v": v}
     elif cache is None:                               # full self-attn
         k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
         v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
         if use_rope:
             k = apply_rope(k, positions, cfg.rope_theta)
-        out = sdpa(q, k, v, causal=causal, window=window)
+        if window:                    # SWA keeps the masked jnp path
+            out = sdpa(q, k, v, causal=causal, window=window)
+        else:
+            out = _full_attention(q, k, v, causal=causal, cfg=cfg)
         new_cache = None
     else:                                             # cached decode/prefill
         k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))

@@ -26,7 +26,10 @@ The wall leg additionally validates the cache's numerics:
   error budget of the exact output (§11 accuracy contract);
 * a no-Reallocate control run at the same interval produces pixels
   **bit-identical** to the reallocated run — the only way that holds is
-  if migration moved the warm snapshot bit-identically.
+  if migration moved the warm snapshot bit-identically;
+* a ``use_pallas=True`` leg (the fused fast path, DESIGN.md §12) yields
+  a **bit-identical** trace signature — kernels change numerics within
+  tolerance, never the schedule — and pixels inside the kernel budget.
 
 Used by tests/test_cache_backends.py, benchmarks/sim_fidelity.py, and
 benchmarks/policies_e2e.py (--only cache error leg).
@@ -164,8 +167,16 @@ def run_demo(cfg=None) -> dict:
     exact = run_wall(cfg, reqs, cache_interval=None)
     exact1 = run_wall(cfg, reqs, cache_interval=1)
     stay = run_wall(cfg, reqs, cache_interval=CACHE_INTERVAL, shift=False)
+    # Pallas fast-path leg (DESIGN.md §12): same scenario with the fused
+    # kernels on — the control plane must make the identical decisions
+    # (bit-identical trace signature; scheduling never reads activations)
+    # and the decoded pixels must track the jnp cached leg within the
+    # kernel tolerance budget.
+    pallas = run_wall(cfg.with_(use_pallas=True), reqs,
+                      cache_interval=CACHE_INTERVAL)
     rid = reqs[0].id
     px, px_exact = wall["pixels"][rid], exact["pixels"][rid]
+    px_pallas = pallas["pixels"][rid]
     return {
         "wall": wall,
         "sim": sim,
@@ -186,6 +197,13 @@ def run_demo(cfg=None) -> dict:
             px is not None and stay["pixels"][rid] is not None
             and np.array_equal(px, stay["pixels"][rid])),
         "sim_migrated_bytes": sim["migrated_bytes"],
+        # fast-path contract (§12): fused kernels change numerics within
+        # tolerance only — never the schedule
+        "pallas_trace_match": wall["signature"] == pallas["signature"],
+        "pallas_modes": pallas["modes"],
+        "pallas_rel_l2": (rel_l2(px_pallas, px)
+                          if px is not None and px_pallas is not None
+                          else float("inf")),
     }
 
 

@@ -49,3 +49,17 @@ def test_warm_cache_migrates_bit_identically(demo):
 def test_both_backends_complete(demo):
     assert demo["wall"]["metrics"]["completed"] == 1
     assert demo["sim"]["metrics"]["completed"] == 1
+
+
+def test_pallas_trace_signature_identical(demo):
+    # the fused fast path (DESIGN.md §12) may change numerics within
+    # tolerance but NEVER the schedule: the control-plane trace of the
+    # use_pallas leg is bit-identical to the jnp cached leg's
+    assert demo["pallas_trace_match"]
+    assert demo["pallas_modes"] == demo["modes"]
+
+
+def test_pallas_pixels_within_budget(demo):
+    # measured ~5e-7 on CPU interpret mode; gate at 1e-4 (~200x) to
+    # absorb compiled-TPU accumulation-order differences (§12 budget)
+    assert demo["pallas_rel_l2"] <= 1e-4, demo["pallas_rel_l2"]

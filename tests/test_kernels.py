@@ -85,6 +85,118 @@ def test_ops_dispatch_pads_odd_shapes():
                                atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize("b,sq,sk,h,kv,d", [
+    (1, 100, 100, 2, 2, 64),        # odd seq, even head dim
+    (1, 64, 200, 6, 2, 48),         # GQA 3:1, odd everything
+    (2, 37, 91, 4, 4, 32),          # small odd shapes, short head dim
+    (1, 130, 130, 2, 1, 96),        # just past one block, MQA
+])
+def test_ops_attention_internal_padding(b, sq, sk, h, kv, d):
+    """Non-multiple-of-128 seq lengths AND head dims are padded inside
+    ops.attention (mask-correct: pad keys get no probability mass)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d))
+    k = jax.random.normal(ks[1], (b, sk, kv, d))
+    v = jax.random.normal(ks[2], (b, sk, kv, d))
+    out = ops.attention(q, k, v, causal=False, use_pallas=True)
+    want = ref.attention_ref(q, k, v, causal=False)
+    assert out.shape == want.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("offset,local", [(0, 32), (32, 32), (68, 60),
+                                          (96, 32)])
+@pytest.mark.parametrize("n_total", [128, 200])
+def test_splice_attention_vs_oracle(offset, local, n_total):
+    """§11 fused cache-splice vs materialize-then-attend oracle."""
+    if offset + local > n_total:
+        pytest.skip("fresh shard must fit inside the snapshot")
+    ks = jax.random.split(KEY, 5)
+    b, h, d = 2, 4, 64
+    q = jax.random.normal(ks[0], (b, n_total, h, d))
+    k_st = jax.random.normal(ks[1], (b, n_total, h, d))
+    v_st = jax.random.normal(ks[2], (b, n_total, h, d))
+    k_fr = jax.random.normal(ks[3], (b, local, h, d))
+    v_fr = jax.random.normal(ks[4], (b, local, h, d))
+    out = ops.splice_attention(q, k_st, v_st, k_fr, v_fr, offset=offset,
+                               use_pallas=True)
+    want = ref.splice_attention_ref(q, k_st, v_st, k_fr, v_fr,
+                                    offset=offset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_splice_attention_gqa_odd_head_dim():
+    ks = jax.random.split(KEY, 5)
+    b, n, h, kv, d, local, off = 1, 150, 6, 2, 48, 50, 75
+    q = jax.random.normal(ks[0], (b, n, h, d))
+    k_st = jax.random.normal(ks[1], (b, n, kv, d))
+    v_st = jax.random.normal(ks[2], (b, n, kv, d))
+    k_fr = jax.random.normal(ks[3], (b, local, kv, d))
+    v_fr = jax.random.normal(ks[4], (b, local, kv, d))
+    out = ops.splice_attention(q, k_st, v_st, k_fr, v_fr, offset=off,
+                               use_pallas=True)
+    want = ref.splice_attention_ref(q, k_st, v_st, k_fr, v_fr, offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("variant", ["mod_norm", "gated", "full"])
+@pytest.mark.parametrize("n", [128, 100])
+def test_fused_adaln_variants(variant, n):
+    """All three statically-selected fusion variants vs the oracle,
+    at block-aligned and internally-padded lengths."""
+    ks = jax.random.split(KEY, 5)
+    b, d = 2, 64
+    x = jax.random.normal(ks[0], (b, n, d))
+    sh = jax.random.normal(ks[1], (b, d)) * 0.2
+    sc = jax.random.normal(ks[2], (b, d)) * 0.2
+    g = jax.random.normal(ks[3], (b, d)) * 0.2
+    res = jax.random.normal(ks[4], (b, n, d))
+    if variant == "mod_norm":
+        out = ops.fused_adaln(x, sh, sc, use_pallas=True)
+        want = ref.adaln_ref(x, sh, sc)
+    elif variant == "gated":
+        out = ops.fused_adaln(x, gate=g, residual=res, ln=False,
+                              use_pallas=True)
+        want = ref.adaln_ref(x, gate=g, residual=res, ln=False)
+    else:
+        out = ops.fused_adaln(x, sh, sc, g, res, use_pallas=True)
+        want = ref.adaln_ref(x, sh, sc, g, res)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_env_override_forces_path(monkeypatch):
+    """REPRO_USE_PALLAS overrides the caller's flag in both directions."""
+    monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+    assert not ops.use_pallas_enabled(True)
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    assert ops.use_pallas_enabled(False)
+    monkeypatch.delenv("REPRO_USE_PALLAS")
+    assert ops.use_pallas_enabled(True)
+    assert not ops.use_pallas_enabled(False)
+
+
+def test_env_override_numerics(monkeypatch):
+    """With the env var forcing the kernel on, a use_pallas=False call
+    runs the kernel path — and still matches the oracle."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 100, 2, 48))
+    k = jax.random.normal(ks[1], (1, 100, 2, 48))
+    v = jax.random.normal(ks[2], (1, 100, 2, 48))
+    want = ref.attention_ref(q, k, v, causal=False)
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    out = ops.attention(q, k, v, causal=False, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+    monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+    out = ops.attention(q, k, v, causal=False, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
 def test_kernel_matches_model_ssd_path():
     """Kernel vs the model's chunked-jnp SSD (two independent impls)."""
     from repro.models.ssm import ssd_chunked
