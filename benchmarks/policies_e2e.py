@@ -25,6 +25,12 @@ probe holds the stale-reuse pixel error inside the §11 budget and
 asserts ``cache_interval=1`` bit-exactness (``--only cache``; CI gates
 it per PR).
 
+And the failure-domain chaos workload (DESIGN.md §13): the same seeded
+whole-host kill script replayed against a recovering plane (failout +
+snapshot rollback + re-place on survivors) and a blind baseline that
+fails every touched request; recovery must beat blind on throughput AND
+SLO violation rate (``--only chaos``; CI gates it per PR).
+
 Simulation-driven (paper §5.5: the simulator is an execution backend for
 the same policy interface; fidelity measured in sim_fidelity.py).
 """
@@ -233,12 +239,63 @@ def _run_multi_host(out: dict):
         out[f"multi|host|{pol}"] = m
 
 
+CHAOS_SNAP_INTERVAL = 5     # denoise snapshot cadence of the recovery leg
+
+
+def _run_chaos(out: dict):
+    """Failure-domain workload (DESIGN.md §13): the SAME seeded
+    whole-host kill script replayed against two planes that differ ONLY
+    in ``failure_recovery`` — both run the topology-aware elastic policy
+    on the 2-host x 4-rank cluster.  The recovery plane fails out the
+    touched work, rolls back to periodic denoise snapshots, and re-places
+    on the survivors; the blind plane writes every touched request off.
+    Acceptance: recovery beats blind on throughput AND SLO violation
+    rate while the script actually lands (>= 1 host_down) and the
+    recovery machinery actually runs (>= 1 rollback)."""
+    from repro.core.failures import FailureInjector
+    from repro.diffusion.workloads import (chaos_trace,
+                                           standalone_service_time)
+
+    def _trace():
+        return chaos_trace(CostModel(), duration=240, load=0.9,
+                           num_ranks=MH_TOPO.num_ranks, steps=STEPS,
+                           seed=31)
+    # kill window: the busy middle of the arrival stream, so losses land
+    # on in-flight work rather than an idle or drained cluster
+    arrivals = sorted(r.arrival for r in _trace())
+    lo = arrivals[int(0.25 * (len(arrivals) - 1))]
+    hi = arrivals[int(0.75 * (len(arrivals) - 1))]
+    for leg, recovery, snap in (("elastic-recovery", True,
+                                 CHAOS_SNAP_INTERVAL),
+                                ("elastic-blind", False, None)):
+        cost = CostModel()
+        inj = FailureInjector.random(MH_TOPO, duration=hi, kills=3,
+                                     mttr=45.0, seed=41, t_start=lo,
+                                     keep_alive=1)
+        cp = ControlPlane(MH_TOPO,
+                          make_policy("elastic", MH_TOPO.num_ranks),
+                          cost, SimBackend(cost, jitter=0.05),
+                          injector=inj, snapshot_interval=snap,
+                          failure_recovery=recovery)
+        for r in _trace():
+            cp.submit(r, convert_request(r, DIT_IMAGE))
+        cp.run()
+        timeout = 12 * standalone_service_time("dit-image", "M",
+                                               CostModel(), STEPS)
+        m = _metrics_with_timeout(cp, timeout)
+        for ev in ("host_down", "host_up", "failout", "rollback",
+                   "request_failed"):
+            m[ev + "s"] = sum(1 for e in cp.events if e["ev"] == ev)
+        out[f"chaos|trace|{leg}"] = m
+
+
 def run(only: str | None = None) -> dict:
     out = {}
-    if only in ("small-burst", "multi-host", "cache"):
+    if only in ("small-burst", "multi-host", "cache", "chaos"):
         {"small-burst": _run_small_burst,
          "multi-host": _run_multi_host,
-         "cache": _run_cache}[only](out)
+         "cache": _run_cache,
+         "chaos": _run_chaos}[only](out)
         RESULTS.mkdir(exist_ok=True)
         existing = {}
         path = RESULTS / "policies_e2e.json"
@@ -250,6 +307,7 @@ def run(only: str | None = None) -> dict:
     _run_small_burst(out)
     _run_multi_host(out)
     _run_cache(out)
+    _run_chaos(out)
     _run_mixed(out)
     for model_cfg in (DIT_IMAGE, DIT_VIDEO):
         model = model_cfg.name
@@ -331,7 +389,68 @@ def rows(data: dict):
     out.extend(small_burst_rows(data))
     out.extend(multi_host_rows(data))
     out.extend(cache_rows(data))
+    out.extend(chaos_rows(data))
     return out
+
+
+def chaos_rows(data: dict):
+    """Failure-domain headline numbers (accepts partial --only runs)."""
+    out = []
+    if "chaos|trace|elastic-recovery" not in data:
+        return out
+    for leg in ("elastic-recovery", "elastic-blind"):
+        m = data.get(f"chaos|trace|{leg}")
+        if m is None:
+            continue
+        out.append((f"policies.chaos.trace.{leg}.mean_lat",
+                    m["mean_latency_s"] * 1e6,
+                    f"slo={m['slo_attainment']:.3f}"
+                    f";thr={m['throughput_rps']:.4f}"
+                    f";host_downs={m.get('host_downs', 0)}"
+                    f";rollbacks={m.get('rollbacks', 0)}"
+                    f";failed={m.get('request_faileds', 0)}"))
+    rec = data["chaos|trace|elastic-recovery"]
+    bli = data.get("chaos|trace|elastic-blind")
+    if bli and bli["throughput_rps"]:
+        out.append(("policies.chaos.recovery_vs_blind.throughput_x",
+                    rec["throughput_rps"] / bli["throughput_rps"] * 1e6,
+                    f"recovery={rec['throughput_rps']:.4f}"
+                    f";blind={bli['throughput_rps']:.4f};accept>1x"))
+        out.append(("policies.chaos.recovery_vs_blind.slo_viol_delta",
+                    ((1 - rec["slo_attainment"])
+                     - (1 - bli["slo_attainment"])) * 1e6,
+                    f"recovery_viol={1 - rec['slo_attainment']:.3f}"
+                    f";blind_viol={1 - bli['slo_attainment']:.3f}"
+                    f";accept<0"))
+    return out
+
+
+def check_chaos(data: dict) -> list[str]:
+    """Failure-domain acceptance gate (CI fails on regression): under the
+    identical seeded kill script, the recovering plane must beat the
+    blind baseline on throughput AND SLO violation rate, the script must
+    actually land hosts (>= 1 host_down on both legs), and the recovery
+    machinery must actually engage (>= 1 rollback or failout)."""
+    problems = []
+    rec = data["chaos|trace|elastic-recovery"]
+    bli = data["chaos|trace|elastic-blind"]
+    if rec["throughput_rps"] <= bli["throughput_rps"]:
+        problems.append(
+            f"recovery throughput {rec['throughput_rps']:.4f} <= blind "
+            f"{bli['throughput_rps']:.4f} (accept: strictly higher)")
+    if (1 - rec["slo_attainment"]) >= (1 - bli["slo_attainment"]):
+        problems.append(
+            f"recovery SLO violations {1 - rec['slo_attainment']:.3f} >= "
+            f"blind {1 - bli['slo_attainment']:.3f} "
+            f"(accept: strictly lower)")
+    for leg in ("elastic-recovery", "elastic-blind"):
+        if data[f"chaos|trace|{leg}"].get("host_downs", 0) < 1:
+            problems.append(f"{leg}: kill script landed no host_down — "
+                            f"the chaos gate measured nothing")
+    if rec.get("rollbacks", 0) + rec.get("failouts", 0) < 1:
+        problems.append("recovery leg saw no rollback/failout — the "
+                        "recovery machinery never engaged")
+    return problems
 
 
 def cache_rows(data: dict):
@@ -495,7 +614,8 @@ if __name__ == "__main__":
     import sys
     ap = argparse.ArgumentParser()
     ap.add_argument("--only",
-                    choices=["small-burst", "multi-host", "cache"],
+                    choices=["small-burst", "multi-host", "cache",
+                             "chaos"],
                     default=None,
                     help="run just one workload slice (CI legs)")
     args = ap.parse_args()
@@ -506,6 +626,8 @@ if __name__ == "__main__":
         table = small_burst_rows(d)
     elif args.only == "cache":
         table = cache_rows(d)
+    elif args.only == "chaos":
+        table = chaos_rows(d)
     else:
         table = multi_host_rows(d)
     for name, us, derived in table:
@@ -516,6 +638,8 @@ if __name__ == "__main__":
         problems = check_multi_host(d)
     elif args.only == "cache":
         problems = check_cache(d)
+    elif args.only == "chaos":
+        problems = check_chaos(d)
     else:
         problems = []
     if args.only is not None:

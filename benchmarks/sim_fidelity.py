@@ -13,10 +13,13 @@ Additionally runs the ElasticPolicy preempt/reallocate scenario
 scenario (repro.serving.topology_demo, DESIGN.md §10 — hierarchical
 GFC + cross-host reallocation), AND the feature-cache scenario
 (repro.serving.cache_demo, DESIGN.md §11 — stale-KV reuse with a
-mid-trace same-degree Reallocate migrating the warm cache) on both
-backends and checks the canonical control-plane decision traces —
-which canonicalize PackedDispatch membership and the plane's cache
-hit/refresh/migrate calls — are IDENTICAL.
+mid-trace same-degree Reallocate migrating the warm cache), AND the
+failure-domain scenario (repro.serving.failure_demo, DESIGN.md §13 — a
+scripted whole-host loss with failout, snapshot rollback, and degraded
+re-placement) on both backends and checks the canonical control-plane
+decision traces — which canonicalize PackedDispatch membership, the
+plane's cache hit/refresh/migrate calls, and the recovery event
+sequence — are IDENTICAL.
 """
 from __future__ import annotations
 
@@ -171,13 +174,32 @@ def _cache_fidelity(cfg) -> dict:
     }
 
 
+def _failure_fidelity(cfg) -> dict:
+    """Failure-domain fidelity (DESIGN.md §13): the scripted whole-host
+    loss scenario — failout, snapshot rollback, re-place on survivors —
+    must trace identically on the simulator and the thread runtime, and
+    the recovered pixels must match an undisturbed control run."""
+    from repro.serving.failure_demo import run_demo
+    d = run_demo(cfg)
+    return {
+        "trace_match": d["trace_match"],
+        "recovery": d["recovery"],
+        "resumed_step": d["resumed_step"],
+        "snapshot_step": d["snapshot_step"],
+        "pixels_match": d["pixels_match"],
+        "real_completed": d["completed"],
+        "sim_completed": d["sim"]["metrics"]["completed"],
+    }
+
+
 def run() -> dict:
     import dataclasses
     cfg = DIT_IMAGE.reduced()
     out = {"elastic_trace": _elastic_fidelity(cfg),
            "packing_trace": _packing_fidelity(cfg),
            "topology_trace": _topology_fidelity(cfg),
-           "cache_trace": _cache_fidelity(cfg)}
+           "cache_trace": _cache_fidelity(cfg),
+           "failure_trace": _failure_fidelity(cfg)}
     for pol_name in POLICIES:
         cost = _profile_costs(cfg)
         trace0 = _mini_trace(cost)
@@ -235,6 +257,15 @@ def rows(data: dict):
                         f"identical_traces={m['trace_match']}"
                         f";pixels_bitexact={m['pixels_match']}"
                         f";hier={m['hierarchical_collectives']}"))
+            continue
+        if pol == "failure_trace":
+            ok = m["trace_match"] and m["pixels_match"]
+            out.append(("sim_fidelity.failure.trace_match",
+                        1e6 if ok else 0.0,
+                        f"identical_traces={m['trace_match']}"
+                        f";pixels_bitexact={m['pixels_match']}"
+                        f";resumed_step={m['resumed_step']}"
+                        f";snapshot={m['snapshot_step']}"))
             continue
         if pol == "cache_trace":
             ok = m["trace_match"] and m["interval1_exact"] \

@@ -11,7 +11,7 @@ the :class:`Clock` interface:
 Each iteration performs the same sequence on either backend:
 
 1. sync the control-plane clock,
-2. release arrivals that have come due,
+2. release arrivals and scripted failure events that have come due,
 3. invoke ``schedule_point`` (policy actions: dispatch / reallocate /
    preempt / cancel) — this is also the re-invocation point after every
    completion, requeue, and reallocation boundary,
@@ -119,10 +119,14 @@ class EventLoop:
             if plane.now >= until:
                 break
             plane.release_arrivals()
+            plane.release_failures()
             plane.schedule_point()
             if plane.quiescent():
                 break                   # nothing running, nothing arriving
-            completions = clock.wait(backend, plane.next_arrival())
+            # wait no further than the next timed event — an arrival OR a
+            # scripted failure (DESIGN.md §13): the virtual clock jumps to
+            # it, the wall clock bounds its idle pause by it
+            completions = clock.wait(backend, plane.next_timed())
             if completions is None:
                 break                   # event sources exhausted
             for c in completions:

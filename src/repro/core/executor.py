@@ -17,7 +17,7 @@ import traceback
 from dataclasses import dataclass
 from typing import Any, Optional
 
-from repro.core.gfc import GroupFreeComm
+from repro.core.gfc import CollectiveTimeout, GroupFreeComm
 from repro.core.migration import execute_migration, plan_migration
 from repro.core.scheduler import Completion
 from repro.core.trajectory import (ExecutionLayout, RequestGraph,
@@ -55,6 +55,11 @@ class ThreadBackend:
         self._completions: queue.Queue = queue.Queue()
         self._stop = False
         self.errors: list[str] = []
+        # structured collective timeouts (a peer died mid-collective) are
+        # NOT hard errors: they surface as failed_ranks on the completion
+        # and the plane decides (requeue / fail the request) — DESIGN.md
+        # §13.  Recorded here for observability only.
+        self.timeouts: list[str] = []
         self._threads = [
             threading.Thread(target=self._worker, args=(r,), daemon=True)
             for r in range(num_ranks)]
@@ -77,44 +82,70 @@ class ThreadBackend:
                 self._run_pack(rank, job)
                 continue
             task, layout, graph, t_dispatch, desc, seq = job
+            err, failed = None, ()
             try:
                 self.adapter.execute(task, layout, rank, self.comm, graph,
                                      desc)
-                err = None
+            except CollectiveTimeout as e:
+                failed = tuple(e.missing_ranks) or (rank,)
+                self.timeouts.append(
+                    f"rank {rank} task {task.id}: missing {failed}: {e}")
             except Exception as e:   # noqa: BLE001
                 err = f"{type(e).__name__}: {e}"
                 self.errors.append(f"rank {rank} task {task.id}: {err}\n"
                                    + traceback.format_exc())
-            self._finish(task.id, seq, layout, t_dispatch, err)
+            self._finish(task.id, seq, layout, t_dispatch, err, failed)
 
     def _run_pack(self, rank: int, job: _PackJob):
+        err, failed = None, ()
         try:
             self.adapter.execute_packed(job.members, job.layout, rank,
                                         self.comm, job.desc)
-            err = None
+        except CollectiveTimeout as e:
+            failed = tuple(e.missing_ranks) or (rank,)
+            self.timeouts.append(
+                f"rank {rank} pack {job.pack_id}: missing {failed}: {e}")
         except Exception as e:   # noqa: BLE001
             err = f"{type(e).__name__}: {e}"
             self.errors.append(f"rank {rank} pack {job.pack_id}: {err}\n"
                                + traceback.format_exc())
         # pack ids are fresh per dispatch, so the pending key needs no seq
-        self._finish(job.pack_id, 0, job.layout, job.t_dispatch, err)
+        self._finish(job.pack_id, 0, job.layout, job.t_dispatch, err, failed)
 
     def _finish(self, key_id: str, seq: int, layout, t_dispatch: float,
-                err: Optional[str]):
+                err: Optional[str], failed: tuple = ()):
         with self._lock:
             # keyed by (task, dispatch seq): a preempted task may be
             # redispatched while the superseded dispatch still drains
-            st = self._pending[(key_id, seq)]
+            st = self._pending.get((key_id, seq))
+            if st is None:
+                return              # late arrival after early emission
             st["done"] += 1
             if err:
                 st["err"] = err
+            if failed:
+                st.setdefault("failed", set()).update(failed)
+            now = time.monotonic() - self.t0
+            emit = False
+            if failed and not st.get("emitted"):
+                # first structured collective failure: emit the failed
+                # completion NOW — surviving peers of the group are still
+                # blocked on their own timeouts and the plane must not
+                # wait a full timeout per peer to start recovery
+                st["emitted"] = True
+                emit = True
             if st["done"] == layout.degree:
                 del self._pending[(key_id, seq)]
-                now = time.monotonic() - self.t0
+                if not st.get("emitted"):
+                    emit = True
+            if emit:
+                # a hard adapter error keeps the legacy contract —
+                # failed_ranks=() and the error recorded in self.errors
+                # (ServingEngine.serve raises); only collective timeouts
+                # carry the structured missing-rank set
                 self._completions.put(Completion(
                     key_id, now, now - t_dispatch,
-                    failed_ranks=() if not st.get("err") else
-                    tuple(layout.ranks),
+                    failed_ranks=tuple(sorted(st.get("failed", ()))),
                     seq=seq))
 
     # ------------------------------------------------------------------

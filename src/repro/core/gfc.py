@@ -71,6 +71,21 @@ class OrderingViolation(RuntimeError):
     """A signal token was overwritten before its peer consumed it."""
 
 
+class CollectiveTimeout(TimeoutError):
+    """A collective stalled waiting on specific peer rank(s).
+
+    Subclasses :class:`TimeoutError` so legacy handlers keep working, but
+    carries the missing rank set so the executor can surface a structured
+    ``failed_ranks`` completion (DESIGN.md §13) instead of killing the
+    worker thread."""
+
+    def __init__(self, msg: str, *, missing_ranks: tuple[int, ...] = (),
+                 edge: Optional[tuple[int, int]] = None):
+        super().__init__(msg)
+        self.missing_ranks = tuple(missing_ranks)
+        self.edge = edge
+
+
 @dataclass
 class BackendChoice:
     name: str                       # "staged" | "direct"
@@ -103,11 +118,15 @@ class GroupFreeComm:
     def __init__(self, world_size: int, *, num_slots: int = 2,
                  strict: bool = True, session: int = 0,
                  selector: Optional[BackendSelector] = None,
-                 topology=None):
+                 topology=None, timeout: float = 30.0):
         self.world_size = world_size
         self.num_slots = num_slots
         self.strict = strict
         self.session = session
+        # default wait bound for signal/stage observation; a peer that
+        # never shows up within it raises CollectiveTimeout naming the
+        # missing rank (DESIGN.md §13)
+        self.timeout = timeout
         self.selector = selector or BackendSelector()
         # ClusterTopology (DESIGN.md §10) or None; spanning groups then
         # execute hierarchical two-stage collectives.  Plans are keyed
@@ -162,16 +181,19 @@ class GroupFreeComm:
             self._cv.notify_all()
 
     def _observe(self, edge: tuple[int, int], slot_idx: int, token: tuple,
-                 timeout: float = 30.0):
+                 timeout: Optional[float] = None):
+        timeout = self.timeout if timeout is None else timeout
         deadline = time.monotonic() + timeout
         with self._cv:
             slot = self._slots[edge][slot_idx]
             while slot.token != token:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
-                    raise TimeoutError(
+                    raise CollectiveTimeout(
                         f"edge {edge} slot {slot_idx}: waiting {token}, "
-                        f"holds {slot.token} (deadlock or ordering bug)")
+                        f"holds {slot.token} (dead peer, deadlock, or "
+                        f"ordering bug)",
+                        missing_ranks=(edge[0],), edge=edge)
                 self._cv.wait(remaining)
             slot.consumed = True
             self._cv.notify_all()
@@ -223,14 +245,19 @@ class GroupFreeComm:
             return 1
         return max(1, -(-payload.nbytes // choice.chunk_bytes))
 
-    def _stage_get(self, desc, epoch: int, rank: int, timeout: float = 30.0):
+    def _stage_get(self, desc, epoch: int, rank: int,
+                   timeout: Optional[float] = None):
         key = (desc.gid, epoch, rank)
+        timeout = self.timeout if timeout is None else timeout
         deadline = time.monotonic() + timeout
         with self._cv:
             while key not in self._stage:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
-                    raise TimeoutError(f"stage buffer {key} never published")
+                    raise CollectiveTimeout(
+                        f"stage buffer {key} never published "
+                        f"(rank {rank} dead or stalled)",
+                        missing_ranks=(rank,))
                 self._cv.wait(remaining)
             return self._stage[key]
 

@@ -532,7 +532,10 @@ class ElasticPolicy(Policy):
 
     # -- helpers -------------------------------------------------------
     def _cands(self, view: SchedulerView) -> list[int]:
-        maxd = self.max_degree or view.num_ranks
+        # cap candidate degrees at the ALIVE rank count: after a host
+        # loss (DESIGN.md §13) no layout wider than the survivors can
+        # ever dispatch, so sizing against it just wastes schedule points
+        maxd = self.max_degree or max(view.num_alive, 1)
         return self.candidates or \
             [d for d in (1, 2, 4, 8, 16, 32) if d <= maxd]
 
@@ -729,7 +732,7 @@ class ElasticPolicy(Policy):
             lay.degree for tid, (t, lay) in view.running.items()
             if tid in view.preempting)
         reclaiming = pending_reclaim + shrink_reclaim
-        lack = min(demand, view.num_ranks) - len(free) - reclaiming
+        lack = min(demand, view.num_alive) - len(free) - reclaiming
         if reclaiming == 0:
             # tie-break on request id (stable across backends; at most
             # one running denoise per request — see _edf_key)

@@ -44,6 +44,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Optional, Union
 
+from repro.core import failures as failure_domain
 from repro.core.cost_model import CostModel
 from repro.core.event_loop import EventLoop, VirtualClock
 from repro.core.trajectory import (ClusterTopology, ExecutionLayout,
@@ -140,6 +141,14 @@ class SchedulerView:
     # entry; interval 1 means caching is off (no stale reuse)
     cache_residency: dict[str, CacheEntry] = field(default_factory=dict)
     cache_interval: int = 1
+    # failure domains (DESIGN.md §13): ranks on hosts currently down.
+    # `free_ranks` already excludes them; policies sizing layouts against
+    # the machine should use `num_alive`, not `num_ranks`.
+    dead_ranks: frozenset = frozenset()
+
+    @property
+    def num_alive(self) -> int:
+        return self.num_ranks - len(self.dead_ranks)
 
     @property
     def free_by_host(self) -> dict[int, list[int]]:
@@ -159,10 +168,16 @@ class Policy:
 
 
 class ControlPlane:
+    #: structured task failures (GFC collective timeouts surfaced as
+    #: ``failed_ranks`` completions) tolerated before the request fails
+    max_task_failures = 3
+
     def __init__(self, topology=None, policy: Policy = None,
                  cost: CostModel = None, backend=None, *,
                  dispatch_overhead: float = 0.0, num_ranks=None,
-                 cache_interval: Optional[int] = None):
+                 cache_interval: Optional[int] = None,
+                 injector=None, snapshot_interval: Optional[int] = None,
+                 snapshot_dir=None, failure_recovery: bool = True):
         # `topology` accepts a ClusterTopology or a bare rank count
         # (back-compat shim: ControlPlane(num_ranks=N) — positional or
         # keyword — synthesizes a one-host topology with identical
@@ -200,6 +215,19 @@ class ControlPlane:
         # disables the subsystem (byte-identical pre-cache behavior)
         self.cache = FeatureCachePlane(cache_interval,
                                        emit=self._cache_event)
+        # failure domains (DESIGN.md §13): an optional scripted/seeded
+        # injector drives HostDown/HostUp through the event loop; the
+        # plane tracks dead ranks, fails out in-flight work on them, and
+        # (failure_recovery=True) repairs survivors via periodic
+        # denoise-state snapshots.  failure_recovery=False is the blind
+        # baseline: any request touching a dead host fails.
+        self.injector = injector
+        self.failure_recovery = failure_recovery
+        self.dead_ranks: set[int] = set()
+        self.dead_hosts: set[int] = set()
+        self.snapshots = (failure_domain.SnapshotStore(
+            snapshot_interval, snapshot_dir)
+            if snapshot_interval else None)
         backend.attach(self)
 
     def _cache_event(self, rec: dict):
@@ -231,10 +259,40 @@ class ControlPlane:
     def next_arrival(self) -> Optional[float]:
         return self._arrivals[0][0] if self._arrivals else None
 
+    def release_failures(self):
+        """Apply every injected failure event that has come due — the
+        failure script is a timed event source exactly like arrivals, so
+        both backends process it at the same loop positions."""
+        if self.injector is None:
+            return
+        for ev in self.injector.pop_due(self.now):
+            failure_domain.apply_failure(self, ev)
+
+    def next_timed(self) -> Optional[float]:
+        """Earliest pending timed event (arrival or injected failure):
+        the clock must not sleep/jump past either."""
+        na = self.next_arrival()
+        nf = self.injector.next_time() if self.injector else None
+        if na is None:
+            return nf
+        if nf is None:
+            return na
+        return min(na, nf)
+
     def quiescent(self) -> bool:
-        """No event can ever fire again: nothing running on the backend
-        and no future arrival (completions only come from running)."""
-        return not self.running and not self._arrivals
+        """No event can ever fire again: nothing running on the backend,
+        no future arrival (completions only come from running), and no
+        pending failure event that could unblock unfinished work (e.g. a
+        HostUp restoring capacity).  Leftover failure events with no
+        unfinished request are irrelevant and do not hold the loop open."""
+        if self.running or self._arrivals:
+            return False
+        if self.injector is not None and self.injector.pending() and any(
+                req.done_time is None and not req.failed
+                for rid, req in self.requests.items()
+                if rid in self.released):
+            return False
+        return True
 
     # ------------------------------------------------------------------
     def _view(self) -> SchedulerView:
@@ -256,14 +314,16 @@ class ControlPlane:
                              preempting=frozenset(self.preempting),
                              topology=self.topology,
                              cache_residency=self.cache.residency_view(),
-                             cache_interval=self.cache.interval)
+                             cache_interval=self.cache.interval,
+                             dead_ranks=frozenset(self.dead_ranks))
 
     # ------------------------------------------------------------------
     # action application (validated; invalid actions are skipped)
     # ------------------------------------------------------------------
 
     def _ranks_ok(self, layout: ExecutionLayout) -> bool:
-        return all(0 <= r < self.num_ranks for r in layout.ranks)
+        return all(0 <= r < self.num_ranks and r not in self.dead_ranks
+                   for r in layout.ranks)
 
     def _mark_running(self, task: TrajectoryTask, layout: ExecutionLayout,
                       extra_ev: Optional[dict] = None) -> int:
@@ -534,21 +594,48 @@ class ControlPlane:
         mode = self.preempting.pop(c.task_id, None)
         task, layout = self.running.pop(c.task_id)
         self.now = max(self.now, c.finish_time)
-        self.free_ranks |= set(layout.ranks)
+        self.free_ranks |= set(layout.ranks) - self.dead_ranks
         graph = self.graphs[task.request_id]
         if mode is not None:
-            # preempted or cancelled mid-flight: the device slice reached
-            # its boundary but its outputs are discarded; a preempted
-            # task requeues with inputs intact.
+            # preempted, cancelled, or failed-out mid-flight: the device
+            # slice reached its boundary but its outputs are discarded;
+            # a preempted/failed-out task requeues with inputs intact.
             self._discard_outputs(task, graph)
             task.state = "pending"
             task.layout = None
-            if mode == "requeue":
+            if mode in ("requeue", "failout"):
                 self.events.append({"t": self.now, "ev": "requeued",
                                     "task": task.id,
                                     "req": task.request_id,
                                     "kind": task.kind,
                                     "step": task.step_index})
+            if mode == "failout":
+                # the drain is over: no worker still reads this request's
+                # artifacts, so the host-loss repair can run (DESIGN.md
+                # §13 — dematerialize lost artifacts, restore the latest
+                # snapshot, reset exactly the tasks that need re-running)
+                failure_domain.repair_request(self, task.request_id)
+            return
+        if c.failed_ranks:
+            # structured collective failure (a GFC CollectiveTimeout the
+            # executor surfaced as failed_ranks): the step did not
+            # complete — discard its outputs and requeue with inputs
+            # intact so the policy re-places it; repeated failures
+            # without a matching host_down fail the request instead of
+            # looping forever
+            self._discard_outputs(task, graph)
+            task.meta["_failures"] = task.meta.get("_failures", 0) + 1
+            self.pinned.pop(task.request_id, None)
+            self.cache.invalidate(task.request_id, "collective-timeout")
+            self.events.append({"t": self.now, "ev": "task_failed",
+                                "task": task.id, "req": task.request_id,
+                                "kind": task.kind, "step": task.step_index,
+                                "ranks": sorted(c.failed_ranks)})
+            if task.meta["_failures"] >= self.max_task_failures:
+                self._fail_request(task.request_id, "repeated-failure")
+            else:
+                task.state = "pending"
+                task.layout = None
             return
         task.state = "done"
         task.complete_time = c.finish_time
@@ -563,6 +650,17 @@ class ControlPlane:
             art.materialized = True
             if art.layout is None:
                 art.layout = layout
+        # periodic denoise-state snapshot (DESIGN.md §13): capture the
+        # just-materialized latent so a later host loss replays from this
+        # step, not from step 0.  The capture decision is a function of
+        # (interval, step_index) only, so both backends stamp identical
+        # snapshot events into the signature.
+        if (self.snapshots is not None and task.kind == "denoise"
+                and self.snapshots.due(task.step_index)):
+            self.snapshots.capture(task, graph, layout)
+            self.events.append({"t": self.now, "ev": "snapshot",
+                                "req": task.request_id, "kind": "denoise",
+                                "step": task.step_index})
         # online cost-model calibration (§5.1); pack members skip this —
         # the pack observes ONE batched sample instead.  Cache-hit steps
         # calibrate their own |c cell (DESIGN.md §11).
@@ -579,8 +677,24 @@ class ControlPlane:
             req.done_time = c.finish_time
             self.pinned.pop(req.id, None)
             self.cache.invalidate(req.id, "done")
+            if self.snapshots is not None:
+                self.snapshots.drop(req.id)
             self.events.append({"t": self.now, "ev": "request_done",
                                 "req": req.id})
+
+    def _fail_request(self, rid: str, why: str):
+        """Terminal request failure: release every plane-held resource and
+        stamp the decision into the trace (DESIGN.md §13)."""
+        req = self.requests.get(rid)
+        if req is None or req.failed or req.done_time is not None:
+            return
+        req.failed = True
+        self.pinned.pop(rid, None)
+        self.cache.invalidate(rid, "request-failed")
+        if self.snapshots is not None:
+            self.snapshots.drop(rid)
+        self.events.append({"t": self.now, "ev": "request_failed",
+                            "req": rid, "why": why})
 
     def fail_task(self, task_id: str, requeue: bool = True):
         """Worker failure: the trajectory task graph is the unit of
@@ -595,7 +709,7 @@ class ControlPlane:
         if pack_id is None or not any(
                 tid in self.running
                 for tid in self.packs[pack_id]["members"]):
-            self.free_ranks |= set(layout.ranks)
+            self.free_ranks |= set(layout.ranks) - self.dead_ranks
         if requeue:
             task.state = "pending"
             task.layout = None
@@ -643,7 +757,8 @@ class ControlPlane:
 # ---------------------------------------------------------------------------
 
 _SIGNATURE_EVENTS = ("dispatch", "preempt", "requeued", "reallocate",
-                    "cancel")
+                    "cancel", "host_down", "host_up", "failout",
+                    "rollback", "snapshot", "request_failed")
 
 
 def trace_signature(events: list[dict],

@@ -114,6 +114,17 @@ class FeatureCachePlane:
             self._emit({"ev": "cache_invalidate", "req": request_id,
                         "why": reason})
 
+    def invalidate_ranks(self, ranks, reason: str):
+        """Drop every residency whose warm rank-set intersects ``ranks``
+        (DESIGN.md §13): a snapshot replicated across a partially-dead
+        rank set is unreadable as a unit — a hit at the old layout would
+        dispatch onto a dead rank, and the migration planner may pick a
+        dead source."""
+        dead = set(ranks)
+        for rid in sorted(self.entries):
+            if set(self.entries[rid].layout.ranks) & dead:
+                self.invalidate(rid, reason)
+
     # ------------------------------------------------------------------
     def _plan(self, task: TrajectoryTask, layout: ExecutionLayout,
               graph: RequestGraph):

@@ -232,6 +232,32 @@ def cache_trace(cost: CostModel, *, duration: float = 240.0,
     return out
 
 
+def chaos_trace(cost: CostModel, *, duration: float = 240.0,
+                load: float = 0.9, num_ranks: int = 8, steps: int = 25,
+                seed: int = 31, alpha: float = 1.6) -> list[Request]:
+    """Failure-domain workload (DESIGN.md §13): a steady Poisson M-image
+    SLO stream sized so a healthy cluster clears it with margin — the
+    margin whole-host losses then eat.  The chaos gate serves this trace
+    under a seeded :class:`~repro.core.failures.FailureInjector` kill
+    script: with recovery on, requests touching a dead host fail out,
+    roll back to their last denoise snapshot, and finish on the
+    survivors inside their (alpha-padded) deadlines; the blind baseline
+    writes every touched request off.  Deadlines are deliberately loose
+    (``alpha`` standalone times + allowance) so the comparison measures
+    survival, not scheduling finesse."""
+    rand = _lcg(seed)
+    t_m = standalone_service_time("dit-image", "M", cost, steps)
+    rate = load * num_ranks / t_m * 0.5
+    out: list[Request] = []
+    t = 0.0
+    while t < duration:
+        t += -math.log(max(rand(), 1e-9)) / rate
+        r = make_request("dit-image", "M", t, cost, steps)
+        r.deadline = r.arrival + alpha * t_m + SLO_ALLOWANCE["dit-image"]
+        out.append(r)
+    return out
+
+
 def foreground_burst_trace(model: str, cost: CostModel, *,
                            duration: float = 120.0, load: float = 0.5,
                            num_ranks: int = 4, steps: int = 50,

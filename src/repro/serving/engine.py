@@ -11,6 +11,7 @@ validated by benchmarks/sim_fidelity.py).
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Optional
 
 from repro.configs.base import ModelConfig
@@ -27,7 +28,9 @@ from repro.diffusion.pipeline import DiTPipeline
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, policy: Policy, num_ranks,
                  cost: Optional[CostModel] = None, seed: int = 0,
-                 cache_interval: Optional[int] = None):
+                 cache_interval: Optional[int] = None,
+                 injector=None, snapshot_interval: Optional[int] = None,
+                 snapshot_dir=None, failure_recovery: bool = True):
         # `num_ranks` accepts a bare rank count (back-compat: synthesizes
         # a one-host topology) or a ClusterTopology (DESIGN.md §10);
         # spanning GFC groups then run hierarchical collectives.
@@ -44,7 +47,11 @@ class ServingEngine:
                                      comm=self.comm)
         self.cp = ControlPlane(topo, policy, cost or CostModel(),
                                self.backend,
-                               cache_interval=cache_interval)
+                               cache_interval=cache_interval,
+                               injector=injector,
+                               snapshot_interval=snapshot_interval,
+                               snapshot_dir=snapshot_dir,
+                               failure_recovery=failure_recovery)
 
     # ------------------------------------------------------------------
     def serve(self, requests: list[Request], *, time_scale: float = 1.0,
@@ -75,7 +82,21 @@ class ServingEngine:
         if self.backend.errors:
             raise RuntimeError("worker errors:\n"
                                + "\n".join(self.backend.errors[:3]))
-        return self.cp.metrics()
+        # wall-clock timeout: requests still in flight when the loop gave
+        # up are explicitly FAILED in the returned metrics (and logged),
+        # never reported as silently in-flight
+        unfinished = sorted(
+            rid for rid, req in self.cp.requests.items()
+            if req.done_time is None and not req.failed)
+        if unfinished:
+            logging.getLogger(__name__).warning(
+                "serve timed out at %.1fs with %d unfinished requests: %s",
+                timeout, len(unfinished), ", ".join(unfinished))
+            for rid in unfinished:
+                self.cp._fail_request(rid, "serve-timeout")
+        m = self.cp.metrics()
+        m["timed_out_requests"] = unfinished
+        return m
 
     def result_pixels(self, request: Request):
         g = self.cp.graphs[request.id]

@@ -1,0 +1,523 @@
+"""Failure domains (DESIGN.md §13): whole-host loss, failout drains,
+snapshot/replay rollback, the blind baseline, structured collective
+timeouts, injector determinism, and the serve-timeout contract."""
+import numpy as np
+import pytest
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.core.cost_model import CostModel
+from repro.core.event_loop import EventLoop, WallClock
+from repro.core.executor import ThreadBackend
+from repro.core.failures import (FailureInjector, HostDown, HostUp,
+                                 SnapshotStore, artifact_lost,
+                                 shrink_replicated)
+from repro.core.gfc import CollectiveTimeout, GroupFreeComm
+from repro.core.policies import ElasticPolicy
+from repro.core.scheduler import (ControlPlane, Dispatch, PackedDispatch,
+                                  Policy, Reallocate, trace_signature)
+from repro.core.simulator import SimBackend
+from repro.core.trajectory import (ClusterTopology, ExecutionLayout,
+                                   Request)
+from repro.diffusion.adapters import convert_request
+
+CFG = DIT_IMAGE.reduced()
+TOPO = ClusterTopology(num_hosts=2, ranks_per_host=2)
+
+LAYOUT_A = ExecutionLayout((0, 1))          # host 0
+LAYOUT_B = ExecutionLayout((2, 3))          # host 1
+
+
+class _HostAware(Policy):
+    """Denoise on host 0's ranks while they live, host 1's after the
+    loss; encode/decode on the lowest free rank (failure_demo script)."""
+    name = "host-aware"
+
+    def schedule(self, view):
+        out, taken = [], set()
+        for t, req, g in sorted(view.ready,
+                                key=lambda x: (x[1].id, x[0].step_index)):
+            if t.kind in ("encode", "decode"):
+                for r in sorted(view.free_ranks):
+                    if r not in taken:
+                        out.append(Dispatch(t.id, ExecutionLayout((r,))))
+                        taken.add(r)
+                        break
+            else:
+                for lay in (LAYOUT_A, LAYOUT_B):
+                    if all(r in view.free_ranks and r not in taken
+                           for r in lay.ranks):
+                        out.append(Dispatch(t.id, lay))
+                        taken.update(lay.ranks)
+                        break
+        return out
+
+
+def _request(rid="r0", res=128, steps=6, arrival=0.0, deadline=None):
+    return Request(id=rid, model="dit-image", height=res, width=res,
+                   frames=1, steps=steps, arrival=arrival,
+                   deadline=deadline)
+
+
+def _cp(policy, topo=TOPO, **kw):
+    cost = CostModel()
+    return ControlPlane(topo, policy, cost, SimBackend(cost), **kw)
+
+
+def _mid_step(step: int, policy=None) -> float:
+    """Failure-free probe run: the exact midpoint of denoise ``step``'s
+    in-flight window (timing-robust against dispatch/migration
+    overheads the analytical formula would have to guess)."""
+    cp = _cp(policy or _HostAware())
+    req = _request()
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    t = {e["step"]: e["t"] for e in cp.events
+         if e["ev"] == "dispatch" and e["kind"] == "denoise"}
+    return (t[step] + t[step + 1]) / 2
+
+
+def _events(cp, kind):
+    return [e for e in cp.events if e["ev"] == kind]
+
+
+# ---------------------------------------------------------------------------
+# tentpole: scripted host loss, snapshot rollback, degraded completion
+# ---------------------------------------------------------------------------
+
+def test_host_down_recovery_resumes_at_snapshot():
+    t_fail = _mid_step(3)
+    inj = FailureInjector([HostDown(t_fail, 0)])
+    cp = _cp(_HostAware(), injector=inj, snapshot_interval=2)
+    req = _request()
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    assert cp.metrics()["completed"] == 1
+    assert cp.dead_ranks == {0, 1} and cp.dead_hosts == {0}
+    # the in-flight step 3 failed out and requeued
+    assert [(e["kind"], e["step"]) for e in _events(cp, "failout")] \
+        == [("denoise", 3)]
+    # rollback resumed at the step after the step-1 snapshot, NOT step 0
+    rb = _events(cp, "rollback")
+    assert len(rb) == 1
+    assert rb[0]["snapshot"] == 1 and rb[0]["step"] == 2
+    # snapshots were captured on the interval (pre-loss 1, 3 post-loss...)
+    snap_steps = [e["step"] for e in _events(cp, "snapshot")]
+    assert snap_steps[0] == 1 and 3 in snap_steps and 5 in snap_steps
+    # no dispatch after the loss touches a dead rank
+    for e in cp.events:
+        if e["ev"] == "dispatch" and e["t"] >= t_fail:
+            assert not (set(e["ranks"]) & {0, 1}), e
+    # the re-served denoise chain ran on host 1
+    post = [tuple(e["ranks"]) for e in cp.events
+            if e["ev"] == "dispatch" and e["kind"] == "denoise"
+            and e["t"] > t_fail]
+    assert post and all(r == LAYOUT_B.ranks for r in post)
+
+
+def test_blind_baseline_fails_the_touched_request():
+    t_fail = _mid_step(3)
+    inj = FailureInjector([HostDown(t_fail, 0)])
+    cp = _cp(_HostAware(), injector=inj, snapshot_interval=2,
+             failure_recovery=False)
+    req = _request()
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    m = cp.metrics()
+    assert m["completed"] == 0 and m["failed"] == 1
+    assert req.failed
+    assert [e["why"] for e in _events(cp, "request_failed")] \
+        == ["host-down"]
+    assert not _events(cp, "rollback")
+
+
+def test_recovery_without_snapshots_restarts_from_step_zero():
+    t_fail = _mid_step(3)
+    inj = FailureInjector([HostDown(t_fail, 0)])
+    cp = _cp(_HostAware(), injector=inj)       # no snapshot store
+    req = _request()
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    assert cp.metrics()["completed"] == 1
+    rb = _events(cp, "rollback")
+    assert len(rb) == 1
+    assert rb[0]["snapshot"] == -1 and rb[0]["step"] == 0
+
+
+def test_untouched_request_survives_host_loss_unrepaired():
+    """A request living entirely on the surviving host never rolls
+    back — stale copies on the dead host (none here) aside, the loss is
+    invisible to it."""
+    class _OnB(_HostAware):
+        def schedule(self, view):
+            out = []
+            for t, req, g in view.ready:
+                lay = ExecutionLayout((2,)) \
+                    if t.kind in ("encode", "decode") else LAYOUT_B
+                if all(r in view.free_ranks for r in lay.ranks):
+                    out.append(Dispatch(t.id, lay))
+            return out
+
+    t_fail = _mid_step(3, policy=_OnB())
+    inj = FailureInjector([HostDown(t_fail, 0)])
+    cp = _cp(_OnB(), injector=inj, snapshot_interval=2)
+    req = _request()
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    assert cp.metrics()["completed"] == 1
+    assert not _events(cp, "rollback") and not _events(cp, "failout")
+
+
+# ---------------------------------------------------------------------------
+# satellite: host loss against migration/pin edge cases
+# ---------------------------------------------------------------------------
+
+def test_host_loss_mid_migration_drain():
+    """Host 0 dies while its denoise step drains toward a Reallocate
+    boundary onto host 1: the pin is dropped, the drain upgrades to a
+    failout, and the request still completes on the survivors."""
+    t_fail = _mid_step(2)
+    inj = FailureInjector([HostDown(t_fail, 0)])
+    cp = _cp(_HostAware(), injector=inj, snapshot_interval=2)
+    req = _request()
+    cp.submit(req, convert_request(req, CFG))
+
+    # drive manually so the Reallocate lands while step 2 is in flight
+    pinned = False
+    for _ in range(200):
+        cp.release_arrivals()
+        cp.release_failures()
+        if not pinned and any(
+                t.kind == "denoise" and t.step_index == 2
+                for t, _ in cp.running.values()):
+            assert cp.apply(Reallocate(req.id, LAYOUT_B))
+            pinned = True
+        cp.schedule_point()
+        if cp.quiescent():
+            break
+        nxt = cp.next_timed()
+        nc = cp.backend.peek()
+        if nc is not None and (nxt is None or nc <= nxt):
+            for c in cp.backend.poll():
+                cp.on_completion(c)
+        elif nxt is not None:
+            cp.now = max(cp.now, nxt)
+        else:
+            break
+    assert pinned
+    assert cp.metrics()["completed"] == 1
+    assert req.id not in cp.pinned
+    assert _events(cp, "failout") and _events(cp, "rollback")
+
+
+def test_host_loss_between_pin_and_boundary():
+    """A Reallocate pin onto ranks that die before its boundary must be
+    dropped (the boundary would wait forever for dead ranks to free) —
+    the request re-places on the survivors instead of deadlocking."""
+    class _OnBPinA(Policy):
+        name = "pin-to-dead"
+
+        def schedule(self, view):
+            out = []
+            for t, req, g in view.ready:
+                if req.id in view.pinned and t.kind == "denoise":
+                    continue
+                lay = ExecutionLayout((2,)) \
+                    if t.kind in ("encode", "decode") else LAYOUT_B
+                if all(r in view.free_ranks for r in lay.ranks):
+                    out.append(Dispatch(t.id, lay))
+                    if t.kind == "denoise" and t.step_index == 1:
+                        out.append(Reallocate(req.id, LAYOUT_A))
+            return out
+
+    t_fail = _mid_step(1, policy=_OnBPinA())
+    inj = FailureInjector([HostDown(t_fail, 0)])
+    cp = _cp(_OnBPinA(), injector=inj)
+    req = _request()
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    assert cp.metrics()["completed"] == 1
+    assert req.id not in cp.pinned
+    # the pinned layout intersected the dead host, so no denoise ever
+    # dispatched on it
+    for e in cp.events:
+        if e["ev"] == "dispatch" and e["t"] > t_fail:
+            assert not (set(e["ranks"]) & {0, 1})
+
+
+def test_pack_member_on_dead_rank_fails_whole_pack_exactly_once():
+    cp = _cp(_HostAware(), injector=None, snapshot_interval=2)
+    reqs = [_request(rid, steps=3) for rid in ("a", "b")]
+    for r in reqs:
+        cp.submit(r, convert_request(r, CFG))
+        g = cp.graphs[r.id]
+        enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+        assert cp.apply(Dispatch(enc.id, ExecutionLayout((2,))))
+        for _ in range(4):
+            for c in cp.backend.poll():
+                cp.on_completion(c)
+    step0 = {r.id: [t for t in cp.graphs[r.id].ready_tasks()
+                    if t.kind == "denoise"][0] for r in reqs}
+    assert cp.apply(PackedDispatch((step0["a"].id, step0["b"].id),
+                                   LAYOUT_A))
+    # host 0 dies while the pack is in flight on (0, 1)
+    from repro.core import failures as fd
+    fd.host_down(cp, 0)
+    fo = _events(cp, "failout")
+    assert sorted(e["req"] for e in fo) == ["a", "b"]
+    assert all(e.get("pack") for e in fo)
+    cp.run()
+    m = cp.metrics()
+    assert m["completed"] == 2
+    # each member failed out exactly once and requeued exactly once
+    assert sorted(e["req"] for e in _events(cp, "failout")) == ["a", "b"]
+    assert sorted(e["req"] for e in _events(cp, "requeued")) == ["a", "b"]
+    # survivors re-ran on host 1 only
+    post = [e for e in cp.events
+            if e["ev"] in ("dispatch", "packed_dispatch")
+            and set(e["ranks"]) & {0, 1}]
+    # only the pre-kill encode/pack dispatches may touch host 0
+    assert all(e["t"] <= fo[0]["t"] for e in post)
+
+
+def test_host_up_returns_ranks_to_the_free_pool():
+    cp = _cp(_HostAware())
+    req = _request()
+    cp.submit(req, convert_request(req, CFG))
+    from repro.core import failures as fd
+    fd.host_down(cp, 0)
+    assert cp.dead_ranks == {0, 1}
+    assert not (cp.free_ranks & {0, 1})
+    fd.host_up(cp, 0)
+    assert not cp.dead_ranks and not cp.dead_hosts
+    assert {0, 1} <= cp.free_ranks
+    assert [e["ev"] for e in cp.events if e["ev"].startswith("host")] \
+        == ["host_down", "host_up"]
+
+
+def test_elastic_policy_sizes_to_the_survivors():
+    """ElasticPolicy re-places on the shrunken topology: after a host
+    loss its candidate degrees cap at the alive rank count and every
+    request still completes."""
+    t_fail = _mid_step(2, policy=ElasticPolicy())
+    inj = FailureInjector([HostDown(t_fail, 0)])
+    cp = _cp(ElasticPolicy(), injector=inj, snapshot_interval=2)
+    reqs = [_request("e0"), _request("e1", arrival=0.01)]
+    for r in reqs:
+        cp.submit(r, convert_request(r, CFG))
+    cp.run()
+    assert cp.metrics()["completed"] == 2
+    for e in cp.events:
+        if e["ev"] == "dispatch" and e["t"] >= t_fail:
+            assert not (set(e["ranks"]) & {0, 1})
+            assert len(e["ranks"]) <= 2
+
+
+# ---------------------------------------------------------------------------
+# injector determinism + artifact loss rules
+# ---------------------------------------------------------------------------
+
+def test_random_injector_is_a_pure_function_of_its_seed():
+    a = FailureInjector.random(TOPO, duration=100.0, kills=4, mttr=10.0,
+                               seed=7)
+    b = FailureInjector.random(TOPO, duration=100.0, kills=4, mttr=10.0,
+                               seed=7)
+    assert a.script == b.script
+    assert a.script        # something was generated
+    c = FailureInjector.random(TOPO, duration=100.0, kills=4, mttr=10.0,
+                               seed=8)
+    assert a.script != c.script
+
+
+def test_random_injector_respects_keep_alive():
+    topo = ClusterTopology(num_hosts=2, ranks_per_host=2)
+    inj = FailureInjector.random(topo, duration=100.0, kills=10,
+                                 mttr=None, seed=3, keep_alive=1)
+    downs = [e for e in inj.script if isinstance(e, HostDown)]
+    assert len(downs) == 1      # a second kill would leave zero hosts
+
+
+def test_injector_pop_due_is_ordered_and_consumed():
+    inj = FailureInjector([HostUp(5.0, 0), HostDown(1.0, 0)])
+    assert inj.next_time() == 1.0
+    assert [type(e).__name__ for e in inj.pop_due(2.0)] == ["HostDown"]
+    assert inj.next_time() == 5.0
+    assert inj.pop_due(10.0) and not inj.pending()
+
+
+def test_artifact_loss_rules():
+    req = _request(steps=2)
+    g = convert_request(req, CFG)
+    latent = next(a for a in g.artifacts.values()
+                  if any(f.kind == "sharded" for f in a.fields.values()))
+    embeds = next(a for a in g.artifacts.values()
+                  if a.fields and all(f.kind in ("replicated", "meta")
+                                      for f in a.fields.values()))
+    latent.materialized, latent.layout = True, LAYOUT_A
+    # sharded: ANY dead layout rank loses the artifact
+    assert artifact_lost(latent, {1}) and artifact_lost(latent, {0, 1})
+    assert not artifact_lost(latent, {2, 3})
+    # replicated: lost only when EVERY layout rank died
+    embeds.materialized, embeds.layout = True, LAYOUT_A
+    assert not artifact_lost(embeds, {0})
+    assert artifact_lost(embeds, {0, 1})
+    # partial death shrinks the replicated layout to the survivors
+    embeds.data = {0: {"embeds": np.ones(3)}, 1: {"embeds": np.ones(3)}}
+    shrink_replicated(embeds, {0})
+    assert embeds.layout.ranks == (1,) and set(embeds.data) == {1}
+
+
+# ---------------------------------------------------------------------------
+# snapshot store
+# ---------------------------------------------------------------------------
+
+def test_snapshot_store_roundtrips_bytes_through_checkpoints(tmp_path):
+    store = SnapshotStore(2, directory=tmp_path)
+    req = _request(steps=4)
+    g = convert_request(req, CFG)
+    den1 = next(t for t in g.tasks.values()
+                if t.kind == "denoise" and t.step_index == 1)
+    art = g.artifacts[den1.outputs[0]]
+    rng = np.random.default_rng(11)
+    spec = art.fields["latent"]
+    full = rng.standard_normal(spec.global_shape).astype(np.float32)
+    half = spec.global_shape[spec.shard_axis] // 2
+    art.data = {0: {"latent": full[:half], "sigma": 0.5},
+                1: {"latent": full[half:], "sigma": 0.5}}
+    art.layout, art.materialized = LAYOUT_A, True
+    assert store.due(1) and not store.due(0)
+    store.capture(den1, g, LAYOUT_A)
+
+    class _Plane:
+        num_ranks = 4
+        dead_ranks = {0, 1}
+    art.materialized, art.layout, art.data = False, None, None
+    step = store.restore(_Plane(), g, req.id)
+    assert step == 1
+    assert art.materialized and art.layout.ranks == (2,)
+    assert np.array_equal(art.data[2]["latent"], full)
+    assert art.data[2]["sigma"] == 0.5
+    store.drop(req.id)
+    assert store.restore(_Plane(), g, req.id) is None
+
+
+def test_snapshot_capture_degrades_to_metadata_without_data():
+    store = SnapshotStore(2)
+    req = _request(steps=4)
+    g = convert_request(req, CFG)
+    den1 = next(t for t in g.tasks.values()
+                if t.kind == "denoise" and t.step_index == 1)
+    art = g.artifacts[den1.outputs[0]]
+    store.capture(den1, g, LAYOUT_A)        # sim path: art.data is None
+
+    class _Plane:
+        num_ranks = 4
+        dead_ranks = {0, 1}
+    art.materialized = False
+    assert store.restore(_Plane(), g, req.id) == 1
+    assert art.materialized and art.data is None
+
+
+# ---------------------------------------------------------------------------
+# satellite: structured CollectiveTimeout end to end
+# ---------------------------------------------------------------------------
+
+def test_collective_timeout_names_the_missing_rank():
+    comm = GroupFreeComm(2, timeout=0.05)
+    desc = comm.register_group((0, 1))
+    with pytest.raises(CollectiveTimeout) as ei:
+        comm.barrier(desc, 0)       # rank 1 never shows up
+    assert ei.value.missing_ranks == (1,)
+    assert isinstance(ei.value, TimeoutError)   # legacy handlers survive
+
+
+def test_stage_get_timeout_names_the_missing_rank():
+    comm = GroupFreeComm(2, timeout=0.05)
+    desc = comm.register_group((0, 1))
+    with pytest.raises(CollectiveTimeout) as ei:
+        comm._stage_get(desc, 0, 1)
+    assert ei.value.missing_ranks == (1,)
+
+
+class _DeadPeerAdapter:
+    """Rank-0 share of every denoise collective times out on a dead
+    peer; everything else no-ops (the plane materializes outputs)."""
+
+    def execute(self, task, layout, rank, comm, graph, desc=None):
+        if task.kind == "denoise" and rank == layout.ranks[0] \
+                and layout.degree > 1:
+            raise CollectiveTimeout("peer never arrived",
+                                    missing_ranks=(layout.ranks[-1],))
+
+    def execute_packed(self, members, layout, rank, comm, desc=None):
+        raise AssertionError("not packed in this test")
+
+
+class _Deg2(Policy):
+    """Everything on ranks (0, 1): one layout for the whole chain, so
+    the no-op adapter never has to produce migratable artifact bytes."""
+    name = "deg2"
+
+    def schedule(self, view):
+        out = []
+        for t, req, g in sorted(view.ready, key=lambda x: x[0].id):
+            if all(r in view.free_ranks for r in (0, 1)):
+                out.append(Dispatch(t.id, ExecutionLayout((0, 1))))
+        return out
+
+
+def test_executor_surfaces_failed_ranks_and_plane_gives_up():
+    """A structured timeout is NOT a worker error: the completion
+    carries failed_ranks, the plane requeues up to max_task_failures
+    and then fails the request — the worker thread survives."""
+    cost = CostModel()
+    backend = ThreadBackend(_DeadPeerAdapter(), 4)
+    cp = ControlPlane(4, _Deg2(), cost, backend)
+    req = _request(steps=2)
+    cp.submit(req, convert_request(req, CFG))
+    EventLoop(cp, WallClock()).run(until=30.0)
+    backend.shutdown()
+    assert backend.errors == []             # no thread was killed
+    assert backend.timeouts                 # but the timeouts were seen
+    tf = _events(cp, "task_failed")
+    assert len(tf) == cp.max_task_failures
+    assert all(e["ranks"] == [1] for e in tf)
+    assert req.failed
+    assert [e["why"] for e in _events(cp, "request_failed")] \
+        == ["repeated-failure"]
+
+
+def test_serve_timeout_marks_unfinished_failed():
+    from repro.serving.engine import ServingEngine
+
+    class _Never(Policy):
+        name = "never"
+
+        def schedule(self, view):
+            return []
+
+    eng = ServingEngine(CFG, _Never(), 2)
+    m = eng.serve([_request("stuck", steps=2)], timeout=0.3)
+    eng.shutdown()
+    assert m["timed_out_requests"] == ["stuck"]
+    assert m["failed"] == 1 and m["completed"] == 0
+    assert eng.cp.requests["stuck"].failed
+
+
+# ---------------------------------------------------------------------------
+# cross-backend signature projection of recovery events
+# ---------------------------------------------------------------------------
+
+def test_signature_projects_recovery_events():
+    t_fail = _mid_step(3)
+    inj = FailureInjector([HostDown(t_fail, 0)])
+    cp = _cp(_HostAware(), injector=inj, snapshot_interval=2)
+    req = _request()
+    cp.submit(req, convert_request(req, CFG))
+    cp.run()
+    sig = trace_signature(cp.events)
+    kinds = {rec[0] for _, seq in sig for rec in seq}
+    for ev in ("host_down", "failout", "rollback", "snapshot",
+               "requeued", "dispatch"):
+        assert ev in kinds, f"{ev} missing from signature"
+    # global host events land in the -1 (no-request) bucket
+    assert any(idx == -1 for idx, _ in sig)

@@ -194,6 +194,53 @@ def test_worker_failure_clears_residency():
     assert (req.id, "failure") in _invalidations(cp)
 
 
+def test_partially_dead_warm_rank_set_invalidates():
+    """A residency whose warm rank-set intersects a host loss must drop
+    (DESIGN.md §13): a hit at the old layout would dispatch onto a dead
+    rank, and the migration planner may pick a dead source.  Residencies
+    fully on the survivors keep their warmth."""
+    from repro.core import failures as fd
+    from repro.core.trajectory import ClusterTopology
+    cost = CostModel()
+    cp = ControlPlane(ClusterTopology(num_hosts=2, ranks_per_host=2),
+                      _Null(), cost, SimBackend(cost), cache_interval=10)
+    reqs = [_request(rid, steps=4) for rid in ("hurt", "safe")]
+    layouts = {"hurt": ExecutionLayout((1, 2)),    # spans the dead host
+               "safe": ExecutionLayout((2, 3))}
+    for r in reqs:
+        cp.submit(r, convert_request(r, CFG))
+        g = cp.graphs[r.id]
+        enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+        assert cp.apply(Dispatch(enc.id, ExecutionLayout((2,))))
+        _pump(cp, 1)
+        d0 = [t for t in g.ready_tasks() if t.kind == "denoise"][0]
+        assert cp.apply(Dispatch(d0.id, layouts[r.id]))
+        _pump(cp, 1)
+    assert set(cp.cache.entries) == {"hurt", "safe"}
+    fd.host_down(cp, 0)         # ranks {0, 1} die; "hurt" is warm on (1, 2)
+    assert set(cp.cache.entries) == {"safe"}
+    assert ("hurt", "host-down") in _invalidations(cp)
+    # the loss also rolled "hurt" back (its latents lived on the dead
+    # layout, so encode re-runs first); the re-served denoise step on
+    # the survivors must REFRESH — a stale hit against the dead warm
+    # set would read a dead rank
+    enc = [t for t in cp.graphs["hurt"].ready_tasks()][0]
+    assert enc.kind == "encode"
+    assert cp.apply(Dispatch(enc.id, ExecutionLayout((2,))))
+    _pump(cp, 1)
+    d0 = [t for t in cp.graphs["hurt"].ready_tasks()
+          if t.kind == "denoise"][0]
+    assert d0.step_index == 0
+    assert cp.apply(Dispatch(d0.id, ExecutionLayout((2, 3))))
+    assert d0.meta["cache"]["mode"] == "refresh"
+    _pump(cp, 1)                # free (2, 3) again
+    # the untouched residency still hits
+    d1 = [t for t in cp.graphs["safe"].ready_tasks()
+          if t.kind == "denoise"][0]
+    assert cp.apply(Dispatch(d1.id, ExecutionLayout((2, 3))))
+    assert d1.meta["cache"]["mode"] == "hit"
+
+
 def test_pack_member_preempt_invalidates_every_member():
     """A pack is one device slice with one set of collectives: evicting
     any member evicts the pack, and EVERY member's cache residency must

@@ -8,13 +8,14 @@ import numpy as np
 import pytest
 
 from repro.configs.dit_models import DIT_IMAGE
+from repro.core import failures as fd
 from repro.core.cost_model import CostModel, pack_scale
 from repro.core.gfc import GroupFreeComm
 from repro.core.policies import PackingPolicy, make_policy
 from repro.core.scheduler import (ControlPlane, Dispatch, PackedDispatch,
                                   Policy, Preempt)
 from repro.core.simulator import SimBackend
-from repro.core.trajectory import ExecutionLayout, Request
+from repro.core.trajectory import ClusterTopology, ExecutionLayout, Request
 from repro.diffusion.adapters import convert_request
 
 
@@ -178,6 +179,44 @@ def test_failed_pack_member_does_not_free_shared_ranks():
         cp.on_completion(c)
     assert {0, 1} <= cp.free_ranks
     assert tb.state == "done" and ta.state == "pending"
+
+
+def test_host_loss_fails_out_the_whole_pack_and_survivors_finish():
+    """A HostDown under one member's ranks evicts the WHOLE pack
+    (DESIGN.md §13): every member fails out exactly once, the dead ranks
+    never return to the free pool, and the requeued members complete on
+    the surviving host."""
+    cost = CostModel()
+    cp = ControlPlane(ClusterTopology(num_hosts=2, ranks_per_host=2),
+                      _Null(), cost, SimBackend(cost))
+    _submit(cp, _request("a"), _request("b"))
+    _drain_encodes(cp)
+    ta, tb = _ready_denoise(cp, "a"), _ready_denoise(cp, "b")
+    assert cp.apply(PackedDispatch((ta.id, tb.id),
+                                   ExecutionLayout((0, 1))))
+    fd.host_down(cp, 0)
+    assert cp.preempting == {ta.id: "failout", tb.id: "failout"}
+    fouts = [e for e in cp.events if e["ev"] == "failout"]
+    assert len(fouts) == 2 and all("pack" in e for e in fouts)
+    for c in cp.backend.poll():
+        cp.on_completion(c)
+    # drained to the boundary: both members requeued once, outputs gone
+    for t in (ta, tb):
+        assert t.state == "pending" and t.layout is None
+    assert sum(1 for e in cp.events if e["ev"] == "requeued") == 2
+    assert cp.free_ranks == {2, 3} and cp.dead_ranks == {0, 1}
+    # the encode output on dead rank 0 was lost too: repair rolled both
+    # requests back and the survivors carry them to completion
+    assert {e["req"] for e in cp.events if e["ev"] == "rollback"} \
+        == {"a", "b"}
+    cp.policy = make_policy("fcfs-sp1", 4)
+    cp.run()
+    assert cp.metrics()["completed"] == 2
+    t_loss = next(e["t"] for e in cp.events if e["ev"] == "host_down")
+    for e in cp.events:
+        if e["ev"] == "dispatch" and e["t"] > t_loss:
+            assert not set(e["ranks"]) & {0, 1}, \
+                "post-loss dispatch touched a dead rank"
 
 
 def test_pack_fanout_respects_superseded_dispatch_guard():
