@@ -25,6 +25,14 @@ probe holds the stale-reuse pixel error inside the §11 budget and
 asserts ``cache_interval=1`` bit-exactness (``--only cache``; CI gates
 it per PR).
 
+And the hybrid-shape workload (DESIGN.md §14): a guided M-image SLO
+stream (classifier-free guidance doubles the denoise work) plus a
+best-effort video background on the simulated 2-host x 4-rank cluster;
+deadlines are set against the split ``cfg2 x sp2`` service rate, so the
+shape-searching ``elastic-hybrid`` policy must beat scalar ``elastic``
+on throughput AND SLO violation rate while actually dispatching cfg2
+shapes (``--only hybrid``; CI gates it per PR).
+
 And the failure-domain chaos workload (DESIGN.md §13): the same seeded
 whole-host kill script replayed against a recovering plane (failout +
 snapshot rollback + re-place on survivors) and a blind baseline that
@@ -239,6 +247,45 @@ def _run_multi_host(out: dict):
         out[f"multi|host|{pol}"] = m
 
 
+def _run_hybrid(out: dict):
+    """Hybrid-shape workload (DESIGN.md §14): guided M-image SLO stream
+    + best-effort unguided video background on the 2-host x 4-rank
+    cluster.  Both legs run the same elastic machinery; only the shape
+    search differs.  Acceptance: elastic-hybrid beats scalar elastic on
+    throughput AND SLO violation rate, and actually serves cfg2
+    shapes."""
+    from repro.diffusion.workloads import (hybrid_trace,
+                                           standalone_service_time)
+    cfg_of = {"dit-image": DIT_IMAGE, "dit-video": DIT_VIDEO}
+    for pol in ("elastic", "elastic-hybrid"):
+        cost = CostModel()
+        cp = ControlPlane(MH_TOPO, make_policy(pol, MH_TOPO.num_ranks),
+                          cost, SimBackend(cost, jitter=0.05))
+        trace = hybrid_trace(CostModel(), duration=240, load=0.9,
+                             num_ranks=MH_TOPO.num_ranks, steps=STEPS,
+                             seed=37)
+        for r in trace:
+            cp.submit(r, convert_request(r, cfg_of[r.model]))
+        cp.run()
+        base = CostModel()
+        timeouts = {
+            "dit-image": 12 * standalone_service_time(
+                "dit-image", "M", base, STEPS),
+            "dit-video": 12 * standalone_service_time(
+                "dit-video", "S", base, STEPS),
+        }
+        m = _metrics_with_timeout(cp, timeouts)
+        shapes: dict[str, int] = {}
+        for e in cp.events:
+            if e["ev"] == "dispatch" and e["kind"] == "denoise":
+                c = e.get("cfg", 1)
+                sp = len(e["ranks"]) // c
+                key = f"cfg{c}x sp{sp}" if c > 1 else f"sp{sp}"
+                shapes[key] = shapes.get(key, 0) + 1
+        m["denoise_dispatches_by_shape"] = dict(sorted(shapes.items()))
+        out[f"hybrid|mixed|{pol}"] = m
+
+
 CHAOS_SNAP_INTERVAL = 5     # denoise snapshot cadence of the recovery leg
 
 
@@ -291,11 +338,12 @@ def _run_chaos(out: dict):
 
 def run(only: str | None = None) -> dict:
     out = {}
-    if only in ("small-burst", "multi-host", "cache", "chaos"):
+    if only in ("small-burst", "multi-host", "cache", "chaos", "hybrid"):
         {"small-burst": _run_small_burst,
          "multi-host": _run_multi_host,
          "cache": _run_cache,
-         "chaos": _run_chaos}[only](out)
+         "chaos": _run_chaos,
+         "hybrid": _run_hybrid}[only](out)
         RESULTS.mkdir(exist_ok=True)
         existing = {}
         path = RESULTS / "policies_e2e.json"
@@ -308,6 +356,7 @@ def run(only: str | None = None) -> dict:
     _run_multi_host(out)
     _run_cache(out)
     _run_chaos(out)
+    _run_hybrid(out)
     _run_mixed(out)
     for model_cfg in (DIT_IMAGE, DIT_VIDEO):
         model = model_cfg.name
@@ -390,7 +439,69 @@ def rows(data: dict):
     out.extend(multi_host_rows(data))
     out.extend(cache_rows(data))
     out.extend(chaos_rows(data))
+    out.extend(hybrid_rows(data))
     return out
+
+
+def hybrid_rows(data: dict):
+    """Hybrid-shape headline numbers (accepts partial --only runs)."""
+    out = []
+    if "hybrid|mixed|elastic" not in data:
+        return out
+    for pol in ("elastic", "elastic-hybrid"):
+        m = data.get(f"hybrid|mixed|{pol}")
+        if m is None:
+            continue
+        shapes = m.get("denoise_dispatches_by_shape", {})
+        split = sum(v for k, v in shapes.items() if k.startswith("cfg"))
+        out.append((f"policies.hybrid.mixed.{pol}.mean_lat",
+                    m["mean_latency_s"] * 1e6,
+                    f"slo={m['slo_attainment']:.3f}"
+                    f";thr={m['throughput_rps']:.4f}"
+                    f";split_dispatches={split}"))
+    hyb = data["hybrid|mixed|elastic-hybrid"]
+    sca = data.get("hybrid|mixed|elastic")
+    if sca and sca["throughput_rps"]:
+        out.append(("policies.hybrid.hybrid_vs_scalar.throughput_x",
+                    hyb["throughput_rps"] / sca["throughput_rps"] * 1e6,
+                    f"hybrid={hyb['throughput_rps']:.4f}"
+                    f";scalar={sca['throughput_rps']:.4f};accept>1x"))
+        out.append(("policies.hybrid.hybrid_vs_scalar.slo_viol_delta",
+                    ((1 - hyb["slo_attainment"])
+                     - (1 - sca["slo_attainment"])) * 1e6,
+                    f"hybrid_viol={1 - hyb['slo_attainment']:.3f}"
+                    f";scalar_viol={1 - sca['slo_attainment']:.3f}"
+                    f";accept<0"))
+    return out
+
+
+def check_hybrid(data: dict) -> list[str]:
+    """Hybrid-shape acceptance gate (CI fails on regression): on the
+    guided mixed workload the shape-searching elastic-hybrid policy must
+    beat scalar elastic on throughput AND SLO violation rate, and must
+    actually dispatch cfg2 shapes (a hybrid policy that never splits is
+    measuring nothing)."""
+    problems = []
+    hyb = data["hybrid|mixed|elastic-hybrid"]
+    sca = data["hybrid|mixed|elastic"]
+    if hyb["throughput_rps"] <= sca["throughput_rps"]:
+        problems.append(
+            f"hybrid throughput {hyb['throughput_rps']:.4f} <= scalar "
+            f"{sca['throughput_rps']:.4f} (accept: strictly higher)")
+    if (1 - hyb["slo_attainment"]) >= (1 - sca["slo_attainment"]):
+        problems.append(
+            f"hybrid SLO violations {1 - hyb['slo_attainment']:.3f} >= "
+            f"scalar {1 - sca['slo_attainment']:.3f} "
+            f"(accept: strictly lower)")
+    shapes = hyb.get("denoise_dispatches_by_shape", {})
+    if not any(k.startswith("cfg") for k in shapes):
+        problems.append("hybrid leg dispatched no cfg2 shape — the "
+                        "shape search never engaged")
+    if any(k.startswith("cfg")
+           for k in sca.get("denoise_dispatches_by_shape", {})):
+        problems.append("scalar leg dispatched a cfg shape — the "
+                        "baseline is not scalar")
+    return problems
 
 
 def chaos_rows(data: dict):
@@ -615,7 +726,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--only",
                     choices=["small-burst", "multi-host", "cache",
-                             "chaos"],
+                             "chaos", "hybrid"],
                     default=None,
                     help="run just one workload slice (CI legs)")
     args = ap.parse_args()
@@ -628,6 +739,8 @@ if __name__ == "__main__":
         table = cache_rows(d)
     elif args.only == "chaos":
         table = chaos_rows(d)
+    elif args.only == "hybrid":
+        table = hybrid_rows(d)
     else:
         table = multi_host_rows(d)
     for name, us, derived in table:
@@ -640,6 +753,8 @@ if __name__ == "__main__":
         problems = check_cache(d)
     elif args.only == "chaos":
         problems = check_chaos(d)
+    elif args.only == "hybrid":
+        problems = check_hybrid(d)
     else:
         problems = []
     if args.only is not None:

@@ -14,12 +14,15 @@ scenario (repro.serving.topology_demo, DESIGN.md §10 — hierarchical
 GFC + cross-host reallocation), AND the feature-cache scenario
 (repro.serving.cache_demo, DESIGN.md §11 — stale-KV reuse with a
 mid-trace same-degree Reallocate migrating the warm cache), AND the
-failure-domain scenario (repro.serving.failure_demo, DESIGN.md §13 — a
-scripted whole-host loss with failout, snapshot rollback, and degraded
+hybrid-shape scenario (repro.serving.hybrid_demo, DESIGN.md §14 — a
+guided request through batched sp4, a same-rank reshape, and cfg2 x sp2
+split branches with a per-step merge exchange), AND the failure-domain
+scenario (repro.serving.failure_demo, DESIGN.md §13 — a scripted
+whole-host loss with failout, snapshot rollback, and degraded
 re-placement) on both backends and checks the canonical control-plane
 decision traces — which canonicalize PackedDispatch membership, the
-plane's cache hit/refresh/migrate calls, and the recovery event
-sequence — are IDENTICAL.
+plane's cache hit/refresh/migrate calls, the cfg shape dimension, and
+the recovery event sequence — are IDENTICAL.
 """
 from __future__ import annotations
 
@@ -174,6 +177,26 @@ def _cache_fidelity(cfg) -> dict:
     }
 
 
+def _hybrid_fidelity(cfg) -> dict:
+    """Hybrid-shape fidelity (DESIGN.md §14): the scripted batched-sp4
+    -> reshape -> cfg2 x sp2 chain must trace identically — cfg
+    dimension included — on the simulator and the thread runtime, the
+    split pixels must be bit-identical to the shard-size-matched
+    batched-CFG control, and shape-search-off must be byte-identical to
+    scalar elastic."""
+    from repro.serving.hybrid_demo import run_demo
+    d = run_demo(cfg)
+    return {
+        "trace_match": d["trace_match"],
+        "pixels_match": d["pixels_match"],
+        "scalar_identical": d["scalar_identical"],
+        "timeline": d["wall"]["timeline"],
+        "sim_migrated_bytes": d["sim"]["migrated_bytes"],
+        "real_completed": d["wall"]["metrics"]["completed"],
+        "sim_completed": d["sim"]["metrics"]["completed"],
+    }
+
+
 def _failure_fidelity(cfg) -> dict:
     """Failure-domain fidelity (DESIGN.md §13): the scripted whole-host
     loss scenario — failout, snapshot rollback, re-place on survivors —
@@ -199,6 +222,7 @@ def run() -> dict:
            "packing_trace": _packing_fidelity(cfg),
            "topology_trace": _topology_fidelity(cfg),
            "cache_trace": _cache_fidelity(cfg),
+           "hybrid_trace": _hybrid_fidelity(cfg),
            "failure_trace": _failure_fidelity(cfg)}
     for pol_name in POLICIES:
         cost = _profile_costs(cfg)
@@ -257,6 +281,15 @@ def rows(data: dict):
                         f"identical_traces={m['trace_match']}"
                         f";pixels_bitexact={m['pixels_match']}"
                         f";hier={m['hierarchical_collectives']}"))
+            continue
+        if pol == "hybrid_trace":
+            ok = m["trace_match"] and m["pixels_match"] \
+                and m["scalar_identical"]
+            out.append(("sim_fidelity.hybrid.trace_match",
+                        1e6 if ok else 0.0,
+                        f"identical_traces={m['trace_match']}"
+                        f";split_pixels_bitexact={m['pixels_match']}"
+                        f";search_off_scalar={m['scalar_identical']}"))
             continue
         if pol == "failure_trace":
             ok = m["trace_match"] and m["pixels_match"]

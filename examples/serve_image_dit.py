@@ -16,6 +16,13 @@ SP1, where there is no collective for the cache to skip.
 ``--use-pallas`` routes the model hot path through the fused Pallas
 kernel layer (DESIGN.md §12) — flash attention, fused adaLN, and (with
 caching on) the §11 cache-splice kernel; composes with both flags above.
+``--cfg-split`` serves GUIDED requests (classifier-free guidance) under
+the hybrid shape-searching policy (DESIGN.md §14): each denoise step
+runs cond/uncond branches — batched through one group, or split as a
+``cfg2 x sp`` shape with one merge exchange per step, whichever the
+shape-keyed cost model prices cheaper; composes with ``--use-pallas``
+and ``--cache-interval`` (guided steps bypass the cache; unguided
+requests in the same mix still hit it).
 """
 import argparse
 
@@ -34,11 +41,12 @@ def _policy(name: str, num_ranks: int, min_degree: int):
              if min_degree <= d <= num_ranks]
     if name == "edf":
         return EDFPolicy(candidate_degrees=cands)
-    if name in ("elastic", "elastic-cache"):
+    if name in ("elastic", "elastic-cache", "elastic-hybrid"):
         return ElasticPolicy(candidate_degrees=cands,
-                             cache_affinity=name == "elastic-cache")
-    raise SystemExit(f"--min-degree supports edf/elastic/elastic-cache, "
-                     f"not {name!r}")
+                             cache_affinity=name == "elastic-cache",
+                             hybrid=name == "elastic-hybrid")
+    raise SystemExit(f"--min-degree supports edf/elastic/elastic-cache/"
+                     f"elastic-hybrid, not {name!r}")
 
 
 def main():
@@ -57,7 +65,19 @@ def main():
     ap.add_argument("--use-pallas", action="store_true",
                     help="serve through the fused Pallas kernel layer "
                          "(DESIGN.md §12; interpret mode off-TPU)")
+    ap.add_argument("--cfg-split", action="store_true",
+                    help="serve guided requests (classifier-free "
+                         "guidance) under the hybrid shape-searching "
+                         "policy (DESIGN.md §14)")
     args = ap.parse_args()
+
+    if args.cfg_split:
+        if args.policy == "edf":
+            args.policy = "elastic-hybrid"  # shapes need a shape searcher
+        # floor the degree at a branch pair: at degree 1 there is
+        # nothing to split, and at these reduced token counts degree 1
+        # legitimately wins on cost — the flag is here to SHOW shapes
+        args.min_degree = max(args.min_degree, 2)
 
     cfg = DIT_IMAGE.reduced()
     if args.use_pallas:
@@ -75,12 +95,17 @@ def main():
         requests.append(Request(
             id=f"req-{i}", model="dit-image", height=res, width=res,
             frames=1, steps=4, arrival=i * 0.3,
-            deadline=i * 0.3 + 120.0, size_class=cls))
+            deadline=i * 0.3 + 120.0, size_class=cls,
+            # alternate guided/unguided under --cfg-split: the guided
+            # half exercises shapes, the rest the scalar (and cached)
+            # paths in the same mix
+            guidance=4.0 if args.cfg_split and i % 2 == 0 else None))
 
     label = f"{args.policy} policy" + (
         f", cache_interval={args.cache_interval}"
         if args.cache_interval else ", uncached") + (
-        ", pallas fast path" if args.use_pallas else "")
+        ", pallas fast path" if args.use_pallas else "") + (
+        ", cfg-split guidance" if args.cfg_split else "")
     print(f"serving {len(requests)} requests on 4 ranks ({label})...")
     metrics = engine.serve(requests, timeout=600)
     for k, v in metrics.items():
@@ -94,6 +119,16 @@ def main():
     elastic = {len(ev["ranks"]) for ev in engine.cp.events
                if ev["ev"] == "dispatch"}
     print(f"group sizes used across tasks: {sorted(elastic)}")
+    if args.cfg_split:
+        shapes = {}
+        for ev in engine.cp.events:
+            if ev["ev"] == "dispatch" and ev["kind"] == "denoise":
+                c = ev.get("cfg", 1)
+                sp = len(ev["ranks"]) // c
+                key = f"cfg{c}x sp{sp}" if c > 1 else f"sp{sp}"
+                shapes[key] = shapes.get(key, 0) + 1
+        print("denoise shapes dispatched: "
+              + ", ".join(f"{k} x{v}" for k, v in sorted(shapes.items())))
     if args.cache_interval:
         hits = sum(1 for ev in engine.cp.events if ev["ev"] == "dispatch"
                    and str(ev.get("cache", "")).startswith("hit"))

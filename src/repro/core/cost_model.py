@@ -65,7 +65,8 @@ _INTER_COST_FACTOR = 4.0
 
 
 def sp_efficiency(degree: int, tokens: int, span: int = 1,
-                  inter_factor: float = _INTER_COST_FACTOR) -> float:
+                  inter_factor: float = _INTER_COST_FACTOR,
+                  comm_scale: float = 1.0) -> float:
     """Parallel efficiency of sequence parallelism (Fig. 3b shape):
     large token counts amortize collectives; small ones don't.
 
@@ -73,10 +74,15 @@ def sp_efficiency(degree: int, tokens: int, span: int = 1,
     term splits into an intra-host component and an inter-host component
     — the (span-1)/(degree-1) fraction of ring edges that cross hosts
     pays ``inter_factor`` x the intra-host byte cost.
+
+    ``comm_scale`` multiplies the collective payload: a batched-CFG
+    guided step (DESIGN.md §14) gathers B=2 rows of KV per layer, so its
+    collective term doubles while compute scales separately.
     """
     if degree == 1:
         return 1.0
     comm = 0.35 * (degree - 1) * (4096 / max(tokens, 256)) ** 0.5
+    comm *= comm_scale
     if span > 1:
         inter_frac = min(span - 1, degree - 1) / (degree - 1)
         comm *= 1.0 + (inter_factor - 1.0) * inter_frac
@@ -119,15 +125,24 @@ class CostModel:
 
     @staticmethod
     def _key(model: str, kind: str, tokens: int, degree: int,
-             span: int = 1, cached: bool = False) -> str:
+             span: int = 1, cached: bool = False, cfg: int = 0) -> str:
         """Span-1 uncached keys stay byte-identical to the pre-topology
         format so single-host measurements (and saved tables) are
-        reused; cache-hit cells append ``|c`` (DESIGN.md §11)."""
+        reused; cache-hit cells append ``|c`` (DESIGN.md §11).  Guided
+        shapes append ``|cfg{c}`` (DESIGN.md §14): ``cfg=0`` means
+        unguided (key unchanged), ``cfg=1`` a batched-CFG step on one
+        group, ``cfg>=2`` a split-branch step — each calibrates its own
+        cell so guided durations (2x the work) never poison the unguided
+        calibration the policies compare against."""
         bucket = CostModel._bucket(tokens)
         base = f"{model}|{kind}|{bucket}|{degree}"
         if span > 1:
             base += f"|s{span}"
-        return base + "|c" if cached else base
+        if cached:
+            base += "|c"
+        if cfg >= 1:
+            base += f"|cfg{cfg}"
+        return base
 
     @staticmethod
     def _pack_key(model: str, kind: str, tokens: int, degree: int,
@@ -144,12 +159,27 @@ class CostModel:
     # ------------------------------------------------------------------
     def estimate(self, model: str, kind: str, tokens: int,
                  degree: int, span: int = 1,
-                 cached: bool = False) -> float:
-        key = self._key(model, kind, tokens, degree, span, cached)
+                 cached: bool = False, cfg: int = 0) -> float:
+        key = self._key(model, kind, tokens, degree, span, cached, cfg)
         if key in self.calibration:
             return self.calibration[key]
         if key in self.table:
             return self.table[key]
+        if cfg >= 1:
+            # uncalibrated shape cell: scale the (measured-where-
+            # possible) unguided estimate by the analytical shape ratio
+            # — the ratio is exactly the doubled work plus the changed
+            # collective structure (DESIGN.md §14).  Interpolation never
+            # crosses cfg cells: each shape calibrates independently.
+            base = self.estimate(model, kind, tokens, degree, span,
+                                 cached)
+            ref = self.analytical(model, kind, tokens, degree, span,
+                                  cached)
+            if ref > 0:
+                return base * (self.analytical(model, kind, tokens,
+                                               degree, span, cached,
+                                               cfg) / ref)
+            return base
         if cached:
             # scale the best uncached estimate (measured where possible)
             # through the analytical cached/uncached ratio — the ratio
@@ -177,7 +207,7 @@ class CostModel:
 
     def analytical(self, model: str, kind: str, tokens: int,
                    degree: int, span: int = 1,
-                   cached: bool = False) -> float:
+                   cached: bool = False, cfg: int = 0) -> float:
         factor = self._inter_factor()
         if kind == "encode":
             return _ENCODE_COST
@@ -188,6 +218,31 @@ class CostModel:
         # denoise: attention ~ tokens^2/flops but MLP dominates until long
         scale = 2.2 if model.endswith("video") else 1.0
         work = scale * (tokens / 4096) ** 1.35
+        if cfg >= 2 and kind == "denoise":
+            # split-CFG (DESIGN.md §14): each branch runs its guidance
+            # row B=1 over sp ranks — the SP collective term shrinks to
+            # the branch (no cross-branch bytes until the merge), and a
+            # single cheap merge exchange of the local velocity shard
+            # joins branch peers once per step.  SP stays host-tight:
+            # branch span is ceil(span/cfg); a CFG pair that straddles
+            # hosts pays the inter factor only on the merge.
+            sp = max(degree // cfg, 1)
+            branch_span = max(1, -(-span // cfg))
+            eff = 1.0 if cached else sp_efficiency(sp, tokens,
+                                                   branch_span, factor)
+            merge = 0.01 * (cfg - 1) * (tokens / sp / 4096) ** 0.5
+            if span > branch_span:
+                merge *= factor
+            return max((2.0 / cfg) * work / (sp * eff), 1e-4) \
+                + merge + 0.004 * (degree > 1)
+        if cfg == 1 and kind == "denoise":
+            # batched-CFG on one group: 2x the rows through one forward,
+            # shared collectives — but the KV gather carries B=2, so the
+            # collective payload doubles (comm_scale=2)
+            eff = 1.0 if cached else sp_efficiency(degree, tokens, span,
+                                                   factor, comm_scale=2.0)
+            return max(2.0 * work / (degree * eff), 1e-4) \
+                + 0.004 * (degree > 1)
         # a cache-hit step (DESIGN.md §11) runs no KV all-gather: the
         # collective term vanishes (efficiency 1.0 at any span) while
         # compute still shards and the multi-rank dispatch overhead stays
@@ -295,11 +350,13 @@ class CostModel:
 
     # ------------------------------------------------------------------
     def observe(self, model: str, kind: str, tokens: int, degree: int,
-                seconds: float, span: int = 1, cached: bool = False):
+                seconds: float, span: int = 1, cached: bool = False,
+                cfg: int = 0):
         """Online calibration from measured durations (EMA); spanning
-        layouts calibrate their own span-keyed cell (DESIGN.md §10), and
-        cache-hit steps their own ``|c`` cell (DESIGN.md §11)."""
-        key = self._key(model, kind, tokens, degree, span, cached)
+        layouts calibrate their own span-keyed cell (DESIGN.md §10),
+        cache-hit steps their own ``|c`` cell (DESIGN.md §11), and
+        guided shapes their own ``|cfg{c}`` cell (DESIGN.md §14)."""
+        key = self._key(model, kind, tokens, degree, span, cached, cfg)
         old = self.calibration.get(key)
         self.calibration[key] = (seconds if old is None
                                  else self.ema * seconds +
@@ -322,7 +379,8 @@ class CostModel:
 
     # ------------------------------------------------------------------
     def request_remaining(self, model: str, graph, degree: int = 1,
-                          span: int = 1, cache_interval: int = 1) -> float:
+                          span: int = 1, cache_interval: int = 1,
+                          cfg: int = 0) -> float:
         """Remaining trajectory work of a request at `degree` (for SRTF).
 
         With ``cache_interval > 1`` the denoise chain is priced as the
@@ -330,11 +388,23 @@ class CostModel:
         window, ``interval - 1`` cache hits — the steady-state rate of a
         request whose placement holds still.  Degree-1 steps have no
         collective to skip, so the mixture only applies at degree > 1.
+
+        Guided requests (DESIGN.md §14) auto-price their denoise steps
+        at the batched-CFG cell (``cfg=1``) when the caller passed no
+        shape — scalar policies then see the honest 2x work without
+        knowing shapes exist; pass ``cfg>=2`` to price a split shape.
+        Guided steps bypass the feature cache, so no mixture applies.
         """
+        if cfg == 0 and getattr(graph.request, "guidance", None) \
+                is not None:
+            cfg = 1
         total = 0.0
         for t in graph.remaining_tasks():
             tok = t.meta.get("tokens", 4096)
-            if t.kind == "denoise" and cache_interval > 1 and degree > 1:
+            if t.kind == "denoise" and cfg >= 1:
+                total += self.estimate(model, t.kind, tok, degree, span,
+                                       cfg=cfg)
+            elif t.kind == "denoise" and cache_interval > 1 and degree > 1:
                 full = self.estimate(model, t.kind, tok, degree, span)
                 hit = self.estimate(model, t.kind, tok, degree, span,
                                     cached=True)

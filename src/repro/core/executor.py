@@ -18,7 +18,8 @@ from dataclasses import dataclass
 from typing import Any, Optional
 
 from repro.core.gfc import CollectiveTimeout, GroupFreeComm
-from repro.core.migration import execute_migration, plan_migration
+from repro.core.migration import (execute_migration, layout_moved,
+                                  plan_migration)
 from repro.core.scheduler import Completion
 from repro.core.trajectory import (ExecutionLayout, RequestGraph,
                                    TrajectoryTask)
@@ -159,8 +160,8 @@ class ThreadBackend:
         snapshot slots a refresh gather will fill."""
         for aid in task.inputs:
             art = graph.artifacts[aid]
-            if art.data is not None and art.layout is not None and \
-                    art.layout.ranks != layout.ranks:
+            if art.data is not None and \
+                    layout_moved(art.layout, layout):
                 entries = plan_migration(art.fields, art.layout, layout)
                 execute_migration(self.comm, art, layout, entries)
         stamp = task.meta.get("cache")
@@ -187,8 +188,13 @@ class ThreadBackend:
         if not hasattr(self, "t0"):
             self.t0 = time.monotonic()
         self._prepare_task(task, layout, graph)
-        # the control plane creates ONE descriptor all ranks share (§4.3)
-        desc = self.comm.register_group(layout.ranks)
+        # the control plane creates ONE descriptor all ranks share (§4.3);
+        # CFG shapes register their per-dimension groups together
+        # (DESIGN.md §14) so branch and merge gids match across ranks
+        if getattr(layout, "cfg", 1) > 1:
+            desc = self.comm.register_shape(layout.ranks, layout.cfg)
+        else:
+            desc = self.comm.register_group(layout.ranks)
         seq = task.meta.get("_seq", 0)
         with self._lock:
             self._pending[(task.id, seq)] = {"done": 0}

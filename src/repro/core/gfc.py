@@ -61,6 +61,21 @@ class GroupDescriptor:
         return len(self.ranks)
 
 
+@dataclass(frozen=True)
+class ShapeGroups:
+    """Per-dimension groups of one parallelism shape (DESIGN.md §14).
+
+    ``full`` spans every rank of the layout; ``branches[b]`` is CFG
+    branch ``b``'s SP group (all intra-branch collectives run here);
+    ``merge[i]`` joins branch-local index ``i`` of every branch — the
+    one exchange per denoise step that combines cond/uncond velocities.
+    Registered together (one call per dispatch) so all member ranks
+    share gids."""
+    full: GroupDescriptor
+    branches: tuple[GroupDescriptor, ...]
+    merge: tuple[GroupDescriptor, ...]
+
+
 @dataclass
 class _Slot:
     token: Optional[tuple] = None
@@ -161,6 +176,24 @@ class GroupFreeComm:
         self.stats["registrations"] += 1
         self.stats["reg_seconds"] += time.perf_counter() - t0
         return desc
+
+    def register_shape(self, ranks: tuple[int, ...],
+                       cfg: int = 1) -> ShapeGroups:
+        """Register the per-dimension groups of a ``(cfg x sp)`` shape
+        (DESIGN.md §14): still metadata-only — one descriptor per
+        dimension slice, formed in a fixed order (full, branches by
+        index, merge by branch-local index) so every member rank sees
+        identical gids."""
+        ranks = tuple(ranks)
+        assert cfg >= 1 and len(ranks) % cfg == 0
+        sp = len(ranks) // cfg
+        full = self.register_group(ranks)
+        branches = tuple(self.register_group(ranks[b * sp:(b + 1) * sp])
+                         for b in range(cfg))
+        merge = tuple(self.register_group(
+            tuple(ranks[b * sp + i] for b in range(cfg)))
+            for i in range(sp)) if cfg > 1 else ()
+        return ShapeGroups(full=full, branches=branches, merge=merge)
 
     # ------------------------------------------------------------------
     # Algorithm 1: per-edge flip agreement
@@ -318,13 +351,23 @@ class GroupFreeComm:
         self._prune(desc, epoch)
         return parts
 
-    def _all_gather_hier(self, desc: GroupDescriptor, rank: int,
-                         shard: np.ndarray, axis: int) -> np.ndarray:
+    def _hier_parts(self, desc: GroupDescriptor, rank: int,
+                    payload) -> dict:
+        """Two-stage (intra-host gather -> leader exchange -> intra-host
+        broadcast) gather of arbitrary per-rank payloads; returns the
+        rank -> payload mapping.  Every hierarchical collective
+        (all_gather / all_to_all / all_reduce) is this parts-gather plus
+        a LOCAL combine executed in ``desc.ranks`` order, which is what
+        keeps each op bit-exact versus its flat path.  The memoized plan
+        is keyed by the exact ranks tuple, so a group shrunken by dead
+        ranks (DESIGN.md §13) builds its own plan — a host reduced to
+        one survivor still gets a correct (singleton) local group, and a
+        group that no longer spans hosts never reaches this path."""
         plan = self._hier_plan(desc)
         host = self.topology.host_of(rank)
         local = plan["local"][host]
         # stage 1: intra-host gather of this host's parts
-        parts = self._gather_parts(local, rank, shard)
+        parts = self._gather_parts(local, rank, payload)
         # stage 3 epoch is read BEFORE the stage-2 barrier advances it
         epoch3 = self._epoch.get((rank, local.gid), 0)
         if rank == local.ranks[0]:
@@ -343,6 +386,11 @@ class GroupFreeComm:
         self._prune(local, epoch3)
         with self._cv:
             self.stats["hierarchical"] += 1
+        return out
+
+    def _all_gather_hier(self, desc: GroupDescriptor, rank: int,
+                         shard: np.ndarray, axis: int) -> np.ndarray:
+        out = self._hier_parts(desc, rank, shard)
         return np.concatenate([out[r] for r in desc.ranks], axis=axis)
 
     # ------------------------------------------------------------------
@@ -363,17 +411,34 @@ class GroupFreeComm:
     def all_to_all(self, desc: GroupDescriptor, rank: int,
                    shards: list[np.ndarray]) -> list[np.ndarray]:
         assert len(shards) == desc.size
+        my_idx = desc.local_index(rank)
+        if self._spans_hosts(desc):
+            # hierarchical: each rank's destined-shards list rides the
+            # two-stage parts-gather (host block crosses the fabric
+            # once); the local pick-my-column is identical to flat
+            out = self._hier_parts(desc, rank,
+                                   [np.asarray(s) for s in shards])
+            return [out[p][my_idx] for p in desc.ranks]
         epoch = self._epoch.get((rank, desc.gid), 0)
         self._stage_put(desc, epoch, rank,
                         [np.asarray(s) for s in shards])
         self.barrier(desc, rank)
-        my_idx = desc.local_index(rank)
         out = [self._stage_get(desc, epoch, p)[my_idx] for p in desc.ranks]
         self._prune(desc, epoch)
         return out
 
     def all_reduce(self, desc: GroupDescriptor, rank: int,
                    x: np.ndarray, op: str = "sum") -> np.ndarray:
+        if self._spans_hosts(desc):
+            # hierarchical parts-gather, then the SAME local combine as
+            # the flat path — np.stack in desc.ranks order — so the fp32
+            # association order (and therefore every bit) is unchanged.
+            # Leaders exchanging partial sums would be cheaper but not
+            # bit-exact; trace-identity is this repo's verification tool.
+            out = self._hier_parts(desc, rank, np.asarray(x))
+            acc = np.stack([out[p] for p in desc.ranks])
+            return {"sum": acc.sum(0), "max": acc.max(0),
+                    "mean": acc.mean(0)}[op]
         epoch = self._epoch.get((rank, desc.gid), 0)
         self._stage_put(desc, epoch, rank, np.asarray(x))
         self.barrier(desc, rank)

@@ -47,6 +47,19 @@ class TransferEntry:
     nbytes: int
 
 
+def layout_moved(src: Optional[ExecutionLayout],
+                 dst: ExecutionLayout) -> bool:
+    """True when moving to ``dst`` requires data movement: a different
+    rank set, or a reshape (cfg-dimension change, DESIGN.md §14) that
+    re-slices sharded fields even on the SAME ranks — e.g. sp4 ->
+    cfg2 x sp2 doubles every rank's slice and replicates it across
+    branch peers."""
+    if src is None:
+        return False
+    return src.ranks != dst.ranks or \
+        getattr(src, "cfg", 1) != getattr(dst, "cfg", 1)
+
+
 def plan_migration(fields: dict[str, FieldSpec],
                    src: ExecutionLayout,
                    dst: ExecutionLayout) -> list[TransferEntry]:
@@ -76,18 +89,57 @@ def plan_migration(fields: dict[str, FieldSpec],
                     name, src_holder, r, (0, full), (0, full), (0, full),
                     full * row))
             continue
-        for sr, (soff, ssize) in sv.slices.items():
-            for dr, (doff, dsize) in dv.slices.items():
-                lo = max(soff, doff)
-                hi = min(soff + ssize, doff + dsize)
-                if hi <= lo:
-                    continue
+        # Destination-centric, replication-aware intersection: under a CFG
+        # shape (DESIGN.md §14) several source ranks own the SAME global
+        # range (branch peers hold bit-identical bytes), so a needed
+        # segment is fetched from exactly ONE canonical owner — the
+        # earliest in src.ranks order — and segments the destination
+        # already holds locally are skipped (those are retains).  With
+        # single-owner SP views the source slices are disjoint, so this
+        # degenerates to the classic pairwise intersection plan.
+        src_order = {r: i for i, r in enumerate(src.ranks)}
+        owners = sorted(sv.slices.items(), key=lambda kv: src_order[kv[0]])
+        for dr, (doff, dsize) in dv.slices.items():
+            needed = [(doff, doff + dsize)]
+            if dr in sv.slices:
+                l0, s0 = sv.slices[dr]
+                needed = _subtract(needed, l0, l0 + s0)
+            for sr, (soff, ssize) in owners:
+                if not needed:
+                    break
                 if sr == dr:
-                    continue        # already local, no transfer
-                entries.append(TransferEntry(
-                    name, sr, dr, (lo - soff, hi - lo), (lo - doff, hi - lo),
-                    (lo, hi - lo), (hi - lo) * row))
+                    continue
+                remaining = []
+                for a, b in needed:
+                    lo, hi = max(a, soff), min(b, soff + ssize)
+                    if hi <= lo:
+                        remaining.append((a, b))
+                        continue
+                    entries.append(TransferEntry(
+                        name, sr, dr, (lo - soff, hi - lo),
+                        (lo - doff, hi - lo), (lo, hi - lo),
+                        (hi - lo) * row))
+                    if a < lo:
+                        remaining.append((a, lo))
+                    if hi < b:
+                        remaining.append((hi, b))
+                needed = remaining
     return entries
+
+
+def _subtract(segments: list[tuple[int, int]], lo: int,
+              hi: int) -> list[tuple[int, int]]:
+    """Remove [lo, hi) from a list of half-open segments."""
+    out = []
+    for a, b in segments:
+        if hi <= a or b <= lo:
+            out.append((a, b))
+            continue
+        if a < lo:
+            out.append((a, lo))
+        if hi < b:
+            out.append((hi, b))
+    return out
 
 
 def local_retains(fields: dict[str, FieldSpec], src: ExecutionLayout,

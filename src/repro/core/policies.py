@@ -120,6 +120,32 @@ def _repin_ranks(lay_ranks: tuple[int, ...], free: list[int], k: int,
     return tuple(sorted((own + fr)[:k]))
 
 
+def _pick_shape_ranks(free: list[int], degree: int, cfg: int,
+                      topo: Optional[ClusterTopology] = None
+                      ) -> Optional[tuple[int, ...]]:
+    """Ranks for a ``(cfg x sp)`` shape (DESIGN.md §14): each CFG branch
+    is an independent host-tight SP pick — branches exchange only the
+    per-step merge, so the branch PAIR may straddle hosts while each
+    branch's gather collectives stay intra-host whenever any host can
+    seat ``sp`` ranks.  Branch 0 (cond) leads the tuple so
+    ``ExecutionLayout.branch_ranks`` slices the concatenation back into
+    branches."""
+    if cfg <= 1:
+        return _pick_ranks(free, degree, topo)
+    sp = degree // cfg
+    if sp < 1 or sp * cfg != degree:
+        return None
+    picked: list[int] = []
+    pool = list(free)
+    for _ in range(cfg):
+        grp = _pick_ranks(pool, sp, topo)
+        if grp is None:
+            return None
+        picked.extend(grp)
+        pool = [r for r in pool if r not in set(grp)]
+    return tuple(picked)
+
+
 def _contiguous(free: list[int], k: int,
                 topo: Optional[ClusterTopology] = None
                 ) -> Optional[tuple[int, ...]]:
@@ -501,7 +527,8 @@ class ElasticPolicy(Policy):
                  preempt_min_degree: int = 2,
                  pack: bool = False, max_pack: int = 8,
                  topology_aware: bool = True,
-                 cache_affinity: bool = False):
+                 cache_affinity: bool = False,
+                 hybrid: bool = False):
         self.candidates = candidate_degrees
         self.max_degree = max_degree
         self.shrink_queue_factor = shrink_queue_factor
@@ -523,6 +550,14 @@ class ElasticPolicy(Policy):
         # when capacity opens up.  ``False`` is the topology-blind
         # baseline (identical to pre-topology behavior on any cluster).
         self.topology_aware = topology_aware
+        # hybrid shape search (DESIGN.md §14): when on, guided requests
+        # are sized over (cfg x sp) shapes — the same total degree can
+        # be spent as SP width or as a CFG branch split with one merge
+        # exchange per step — priced through the shape-keyed cost
+        # cells, and running guided work may Reallocate-RESHAPE to the
+        # cheaper shape of its rank set at a denoise boundary.  ``False``
+        # never emits a cfg>1 layout: scalar-SP behavior is untouched.
+        self.hybrid = hybrid
         # Preemption takes effect at the victim's device boundary (the
         # in-flight slice cannot be killed on either backend), so evicting
         # a single-rank task frees its rank no earlier than letting it
@@ -566,10 +601,11 @@ class ElasticPolicy(Policy):
             return None
         return view.cache_residency.get(rid)
 
-    def _remaining(self, view, req, g, d, span: int = 1) -> float:
+    def _remaining(self, view, req, g, d, span: int = 1,
+                   cfg: int = 0) -> float:
         itv = self._interval(view) if d > 1 else 1
         return view.cost.request_remaining(req.model, g, d, span,
-                                           cache_interval=itv)
+                                           cache_interval=itv, cfg=cfg)
 
     def _need_degree(self, view, req, g) -> int:
         """Smallest degree predicted to meet the deadline; the largest
@@ -589,6 +625,39 @@ class ElasticPolicy(Policy):
                     <= req.deadline:
                 return d
         return cands[-1]
+
+    def _need_shape(self, view, req, g) -> tuple[int, int]:
+        """Best-fit (degree, cfg) shape (DESIGN.md §14): the smallest
+        TOTAL degree whose cheaper shape meets the deadline; shapes at
+        one degree are tied by the shape-keyed remaining-work estimate
+        (a comm-bound guided step favors the split — halved gather
+        participants beat the halved per-branch FLOP share).  Reduces to
+        ``(_need_degree, 1)`` exactly when shape search is off or the
+        request is unguided, so scalar policies never see shapes."""
+        if not self.hybrid or getattr(req, "guidance", None) is None:
+            return self._need_degree(view, req, g), 1
+        cands = self._cands(view)
+        if not any(t.kind == "denoise" and t.state == "pending"
+                   for t in g.tasks.values()):
+            return 1, 1     # only single-rank encode/decode stages left
+        best = (cands[-1], 1)
+        for d in cands:
+            shapes = [(d, 1)] + ([(d, 2)] if d >= 2 and d % 2 == 0
+                                 else [])
+            # both shapes price the span a locality-aware placement of d
+            # ranks touches; the cost model derives the branch span from
+            # it (analytical: branch_span = ceil(span / cfg))
+            priced = sorted(
+                (self._remaining(view, req, g, dd,
+                                 self._min_span(view, dd), cfg=c), c)
+                for dd, c in shapes)
+            rem, c = priced[0]
+            best = (d, c)
+            if req.deadline is None:
+                return 1, 1
+            if view.now + rem <= req.deadline:
+                return d, c
+        return best
 
     def _pack_hold_ok(self, view, t, req, g, degree, dispatched,
                       peer_idx, running_reqs) -> bool:
@@ -849,6 +918,42 @@ class ElasticPolicy(Policy):
                 free = [r for r in free if r not in set(cand)]
                 actions.append(Reallocate(rid, ExecutionLayout(cand)))
 
+        # ---- 3c. hybrid: reshape running guided work (DESIGN.md §14) -
+        # A guided request's degree can be spent two ways — SP width
+        # (batched-CFG, B=2 through one group) or a CFG branch split
+        # (B=1 per branch + one merge exchange).  When the OTHER shape
+        # of the SAME rank set prices cheaper for the remaining chain,
+        # Reallocate reshapes at the next denoise boundary; the latent
+        # artifact re-slices through the ordinary §5 migration planner
+        # (same ranks, different field views).
+        if self.hybrid:
+            reshaped_guard = {a.request_id for a in actions
+                              if isinstance(a, Reallocate)}
+            for rid in sorted(run_by_req):
+                if rid in reshaped_guard or rid in view.pinned:
+                    continue
+                req = view.requests[rid]
+                if getattr(req, "guidance", None) is None:
+                    continue
+                lay = effective_layout(rid)
+                if lay is None or lay.degree < 2 or lay.degree % 2:
+                    continue
+                g = view.graphs[rid]
+                pending = sum(1 for t in g.tasks.values()
+                              if t.kind == "denoise"
+                              and t.state == "pending")
+                if pending < 2:
+                    continue    # the re-slice migration needs runway
+                cur = getattr(lay, "cfg", 1)
+                alt = 2 if cur == 1 else 1
+                span = topo.span_of(lay.ranks) if topo else 1
+                if self._remaining(view, req, g, lay.degree, span,
+                                   cfg=alt) \
+                        < self._remaining(view, req, g, lay.degree,
+                                          span, cfg=cur):
+                    actions.append(Reallocate(rid, ExecutionLayout(
+                        lay.ranks, cfg=alt)))
+
         # ---- 4. dispatch ready tasks on what's left ------------------
         # count ranks an incomplete SLO request still needs beyond what
         # it holds; best-effort work may not eat into that reservation
@@ -863,6 +968,8 @@ class ElasticPolicy(Policy):
         def try_join(t, req, g) -> bool:
             if not (self.pack and t.kind == "denoise"):
                 return False
+            if getattr(req, "guidance", None) is not None:
+                return False    # packs refuse guided members (§14)
             sig = pack_signature(t, req)
             for pk in open_packs:
                 if pk["sig"] != sig or len(pk["members"]) >= self.max_pack:
@@ -874,14 +981,14 @@ class ElasticPolicy(Policy):
                     return True
             return False
 
-        def dispatch(t, req, g, k) -> bool:
+        def dispatch(t, req, g, k, cfg: int = 1) -> bool:
             # callers attempt try_join first; by this point the task
             # needs its own ranks (locality-aware under a topology)
             nonlocal free
             if k <= 0 or k > len(free):
                 return False
             ranks = None
-            if t.kind == "denoise" and k > 1:
+            if t.kind == "denoise" and k > 1 and cfg == 1:
                 # cache affinity (DESIGN.md §11): re-seat a warm request
                 # on the exact rank set its snapshot lives on — the next
                 # step is then a hit instead of a migrate or refresh
@@ -890,15 +997,19 @@ class ElasticPolicy(Policy):
                         set(ent.layout.ranks) <= set(free):
                     ranks = ent.layout.ranks
             if ranks is None:
-                ranks = _pick_ranks(free, k, topo)
+                ranks = _pick_shape_ranks(free, k, cfg, topo)
+                if ranks is None:
+                    return False
             free = [r for r in free if r not in set(ranks)]
             granted[req.id] = granted.get(req.id, 0) + k
-            if self.pack and t.kind == "denoise":
+            if self.pack and t.kind == "denoise" and \
+                    getattr(req, "guidance", None) is None:
                 open_packs.append({"sig": pack_signature(t, req), "k": k,
                                    "members": [(t, req, g)],
                                    "ranks": ranks})
             else:
-                actions.append(Dispatch(t.id, ExecutionLayout(ranks)))
+                actions.append(Dispatch(t.id,
+                                        ExecutionLayout(ranks, cfg=cfg)))
             return True
 
         for t, req, g in slo_ready:
@@ -908,14 +1019,16 @@ class ElasticPolicy(Policy):
                 continue
             if try_join(t, req, g):
                 continue
-            need = self._need_degree(view, req, g)
+            need, ncfg = self._need_shape(view, req, g)
             # bounded hold (DESIGN.md §9): wait one boundary for an
             # imminent compatible peer when that cannot cost the SLO
-            if self.pack and self._pack_hold_ok(view, t, req, g, need,
-                                                set(granted), peer_idx,
-                                                running_reqs):
+            if self.pack and ncfg == 1 and \
+                    getattr(req, "guidance", None) is None and \
+                    self._pack_hold_ok(view, t, req, g, need,
+                                       set(granted), peer_idx,
+                                       running_reqs):
                 continue
-            if not dispatch(t, req, g, need):
+            if not dispatch(t, req, g, need, ncfg):
                 if reclaiming:
                     continue        # preempted ranks arrive at a boundary
                 feas = [d for d in cands if d <= len(free)]
@@ -947,9 +1060,10 @@ class ElasticPolicy(Policy):
             # rule protects the pack's SLO members
             if try_join(t, req, g):
                 continue
-            if self.pack and self._pack_hold_ok(view, t, req, g, 1,
-                                                set(granted), peer_idx,
-                                                running_reqs):
+            if self.pack and getattr(req, "guidance", None) is None and \
+                    self._pack_hold_ok(view, t, req, g, 1,
+                                       set(granted), peer_idx,
+                                       running_reqs):
                 continue
             if budget <= 0:
                 continue
@@ -995,6 +1109,11 @@ def make_policy(name: str, num_ranks: int) -> Policy:
     refresh/hit mixture, re-seats warm requests on their snapshot's
     ranks, and raises the bar for shrink/re-pin of warm requests
     (benchmarks/policies_e2e.py --only cache).
+    ``elastic-hybrid`` adds (cfg x sp) shape search for guided requests
+    (DESIGN.md §14): identical to ``elastic`` on unguided workloads
+    (it never emits a cfg>1 layout for them); on guided work it sizes
+    over shapes and reshapes running requests via Reallocate
+    (benchmarks/policies_e2e.py --only hybrid).
     """
     table = {
         "legacy": lambda: LegacyPolicy(),
@@ -1007,6 +1126,7 @@ def make_policy(name: str, num_ranks: int) -> Policy:
         "elastic-blind": lambda: ElasticPolicy(topology_aware=False),
         "elastic-pack": lambda: ElasticPolicy(pack=True),
         "elastic-cache": lambda: ElasticPolicy(cache_affinity=True),
+        "elastic-hybrid": lambda: ElasticPolicy(hybrid=True),
         "packing": lambda: PackingPolicy(),
     }
     return table[name]()

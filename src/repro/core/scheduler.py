@@ -116,8 +116,15 @@ def pack_signature(task: TrajectoryTask, request: Request) -> tuple:
     member must match elementwise, so the "shape bucket" here is the
     exact count, a refinement of the cost model's power-of-two bucket).
     The parallel degree is shared by construction: a pack has ONE layout.
+    Guided requests (DESIGN.md §14) carry their guidance scale in the
+    signature, so they never co-batch with unguided work (the batched
+    call would need per-member merge semantics the executor does not
+    stack); unguided signatures are unchanged.
     """
-    return (request.model, task.meta.get("tokens", 4096))
+    sig = (request.model, task.meta.get("tokens", 4096))
+    if getattr(request, "guidance", None) is not None:
+        sig += (request.guidance,)
+    return sig
 
 
 @dataclass
@@ -325,6 +332,16 @@ class ControlPlane:
         return all(0 <= r < self.num_ranks and r not in self.dead_ranks
                    for r in layout.ranks)
 
+    @staticmethod
+    def _shape_ok(layout: ExecutionLayout, req: Request) -> bool:
+        """A CFG-split shape (DESIGN.md §14) is valid only for a guided
+        request and only at cfg=2 — the two guidance branches are cond
+        and uncond; there is no third."""
+        cfg = getattr(layout, "cfg", 1)
+        if cfg == 1:
+            return True
+        return cfg == 2 and getattr(req, "guidance", None) is not None
+
     def _mark_running(self, task: TrajectoryTask, layout: ExecutionLayout,
                       extra_ev: Optional[dict] = None) -> int:
         """Shared dispatch bookkeeping (solo and packed): task state,
@@ -338,6 +355,10 @@ class ControlPlane:
         ev = {"t": self.now, "ev": "dispatch", "task": task.id,
               "req": task.request_id, "kind": task.kind,
               "step": task.step_index, "ranks": list(layout.ranks)}
+        if getattr(layout, "cfg", 1) > 1:
+            # shape dimension in the decision trace (DESIGN.md §14);
+            # scalar layouts emit the historic event, byte-identical
+            ev["cfg"] = layout.cfg
         stamp = task.meta.get("cache")
         if stamp is not None:
             # the plane-made cache decision is part of the decision
@@ -369,6 +390,8 @@ class ControlPlane:
             if t.id == d.task_id:
                 if t.state != "pending":
                     return False
+                if not self._shape_ok(d.layout, req):
+                    return False
                 # an explicit placement overrides and clears a pin
                 self.pinned.pop(req.id, None)
                 self._dispatch(t, d.layout, g)
@@ -388,6 +411,8 @@ class ControlPlane:
         if not self._ranks_ok(a.layout) or \
                 any(r not in self.free_ranks for r in a.layout.ranks):
             return False
+        if getattr(a.layout, "cfg", 1) > 1:
+            return False            # packs refuse CFG shapes (§14)
         by_id = {t.id: (t, req, g) for t, req, g in view.ready}
         members = []
         for tid in ids:
@@ -396,6 +421,8 @@ class ControlPlane:
             t, req, g = by_id[tid]
             if t.state != "pending" or t.kind != "denoise":
                 return False
+            if getattr(req, "guidance", None) is not None:
+                return False        # guided steps never pack (§14)
             members.append((t, req, g))
         sigs = {pack_signature(t, req) for t, req, _ in members}
         if len(sigs) != 1:
@@ -446,12 +473,15 @@ class ControlPlane:
         req = self.requests.get(a.request_id)
         if req is None or req.failed or req.done_time is not None:
             return False
-        if not self._ranks_ok(a.new_layout):
+        if not self._ranks_ok(a.new_layout) or \
+                not self._shape_ok(a.new_layout, req):
             return False
         self.pinned[a.request_id] = a.new_layout
-        self.events.append({"t": self.now, "ev": "reallocate",
-                            "req": a.request_id,
-                            "ranks": list(a.new_layout.ranks)})
+        ev = {"t": self.now, "ev": "reallocate", "req": a.request_id,
+              "ranks": list(a.new_layout.ranks)}
+        if getattr(a.new_layout, "cfg", 1) > 1:
+            ev["cfg"] = a.new_layout.cfg       # reshape (DESIGN.md §14)
+        self.events.append(ev)
         return True
 
     def _apply_preempt(self, a: Preempt) -> bool:
@@ -666,12 +696,20 @@ class ControlPlane:
         # calibrate their own |c cell (DESIGN.md §11).
         if observe:
             stamp = task.meta.get("cache")
+            # guided denoise calibrates its shape cell (DESIGN.md §14):
+            # the 2x work must not poison the unguided calibration
+            cfg = 0
+            if task.kind == "denoise" and getattr(
+                    self.requests[task.request_id], "guidance",
+                    None) is not None:
+                cfg = max(getattr(layout, "cfg", 1), 1)
             self.cost.observe(self.requests[task.request_id].model,
                               task.kind, task.meta.get("tokens", 4096),
                               layout.degree, c.duration,
                               span=layout.span(self.topology),
                               cached=bool(stamp
-                                          and stamp["mode"] == "hit"))
+                                          and stamp["mode"] == "hit"),
+                              cfg=cfg)
         req = self.requests[task.request_id]
         if graph.is_done() and req.done_time is None:
             req.done_time = c.finish_time
@@ -792,6 +830,10 @@ def trace_signature(events: list[dict],
                tuple(ev.get("ranks", ())))
         if ev.get("cache") is not None:
             rec += (ev["cache"],)
+        if ev.get("cfg"):
+            # shape dimension (DESIGN.md §14): appended only when the
+            # layout split branches, so scalar traces stay byte-identical
+            rec += (("cfg", ev["cfg"]),)
         members = ev.get("pack_members")
         if members:
             rec += (tuple(sorted((order.get(rid, -1), step)

@@ -31,6 +31,7 @@ import itertools
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.core.migration import layout_moved
 from repro.core.scheduler import Completion
 from repro.core.trajectory import (ClusterTopology, ExecutionLayout,
                                    RequestGraph, TrajectoryTask)
@@ -44,7 +45,7 @@ def migration_seconds(nbytes: int, src: ExecutionLayout,
                       dst: ExecutionLayout) -> float:
     """Single-host migration pricing (the pre-topology model, kept
     byte-identical for one-host topologies)."""
-    if src is None or src.ranks == dst.ranks:
+    if not layout_moved(src, dst):
         return 0.0
     # each byte moves once; transfers parallel across rank pairs
     pairs = max(len(set(src.ranks) | set(dst.ranks)) - 1, 1)
@@ -121,17 +122,24 @@ class SimBackend:
         model = graph.request.model
         tokens = task.meta.get("tokens", 4096)
         stamp = task.meta.get("cache")
+        # guided denoise prices its shape cell (DESIGN.md §14): cfg=1
+        # batched on one group, cfg>=2 split branches + merge exchange
+        cfg = 0
+        if task.kind == "denoise" and \
+                getattr(graph.request, "guidance", None) is not None:
+            cfg = max(getattr(layout, "cfg", 1), 1)
         dur = self.cost.estimate(model, task.kind, tokens, layout.degree,
                                  span=layout.span(self.topology),
                                  cached=bool(stamp
-                                             and stamp["mode"] == "hit"))
+                                             and stamp["mode"] == "hit"),
+                                 cfg=cfg)
         if self.jitter:
             dur *= 1.0 + self.jitter * (self._rand() - 0.5)
         # migration latency when the input artifact lives in another layout
         mig = self._cache_effects(task, graph, layout)
         for aid in task.inputs:
             art = graph.artifacts[aid]
-            if art.layout is not None and art.layout.ranks != layout.ranks:
+            if layout_moved(art.layout, layout):
                 mig += self._migration(art, layout)
                 self.migrated_bytes += art.nbytes
                 art.layout = layout      # artifact now lives here
@@ -171,8 +179,7 @@ class SimBackend:
             mig += self._cache_effects(task, graph, layout)
             for aid in task.inputs:
                 art = graph.artifacts[aid]
-                if art.layout is not None and \
-                        art.layout.ranks != layout.ranks:
+                if layout_moved(art.layout, layout):
                     mig += self._migration(art, layout)
                     self.migrated_bytes += art.nbytes
                     art.layout = layout      # artifact now lives here

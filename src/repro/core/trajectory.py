@@ -172,13 +172,35 @@ def as_topology(topo) -> ClusterTopology:
 
 @dataclass(frozen=True)
 class ExecutionLayout:
-    """Ordered logical execution group + parallel specification."""
+    """Ordered logical execution group + parallel *shape* (DESIGN.md §14).
+
+    ``cfg`` splits the group into that many classifier-free-guidance
+    branches of ``sp = degree // cfg`` ranks each; branch ``b`` owns the
+    contiguous rank slice ``ranks[b*sp:(b+1)*sp]`` (contiguity keeps SP
+    host-tight while a CFG pair may straddle hosts).  ``cfg=1`` is the
+    scalar-SP layout every pre-shape trace used — byte-identical.
+    """
     ranks: tuple[int, ...]          # ordered global ranks
     parallel: str = "sp"            # "sp" (sequence parallel) | "single"
+    cfg: int = 1                    # CFG split-batch branches (shape dim)
 
     @property
     def degree(self) -> int:
         return len(self.ranks)
+
+    @property
+    def sp(self) -> int:
+        """Sequence-parallel degree within one CFG branch."""
+        return len(self.ranks) // self.cfg
+
+    def branch_ranks(self, b: int) -> tuple[int, ...]:
+        """Ordered ranks of CFG branch ``b``."""
+        sp = self.sp
+        return self.ranks[b * sp:(b + 1) * sp]
+
+    def branch_of(self, rank: int) -> int:
+        """CFG branch index that ``rank`` belongs to."""
+        return self.ranks.index(rank) // self.sp
 
     def span(self, topo: ClusterTopology) -> int:
         """Hosts touched by this layout under `topo`."""
@@ -189,6 +211,8 @@ class ExecutionLayout:
 
     def __post_init__(self):
         assert len(set(self.ranks)) == len(self.ranks), "duplicate ranks"
+        assert self.cfg >= 1 and len(self.ranks) % self.cfg == 0, \
+            f"cfg={self.cfg} must divide degree={len(self.ranks)}"
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +248,11 @@ class Request:
     arrival: float = 0.0
     deadline: Optional[float] = None
     size_class: str = "M"           # S | M | L
+    # classifier-free guidance scale; None -> unguided (single branch,
+    # pre-shape behavior byte-identical).  Guided requests run cond +
+    # uncond branches — batched on one group (cfg=1) or split across
+    # branch groups (cfg>=2), merged v = u + g*(c - u) each step.
+    guidance: Optional[float] = None
     # filled by converter
     task_ids: list[str] = field(default_factory=list)
     done_time: Optional[float] = None

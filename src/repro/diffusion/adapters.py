@@ -45,9 +45,16 @@ def convert_request(req: Request, cfg: ModelConfig) -> RequestGraph:
         artifacts[a.id] = a
         return a
 
-    txt = art("text_embeds", {
+    txt_fields = {
         "embeds": FieldSpec("replicated", (77, dc.cond_dim), "float32"),
-    })
+    }
+    if req.guidance is not None:
+        # classifier-free guidance (DESIGN.md §14): the null-prompt
+        # branch embedding must be DECLARED so the migration planner
+        # carries it between layouts like any replicated field
+        txt_fields["embeds_uncond"] = FieldSpec(
+            "replicated", (77, dc.cond_dim), "float32")
+    txt = art("text_embeds", txt_fields)
     enc = TrajectoryTask(id=fresh_id("task"), request_id=req.id,
                          kind="encode", outputs=[txt.id],
                          meta={"tokens": n_tok})
@@ -120,19 +127,27 @@ class FieldView:
 
 def field_view(spec: FieldSpec, layout: ExecutionLayout) -> FieldView:
     """Equal contiguous split along shard_axis (replicated -> every rank
-    owns the full range)."""
-    if spec.kind != "sharded" or layout.degree == 1:
+    owns the full range).
+
+    Under a CFG shape (``layout.cfg > 1``, DESIGN.md §14) the split runs
+    over one branch's ``sp`` ranks and repeats per branch: the rank at
+    branch-local index ``i`` of EVERY branch owns SP-slice ``i``, so
+    branch peers hold the same token range (the merged velocity is
+    identical across branches, making shards replicated across the CFG
+    dimension)."""
+    if spec.kind != "sharded" or layout.sp == 1:
         full = spec.global_shape[spec.shard_axis] if spec.global_shape \
             else 0
         return FieldView(spec.kind, spec.global_shape, spec.shard_axis,
                          {r: (0, full) for r in layout.ranks})
     n = spec.global_shape[spec.shard_axis]
-    k = layout.degree
+    k = layout.sp
     base, rem = divmod(n, k)
     slices = {}
     off = 0
-    for i, r in enumerate(layout.ranks):
+    for i in range(k):
         size = base + (1 if i < rem else 0)
-        slices[r] = (off, size)
+        for b in range(layout.cfg):
+            slices[layout.branch_ranks(b)[i]] = (off, size)
         off += size
     return FieldView("sharded", spec.global_shape, spec.shard_axis, slices)

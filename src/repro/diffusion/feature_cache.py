@@ -143,6 +143,16 @@ class FeatureCachePlane:
         if art is None:
             return None
         ent = self.entries.get(task.request_id)
+        if getattr(graph.request, "guidance", None) is not None or \
+                getattr(layout, "cfg", 1) > 1:
+            # guided steps bypass the cache (DESIGN.md §14): the batched
+            # path gathers B=2 branch-specific KV, and split branches
+            # gather DIFFERENT bytes per branch — neither fits the
+            # one-replicated-snapshot storage contract.  Any residency a
+            # request built before turning guided (or before a reshape
+            # onto a cfg layout) invalidates with a cfg-change reason.
+            return (None, False, art.id,
+                    "cfg-change" if ent is not None else None)
         if layout.degree == 1:
             # no remote shards to reuse; a degree change kills residency
             return (None, False, art.id,
@@ -150,6 +160,9 @@ class FeatureCachePlane:
         stale_reason = None
         if ent is not None and ent.layout.degree != layout.degree:
             stale_reason, ent = "degree-change", None
+        if ent is not None and getattr(ent.layout, "cfg", 1) != \
+                getattr(layout, "cfg", 1):
+            stale_reason, ent = "cfg-change", None
         migrate = False
         if ent is not None:
             stale = ent.staleness(task.step_index)

@@ -163,6 +163,15 @@ class DiTPipeline:
         # same-layout successor consumes without migration)
         for r in layout.ranks:
             txt_art.data[r]["embeds"] = np.asarray(embeds)
+        if req.guidance is not None:
+            # classifier-free guidance (DESIGN.md §14): the uncond branch
+            # conditions on the null prompt (all-zero tokens)
+            toks_u = jnp.zeros_like(toks)
+            emb_u = text_encoder.encode(self.txt_params, toks_u,
+                                        self.txt_cfg,
+                                        dtype=jnp.float32)[0]
+            for r in layout.ranks:
+                txt_art.data[r]["embeds_uncond"] = np.asarray(emb_u)
 
         # initial noisy latent (latent preparation is part of encode stage)
         lat_art = graph.artifacts[task.outputs[1]]
@@ -180,6 +189,9 @@ class DiTPipeline:
     # ------------------------------------------------------------------
     def _denoise(self, task, layout, rank, comm, graph, desc):
         req = graph.request
+        if req.guidance is not None:
+            return self._denoise_guided(task, layout, rank, comm, graph,
+                                        desc)
         txt_art = graph.artifacts[task.inputs[0]]
         lat_art = graph.artifacts[task.inputs[1]]
         out_art = graph.artifacts[task.outputs[0]]
@@ -250,16 +262,111 @@ class DiTPipeline:
         out_art.data[rank]["sigma"] = np.float32(sigma_next)
 
     # ------------------------------------------------------------------
+    def _denoise_guided(self, task, layout, rank, comm, graph, desc):
+        """Classifier-free guidance denoise (DESIGN.md §14).
+
+        ``cfg == 1``: ONE batched forward with rows [cond, uncond] on the
+        whole group (the historic single-group batched-CFG path).
+        ``cfg >= 2``: this rank's branch runs its row B=1 with SP
+        collectives confined to the branch descriptor, then ONE merge
+        exchange joins branch peers holding the same token slice; every
+        peer computes the identical merged velocity, so branch shards
+        stay replicated across the CFG dimension — bit-exact versus the
+        batched path at the same shard size (asserted in
+        serving/hybrid_demo.py).  Guided steps bypass the §11 feature
+        cache (branch-specific KV cannot share a replicated snapshot).
+        """
+        req = graph.request
+        g = float(req.guidance)
+        txt_art = graph.artifacts[task.inputs[0]]
+        lat_art = graph.artifacts[task.inputs[1]]
+        out_art = graph.artifacts[task.outputs[0]]
+        txt_c = txt_art.data[rank]["embeds"]
+        txt_u = txt_art.data[rank]["embeds_uncond"]
+        x_shard = lat_art.data[rank]["latent"]              # (N_loc, pd)
+        spec = lat_art.fields["latent"]
+        view = field_view(spec, layout)
+        off, _ = view.slices[rank]
+        n_total = spec.global_shape[0]
+
+        sigmas = schedule.flow_sigmas(req.steps)
+        step = task.meta["step"]
+        sigma_now = float(sigmas[step])
+        sigma_next = float(sigmas[step + 1]) if step + 1 < req.steps \
+            else 0.0
+        ts = schedule.timestep_of_sigma(sigma_now)
+
+        if layout.cfg == 1:
+            if layout.degree == 1:
+                def kv_gather(k, v, layer):
+                    return k, v
+            else:
+                def kv_gather(k, v, layer):
+                    K = comm.all_gather(desc, rank, np.asarray(k), axis=1)
+                    V = comm.all_gather(desc, rank, np.asarray(v), axis=1)
+                    return jnp.asarray(K), jnp.asarray(V)
+            x = jnp.stack([jnp.asarray(x_shard), jnp.asarray(x_shard)])
+            txt = jnp.stack([jnp.asarray(txt_c), jnp.asarray(txt_u)])
+            t = jnp.array([ts, ts], jnp.float32)
+            v = dit.forward_sp_tokens(
+                self.dit_params, x, t, txt, self.cfg, pos_offset=off,
+                n_total=n_total, kv_gather=kv_gather)
+            v_c, v_u = np.asarray(v[0]), np.asarray(v[1])
+        else:
+            b = layout.branch_of(rank)
+            branch = desc.branches[b]
+            i_local = branch.local_index(rank)
+            merge = desc.merge[i_local]
+            if layout.sp == 1:
+                def kv_gather(k, v, layer):
+                    return k, v
+            else:
+                def kv_gather(k, v, layer):
+                    K = comm.all_gather(branch, rank, np.asarray(k),
+                                        axis=1)
+                    V = comm.all_gather(branch, rank, np.asarray(v),
+                                        axis=1)
+                    return jnp.asarray(K), jnp.asarray(V)
+            txt = txt_c if b == 0 else txt_u
+            t = jnp.array([ts], jnp.float32)
+            v_mine = dit.forward_sp_tokens(
+                self.dit_params, jnp.asarray(x_shard)[None], t,
+                jnp.asarray(txt)[None], self.cfg, pos_offset=off,
+                n_total=n_total, kv_gather=kv_gather)[0]
+            # the one guidance-merge exchange: branch peers sharing this
+            # token slice swap velocity shards; merge-group rank order is
+            # branch order, so parts[0]=cond, parts[1]=uncond everywhere
+            both = comm.all_gather(merge, rank,
+                                   np.asarray(v_mine)[None], axis=0)
+            v_c, v_u = both[0], both[1]
+        merged = jnp.asarray(v_u) + g * (jnp.asarray(v_c)
+                                         - jnp.asarray(v_u))
+        new_x = schedule.flow_step(jnp.asarray(x_shard), merged,
+                                   sigma_now, sigma_next)
+        out_art.data[rank]["latent"] = np.asarray(new_x)
+        out_art.data[rank]["sigma"] = np.float32(sigma_next)
+
+    # ------------------------------------------------------------------
     def _decode(self, task, layout, graph):
         lat_art = graph.artifacts[task.inputs[0]]
         out_art = graph.artifacts[task.outputs[0]]
         leader = layout.ranks[0]
         # the latent may be sharded over this task's layout (multi-rank
-        # decode layouts); assemble in rank order
+        # decode layouts); assemble each global range ONCE, in offset
+        # order — under a CFG shape branch peers hold identical copies
+        # of the same range (DESIGN.md §14), which must not be
+        # concatenated twice.  For scalar-SP layouts offset order equals
+        # rank order, so the assembly is byte-identical to the historic
+        # rank-order concat.
         if lat_art.layout is not None and lat_art.layout.degree > 1:
+            lview = field_view(lat_art.fields["latent"], lat_art.layout)
+            by_off = {}
+            for r in lat_art.layout.ranks:
+                off, _ = lview.slices[r]
+                if off not in by_off:
+                    by_off[off] = lat_art.data[r]["latent"]
             tokens = np.concatenate(
-                [lat_art.data[r]["latent"] for r in lat_art.layout.ranks],
-                axis=0)
+                [by_off[o] for o in sorted(by_off)], axis=0)
         else:
             tokens = lat_art.data[leader]["latent"]           # (N, pd) full
         f, h, w, c = task.meta.get("latent_shape") or \

@@ -258,6 +258,50 @@ def chaos_trace(cost: CostModel, *, duration: float = 240.0,
     return out
 
 
+def hybrid_trace(cost: CostModel, *, duration: float = 240.0,
+                 load: float = 0.9, num_ranks: int = 8, steps: int = 25,
+                 seed: int = 37, alpha: float = 1.35,
+                 guidance: float = 5.0) -> list[Request]:
+    """Hybrid-shape workload (DESIGN.md §14): a Poisson stream of
+    GUIDED M-class images — classifier-free guidance doubles the
+    denoise work — plus a best-effort video background stream (mixed
+    image/video).
+
+    At these token counts the batched-CFG shape pays a B=2 KV gather
+    every step, while the split shape runs each branch's gather over
+    half the ranks and exchanges ONE velocity array per step — the
+    split prices 2-3x cheaper at the same total degree.  Deadlines are
+    set against the SPLIT cfg2 x sp2 rate (``alpha`` margin), so a
+    shape-searching policy clears the stream as concurrent split-shape
+    requests while a scalar policy — whose best batched ETA misses
+    these deadlines at ANY degree — degrades to machine-wide
+    dispatches.  That gap is what the --only hybrid gate measures."""
+    rand = _lcg(seed)
+    tok = request_tokens("dit-image", "M")
+    t_split = cost.estimate("dit-image", "encode", tok, 1) \
+        + steps * cost.estimate("dit-image", "denoise", tok, 4, cfg=2) \
+        + cost.estimate("dit-image", "decode", tok, 4)
+    # capacity: num_ranks/4 concurrent cfg2 x sp2 requests
+    rate = load * max(num_ranks / 4.0, 1.0) / t_split
+    out: list[Request] = []
+    t = 0.0
+    while t < duration:
+        t += -math.log(max(rand(), 1e-9)) / rate
+        r = make_request("dit-image", "M", t, cost, steps)
+        r.guidance = guidance
+        r.deadline = r.arrival + alpha * t_split \
+            + SLO_ALLOWANCE["dit-image"]
+        out.append(r)
+    # best-effort unguided video background: soaks idle ranks and
+    # exercises shrink/preempt alongside the guided stream
+    for bt in (duration * f for f in (0.1, 0.5, 0.8)):
+        r = make_request("dit-video", "S", bt, cost, steps)
+        r.deadline = None
+        out.append(r)
+    out.sort(key=lambda r: r.arrival)
+    return out
+
+
 def foreground_burst_trace(model: str, cost: CostModel, *,
                            duration: float = 120.0, load: float = 0.5,
                            num_ranks: int = 4, steps: int = 50,

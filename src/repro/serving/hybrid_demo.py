@@ -1,0 +1,223 @@
+"""Cross-backend hybrid-parallelism demonstration (DESIGN.md §14).
+
+A deterministic single-request scenario on a 2-host x 2-rank cluster
+that drives every shape-aware layer on BOTH execution backends.  One
+GUIDED request (classifier-free guidance: cond + uncond branches,
+merged ``v = v_u + g*(v_c - v_u)`` every step) runs a scripted shape
+chain:
+
+* the first denoise steps run **batched-CFG at sp4** — one spanning
+  group, both branches stacked on the batch axis through a B=2 KV
+  gather (the thread backend's hierarchical two-stage gather, since the
+  group straddles hosts);
+* one mid-trajectory **Reallocate-RESHAPE** keeps the SAME four ranks
+  but re-shapes them to **cfg2 x sp2**: the latent artifact re-slices
+  through the ordinary §5 migration planner (every rank's shard doubles
+  — same ranks, different field views), branch (0,1) serves cond on
+  host 0, branch (2,3) serves uncond on host 1, and each step ends in
+  ONE merge exchange across the host boundary;
+* encode/decode run single-rank.
+
+The control leg runs the same request with the SAME per-step shard
+sizes but single-group batched-CFG throughout (sp4, then a Reallocate
+onto batched sp2): shard-size-matched B=2 batched rows are bit-exact
+against B=1 branch rows (the §9 batching property), the merge arithmetic
+is the same fp32 expression, and the §5 planner moves bit-equal bytes —
+so the split run's pixels must equal the control's EXACTLY.
+
+All decisions are scripted from *structure* (task kind and step index),
+never timing, so the virtual-clock simulator and the wall-clock thread
+runtime produce identical :func:`~repro.core.scheduler.trace_signature`
+projections — with the ``cfg`` shape dimension recorded in both.  A
+third check runs an UNGUIDED workload under ``ElasticPolicy()`` and
+``ElasticPolicy(hybrid=True)`` and asserts byte-identical signatures:
+shape search off the guided path changes nothing.
+
+Used by tests/test_hybrid_shapes.py and benchmarks/sim_fidelity.py.
+Standalone: ``PYTHONPATH=src python -m repro.serving.hybrid_demo``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.policies import ElasticPolicy
+from repro.core.scheduler import (ControlPlane, Dispatch, Policy,
+                                  Reallocate, trace_signature)
+from repro.core.simulator import SimBackend
+from repro.core.trajectory import (ClusterTopology, ExecutionLayout,
+                                   Request)
+from repro.diffusion.adapters import convert_request
+from repro.serving.engine import ServingEngine
+
+RES = 128                    # 64 latent tokens: small, fast
+STEPS = 4
+SHIFT_STEP = 2               # first post-reshape denoise step
+GUIDANCE = 4.0
+TOPO = ClusterTopology(num_hosts=2, ranks_per_host=2)
+
+WIDE = ExecutionLayout((0, 1, 2, 3))              # sp4, batched CFG
+SPLIT = ExecutionLayout((0, 1, 2, 3), cfg=2)      # cfg2 x sp2 reshape
+NARROW = ExecutionLayout((0, 1))                  # batched sp2 control
+
+
+class ShapeScriptPolicy(Policy):
+    """Structural script: batched sp4 until ``SHIFT_STEP``, then ONE
+    Reallocate to ``tail`` (the plane auto-dispatches the pinned steps);
+    encode/decode single-rank.  No decision depends on time or cost, so
+    both backends trace identically (DESIGN.md §8)."""
+    name = "shape-script"
+
+    def __init__(self, tail: ExecutionLayout):
+        self.tail = tail
+
+    def schedule(self, view):
+        out = []
+        for t, req, g in sorted(view.ready,
+                                key=lambda x: (x[1].id, x[0].step_index)):
+            if t.kind in ("encode", "decode"):
+                if 0 in view.free_ranks:
+                    out.append(Dispatch(t.id, ExecutionLayout((0,))))
+            elif req.id in view.pinned:
+                continue        # the plane auto-dispatches pinned steps
+            elif t.step_index < SHIFT_STEP:
+                if all(r in view.free_ranks for r in WIDE.ranks):
+                    out.append(Dispatch(t.id, WIDE))
+                    if t.step_index == SHIFT_STEP - 1:
+                        # reshape the rest of the chain: same total
+                        # degree, different (cfg x sp) split, effective
+                        # at the next boundary with automatic re-slice
+                        # migration (DESIGN.md §14)
+                        out.append(Reallocate(req.id, self.tail))
+            else:
+                if all(r in view.free_ranks for r in self.tail.ranks):
+                    out.append(Dispatch(t.id, self.tail))
+        return out
+
+
+def scenario_requests() -> list[Request]:
+    return [Request(id="hyb", model="dit-image", height=RES, width=RES,
+                    frames=1, steps=STEPS, arrival=0.0,
+                    guidance=GUIDANCE)]
+
+
+def shape_timeline(events: list[dict]) -> list[tuple]:
+    """``(step, shape)`` per denoise dispatch — the printed timeline."""
+    out = []
+    for ev in events:
+        if ev["ev"] == "dispatch" and ev["kind"] == "denoise":
+            cfg = ev.get("cfg", 1)
+            sp = len(ev["ranks"]) // cfg
+            shape = f"cfg{cfg}x sp{sp}" if cfg > 1 else f"sp{sp}"
+            out.append((ev["step"], shape))
+    return out
+
+
+def run_wall(cfg, reqs: list[Request], tail: ExecutionLayout) -> dict:
+    """Thread backend: real JAX compute — branch groups, merge
+    exchange, and the reshape migration all execute."""
+    eng = ServingEngine(cfg, ShapeScriptPolicy(tail), TOPO,
+                        cost=CostModel())
+    metrics = eng.serve(reqs, timeout=240)
+    out = {
+        "metrics": metrics,
+        "events": list(eng.cp.events),
+        "signature": trace_signature(eng.cp.events),
+        "timeline": shape_timeline(eng.cp.events),
+        "pixels": {r.id: eng.result_pixels(r) for r in reqs},
+    }
+    eng.shutdown()
+    return out
+
+
+def run_sim(cfg, reqs: list[Request], tail: ExecutionLayout) -> dict:
+    """Simulator backend: same script, shape-keyed pricing (the cfg2
+    steps price the split cell + merge term), virtual clock."""
+    cost = CostModel()
+    cp = ControlPlane(TOPO, ShapeScriptPolicy(tail), cost,
+                      SimBackend(cost))
+    for r in reqs:
+        r = dataclasses.replace(r, task_ids=[])
+        cp.submit(r, convert_request(r, cfg))
+    cp.run()
+    return {
+        "metrics": cp.metrics(),
+        "events": list(cp.events),
+        "signature": trace_signature(cp.events),
+        "timeline": shape_timeline(cp.events),
+        "migrated_bytes": cp.backend.migrated_bytes,
+    }
+
+
+def scalar_search_off_identical(cfg=None, num_ranks: int = 4) -> bool:
+    """Shape search disabled is byte-identical scalar behavior: an
+    UNGUIDED workload under ``ElasticPolicy()`` and
+    ``ElasticPolicy(hybrid=True)`` produces the same signature (hybrid
+    search only ever touches guided requests)."""
+    from repro.diffusion.workloads import short_trace
+    if cfg is None:
+        from repro.configs.dit_models import DIT_IMAGE
+        cfg = DIT_IMAGE.reduced()
+    sigs = []
+    for hybrid in (False, True):
+        cost = CostModel()
+        reqs = short_trace("dit-image", cost, duration=30.0,
+                           num_ranks=num_ranks, steps=4, seed=7)
+        cp = ControlPlane(ClusterTopology.single_host(num_ranks),
+                          ElasticPolicy(hybrid=hybrid), cost,
+                          SimBackend(cost))
+        for r in reqs:
+            r = dataclasses.replace(r, task_ids=[])
+            cp.submit(r, convert_request(r, cfg))
+        cp.run()
+        sigs.append(trace_signature(cp.events))
+    return sigs[0] == sigs[1]
+
+
+def run_demo(cfg=None) -> dict:
+    """Run the reshape chain on both backends, the shard-size-matched
+    batched control on the wall backend, and the search-off identity
+    check; compare traces + pixels."""
+    if cfg is None:
+        from repro.configs.dit_models import DIT_IMAGE
+        cfg = DIT_IMAGE.reduced()
+    reqs = scenario_requests()
+    sim = run_sim(cfg, reqs, SPLIT)
+    wall = run_wall(cfg, reqs, SPLIT)
+    control = run_wall(cfg, reqs, NARROW)
+    px_match = all(
+        wall["pixels"][r.id] is not None
+        and control["pixels"][r.id] is not None
+        and np.array_equal(wall["pixels"][r.id], control["pixels"][r.id])
+        for r in reqs)
+    return {
+        "wall": wall,
+        "sim": sim,
+        "control": control,
+        "trace_match": wall["signature"] == sim["signature"],
+        "pixels_match": px_match,
+        "scalar_identical": scalar_search_off_identical(cfg),
+    }
+
+
+def main():
+    res = run_demo()
+    print("shape timeline (wall):")
+    for step, shape in res["wall"]["timeline"]:
+        print(f"  step {step}: {shape}")
+    print("shape timeline (control):")
+    for step, shape in res["control"]["timeline"]:
+        print(f"  step {step}: {shape}")
+    print(f"sim/wall trace signatures identical: {res['trace_match']}")
+    print(f"split pixels == batched-CFG control: {res['pixels_match']}")
+    print("shape-search-off == scalar elastic:  "
+          f"{res['scalar_identical']}")
+    if not (res["trace_match"] and res["pixels_match"]
+            and res["scalar_identical"]):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -134,3 +134,125 @@ def test_hierarchical_axis1_kv_gather_shape():
     for r in ranks:
         assert a[r].shape == (2, 12, 5)
         assert np.array_equal(a[r], b[r])
+
+
+# ---------------------------------------------------------------------------
+# all_to_all / all_reduce under the two-stage path (DESIGN.md §14 sat.)
+# ---------------------------------------------------------------------------
+
+def _all_to_all(comm, ranks, shards):
+    desc = comm.register_group(ranks)
+    out = {}
+
+    def fn(r):
+        out[r] = comm.all_to_all(desc, r, shards[r])
+    run_ranks(ranks, fn)
+    return out
+
+
+def _all_reduce(comm, ranks, arrs, op="sum"):
+    desc = comm.register_group(ranks)
+    out = {}
+
+    def fn(r):
+        out[r] = comm.all_reduce(desc, r, arrs[r], op=op)
+    run_ranks(ranks, fn)
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_hierarchical_all_to_all_bit_exact(data):
+    """all_to_all over a spanning group routes every host block across
+    the fabric once; the column each rank picks must be bit-exact versus
+    the flat exchange — including shrunken memberships (a host reduced
+    to one survivor, DESIGN.md §13) and arbitrary rank orders."""
+    hosts = data.draw(st.integers(2, 3))
+    rph = data.draw(st.integers(1, 3))
+    world = hosts * rph
+    topo = ClusterTopology(num_hosts=hosts, ranks_per_host=rph)
+    size = data.draw(st.integers(2, world))
+    ranks = tuple(data.draw(st.permutations(range(world)))[:size])
+    dtype = np_dtype(data.draw(st.sampled_from(DTYPES)))
+    # shards[r][j] is destined for the rank at group index j
+    shards = {r: [(np.arange(6).reshape(2, 3) + 100 * r + j)
+                  .astype(dtype) for j in range(size)]
+              for r in ranks}
+
+    flat = GroupFreeComm(world)
+    hier = GroupFreeComm(world, topology=topo)
+    a = _all_to_all(flat, ranks, shards)
+    b = _all_to_all(hier, ranks, shards)
+    for r in ranks:
+        assert len(a[r]) == len(b[r]) == size
+        for pa, pb in zip(a[r], b[r]):
+            assert pa.dtype == pb.dtype == dtype
+            assert pa.tobytes() == pb.tobytes()
+    # the exchange itself must be correct, not just hier == flat:
+    # rank r's j-th received shard is what the j-th group member sent
+    # to r's own group index
+    for i, r in enumerate(ranks):
+        for j, p in enumerate(ranks):
+            assert np.array_equal(b[r][j], shards[p][i])
+    if topo.span_of(ranks) > 1:
+        assert hier.stats["hierarchical"] == len(ranks)
+    else:
+        assert hier.stats["hierarchical"] == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_hierarchical_all_reduce_bit_exact(data):
+    """all_reduce over a spanning group gathers parts hierarchically but
+    combines LOCALLY in desc.ranks order — the fp32 association order is
+    unchanged, so sum/max/mean are bit-exact versus flat."""
+    hosts = data.draw(st.integers(2, 3))
+    rph = data.draw(st.integers(1, 3))
+    world = hosts * rph
+    topo = ClusterTopology(num_hosts=hosts, ranks_per_host=rph)
+    size = data.draw(st.integers(2, world))
+    ranks = tuple(data.draw(st.permutations(range(world)))[:size])
+    op = data.draw(st.sampled_from(["sum", "max", "mean"]))
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    arrs = {r: rng.normal(size=(3, 4)).astype(np.float32) for r in ranks}
+
+    flat = GroupFreeComm(world)
+    hier = GroupFreeComm(world, topology=topo)
+    a = _all_reduce(flat, ranks, arrs, op=op)
+    b = _all_reduce(hier, ranks, arrs, op=op)
+    ref = {"sum": np.stack([arrs[r] for r in ranks]).sum(0),
+           "max": np.stack([arrs[r] for r in ranks]).max(0),
+           "mean": np.stack([arrs[r] for r in ranks]).mean(0)}[op]
+    for r in ranks:
+        assert a[r].tobytes() == b[r].tobytes()
+        assert b[r].tobytes() == ref.astype(np.float32).tobytes()
+    if topo.span_of(ranks) > 1:
+        assert hier.stats["hierarchical"] == len(ranks)
+
+
+def test_hierarchical_collectives_on_shrunken_group():
+    """A group shrunken by a dead rank (DESIGN.md §13) — here host 1
+    reduced to one survivor — builds its own memoized plan: singleton
+    local group, two leaders, and all three collectives stay bit-exact
+    versus flat on the same membership."""
+    topo = ClusterTopology(num_hosts=2, ranks_per_host=2)
+    ranks = (0, 1, 3)                       # rank 2 "failed"
+    rng = np.random.default_rng(1)
+    arrs = {r: rng.normal(size=(2, 2)).astype(np.float32) for r in ranks}
+    shards = {r: [arrs[r] + j for j in range(len(ranks))] for r in ranks}
+
+    flat = GroupFreeComm(4)
+    hier = GroupFreeComm(4, topology=topo)
+    ag_f = _all_gather(flat, ranks, arrs)
+    ag_h = _all_gather(hier, ranks, arrs)
+    aa_f = _all_to_all(flat, ranks, shards)
+    aa_h = _all_to_all(hier, ranks, shards)
+    ar_f = _all_reduce(flat, ranks, arrs)
+    ar_h = _all_reduce(hier, ranks, arrs)
+    for r in ranks:
+        assert ag_f[r].tobytes() == ag_h[r].tobytes()
+        assert all(x.tobytes() == y.tobytes()
+                   for x, y in zip(aa_f[r], aa_h[r]))
+        assert ar_f[r].tobytes() == ar_h[r].tobytes()
+    assert hier.stats["hierarchical"] == 3 * len(ranks)
+    assert hier.violations == []

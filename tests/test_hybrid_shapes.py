@@ -1,0 +1,413 @@
+"""Hybrid parallelism shapes (DESIGN.md §14): same-rank reshape
+migration is bit-identical, cfg-split denoise matches the batched-CFG
+path exactly (via the cross-backend demo), shape-keyed cost cells
+calibrate and interpolate independently, §11 residency invalidates on a
+cfg-dimension change, and packs refuse mixed shapes.  Deterministic
+hierarchical all_to_all / all_reduce coverage rides along (the
+property-test versions in test_gfc_hierarchical.py need hypothesis)."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.core.cost_model import CostModel
+from repro.core.gfc import GroupFreeComm
+from repro.core.migration import (execute_migration, layout_moved,
+                                  plan_migration)
+from repro.core.scheduler import (ControlPlane, Dispatch, PackedDispatch,
+                                  Policy, pack_signature)
+from repro.core.simulator import SimBackend
+from repro.core.trajectory import (Artifact, ClusterTopology,
+                                   ExecutionLayout, FieldSpec, Request)
+from repro.diffusion.adapters import convert_request, field_view
+from repro.diffusion.feature_cache import FeatureCachePlane
+
+CFG = DIT_IMAGE.reduced()
+SP4 = ExecutionLayout((0, 1, 2, 3))
+SPLIT = ExecutionLayout((0, 1, 2, 3), cfg=2)
+
+
+class _Null(Policy):
+    name = "null"
+
+    def schedule(self, view):
+        return []
+
+
+def _request(rid, res=128, steps=3, guidance=None):
+    return Request(id=rid, model="dit-image", height=res, width=res,
+                   frames=1, steps=steps, arrival=0.0, guidance=guidance)
+
+
+# ---------------------------------------------------------------------------
+# layout_moved: the reshape-aware movement trigger
+# ---------------------------------------------------------------------------
+
+def test_layout_moved_semantics():
+    assert not layout_moved(None, SP4)          # fresh artifact: no move
+    assert not layout_moved(SP4, SP4)
+    assert layout_moved(SP4, SPLIT)             # same ranks, cfg change
+    assert layout_moved(SPLIT, SP4)
+    assert layout_moved(SP4, ExecutionLayout((0, 1)))
+
+
+# ---------------------------------------------------------------------------
+# reshape migration: same ranks, different (cfg x sp) field views
+# ---------------------------------------------------------------------------
+
+def _latent_artifact(n_tok, layout, d=8):
+    fields = {
+        "latent": FieldSpec("sharded", (n_tok, d), "float32", 0),
+        "sigma": FieldSpec("meta"),
+    }
+    art = Artifact(id="a", request_id="r", role="latent", fields=fields,
+                   layout=layout)
+    full = np.arange(n_tok * d, dtype=np.float32).reshape(n_tok, d)
+    view = field_view(fields["latent"], layout)
+    art.data = {}
+    for r in layout.ranks:
+        off, size = view.slices[r]
+        art.data[r] = {"latent": full[off:off + size].copy(),
+                       "sigma": np.float32(0.7)}
+    return art, full
+
+
+def _check_against(art, full, layout):
+    view = field_view(art.fields["latent"], layout)
+    assert art.layout == layout
+    for r in layout.ranks:
+        off, size = view.slices[r]
+        assert art.data[r]["latent"].tobytes() == \
+            full[off:off + size].tobytes()
+        assert art.data[r]["sigma"] == np.float32(0.7)
+
+
+def test_reshape_migration_bit_identical():
+    """sp4 -> cfg2 x sp2 on the SAME four ranks re-slices every shard
+    (N/4 -> N/2, branch peers replicated) through the ordinary planner;
+    reshaping back restores the original shards bit for bit."""
+    comm = GroupFreeComm(4)
+    art, full = _latent_artifact(64, SP4)
+    entries = plan_migration(art.fields, SP4, SPLIT)
+    assert entries, "same-rank reshape must transfer, not no-op"
+    execute_migration(comm, art, SPLIT, entries)
+    _check_against(art, full, SPLIT)
+    # branch peers (same branch-local index) hold identical bytes
+    for i in range(2):
+        a = art.data[SPLIT.branch_ranks(0)[i]]["latent"]
+        b = art.data[SPLIT.branch_ranks(1)[i]]["latent"]
+        assert a.tobytes() == b.tobytes()
+    execute_migration(comm, art, SP4, plan_migration(art.fields, SPLIT,
+                                                     SP4))
+    _check_against(art, full, SP4)
+
+
+def test_reshape_plan_is_replication_aware():
+    """cfg2 x sp2 -> sp4: the outer quarters are local retains (ranks 0
+    and 3 already hold them); ranks 1 and 2 each fetch one quarter, and
+    each from the SINGLE canonical owner (earliest holder in src rank
+    order) — never once per branch peer, though ranks 2 and 3 hold the
+    same halves."""
+    fields = {"latent": FieldSpec("sharded", (64, 8), "float32", 0)}
+    entries = plan_migration(fields, SPLIT, SP4)
+    assert sorted((e.src_rank, e.dst_rank, e.global_range)
+                  for e in entries) == [
+        (0, 1, (16, 16)),       # second quarter from the cond leader
+        (1, 2, (32, 16)),       # third quarter from rank 1, not 3
+    ]
+
+
+# ---------------------------------------------------------------------------
+# cfg-merge exactness + cross-backend trace identity (the §14 demo)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def demo():
+    from repro.serving.hybrid_demo import run_demo
+    return run_demo(CFG)
+
+
+def test_demo_split_pixels_match_batched_control(demo):
+    """cfg2 x sp2 branch rows + one merge exchange per step produce
+    pixels bit-identical to the shard-size-matched batched-CFG control
+    (the §9 batching property plus identical fp32 merge arithmetic)."""
+    assert demo["pixels_match"]
+
+
+def test_demo_sim_wall_traces_identical(demo):
+    """The scripted sp4 -> reshape -> cfg2 x sp2 chain projects to the
+    same trace signature on the virtual-clock simulator and the
+    wall-clock thread runtime, cfg dimension included."""
+    assert demo["trace_match"]
+    assert demo["wall"]["timeline"] == [(0, "sp4"), (1, "sp4"),
+                                        (2, "cfg2x sp2"),
+                                        (3, "cfg2x sp2")]
+
+
+def test_demo_shape_search_off_is_scalar(demo):
+    """ElasticPolicy(hybrid=True) on an unguided workload is
+    byte-identical to scalar ElasticPolicy()."""
+    assert demo["scalar_identical"]
+
+
+# ---------------------------------------------------------------------------
+# shape-keyed cost cells
+# ---------------------------------------------------------------------------
+
+def test_shape_cost_keys_and_cells_independent():
+    assert CostModel._key("m", "denoise", 4096, 4) == "m|denoise|4096|4"
+    assert CostModel._key("m", "denoise", 4096, 4, cfg=1) == \
+        "m|denoise|4096|4|cfg1"
+    assert CostModel._key("m", "denoise", 4096, 4, cfg=2) == \
+        "m|denoise|4096|4|cfg2"
+
+    cm = CostModel()
+    base0 = cm.estimate("dit-image", "denoise", 4096, 4)
+    base1 = cm.estimate("dit-image", "denoise", 4096, 4, cfg=1)
+    cm.observe("dit-image", "denoise", 4096, 4, 9.0, cfg=2)
+    # the split cell took the measurement; scalar and batched cells
+    # never see it
+    assert cm.estimate("dit-image", "denoise", 4096, 4, cfg=2) == 9.0
+    assert cm.estimate("dit-image", "denoise", 4096, 4) == base0
+    assert cm.estimate("dit-image", "denoise", 4096, 4, cfg=1) == base1
+    # and vice versa: calibrating the unguided cell leaves the measured
+    # split cell untouched
+    cm.observe("dit-image", "denoise", 4096, 4, 0.5)
+    assert cm.estimate("dit-image", "denoise", 4096, 4, cfg=2) == 9.0
+
+
+def test_interpolation_never_crosses_cfg_cells():
+    """A calibrated cfg cell at a neighboring bucket must NOT feed the
+    unguided interpolation (and an uncalibrated cfg estimate scales the
+    unguided one analytically instead of borrowing cfg neighbors)."""
+    cm = CostModel()
+    cm.observe("dit-image", "denoise", 8192, 4, 7.0, cfg=2)
+    # unguided estimate at the neighbor bucket: falls back to the
+    # analytical curve — the cfg2 measurement is invisible to it
+    assert cm.estimate("dit-image", "denoise", 4096, 4) == \
+        cm.analytical("dit-image", "denoise", 4096, 4)
+    # uncalibrated split cell at another bucket: scaled from the
+    # unguided estimate by the analytical shape ratio
+    est = cm.estimate("dit-image", "denoise", 4096, 4, cfg=2)
+    base = cm.estimate("dit-image", "denoise", 4096, 4)
+    ref = cm.analytical("dit-image", "denoise", 4096, 4)
+    want = base * (cm.analytical("dit-image", "denoise", 4096, 4, cfg=2)
+                   / ref)
+    assert est == pytest.approx(want)
+
+
+def test_split_prices_below_batched_at_same_degree():
+    """The point of the shape: splitting the doubled CFG work across
+    branches beats batching it through one group at the same total
+    degree (paper-scale tokens)."""
+    cm = CostModel()
+    for tok in (4096, 16384):
+        split = cm.analytical("dit-image", "denoise", tok, 4, cfg=2)
+        batched = cm.analytical("dit-image", "denoise", tok, 4, cfg=1)
+        assert split < batched
+
+
+# ---------------------------------------------------------------------------
+# §11 residency vs the cfg dimension
+# ---------------------------------------------------------------------------
+
+def _denoise_tasks(graph):
+    return sorted((t for t in graph.tasks.values()
+                   if t.kind == "denoise"),
+                  key=lambda t: t.step_index)
+
+
+def test_residency_invalidates_on_cfg_change():
+    events = []
+    plane = FeatureCachePlane(3, emit=events.append)
+    g = convert_request(_request("r0"), CFG)
+    d = _denoise_tasks(g)
+    assert plane.stamp(d[0], SP4, g)["mode"] == "refresh"
+    assert "r0" in plane.entries
+    # a reshape onto a cfg layout drops residency with a cfg reason
+    assert plane.stamp(d[1], SPLIT, g) is None
+    assert "r0" not in plane.entries
+    assert ("cache_invalidate", "cfg-change") in [
+        (e["ev"], e.get("why")) for e in events]
+
+
+def test_guided_requests_bypass_cache():
+    plane = FeatureCachePlane(3)
+    g = convert_request(_request("r1", guidance=4.0), CFG)
+    d = _denoise_tasks(g)
+    # even at a scalar multi-rank layout, guided steps never stamp and
+    # never build residency
+    assert plane.stamp(d[0], SP4, g) is None
+    assert plane.entries == {}
+    assert "cache" not in d[0].meta
+
+
+# ---------------------------------------------------------------------------
+# packs refuse mixed shapes
+# ---------------------------------------------------------------------------
+
+def test_pack_signature_carries_guidance():
+    g0 = convert_request(_request("a"), CFG)
+    g1 = convert_request(_request("b", guidance=4.0), CFG)
+    g2 = convert_request(_request("c", guidance=4.0), CFG)
+    g3 = convert_request(_request("d", guidance=7.5), CFG)
+    t = {k: _denoise_tasks(g)[0] for k, g in
+         (("a", g0), ("b", g1), ("c", g2), ("d", g3))}
+    assert pack_signature(t["a"], g0.request) != \
+        pack_signature(t["b"], g1.request)
+    assert pack_signature(t["b"], g1.request) == \
+        pack_signature(t["c"], g2.request)
+    assert pack_signature(t["c"], g2.request) != \
+        pack_signature(t["d"], g3.request)
+
+
+def _cp_with(reqs):
+    cost = CostModel()
+    cp = ControlPlane(4, _Null(), cost, SimBackend(cost))
+    for r in reqs:
+        cp.submit(r, convert_request(r, CFG))
+    for rid, g in cp.graphs.items():
+        enc = [t for t in g.tasks.values() if t.kind == "encode"][0]
+        assert cp.apply(Dispatch(enc.id, ExecutionLayout((0,))))
+        for c in cp.backend.poll():
+            cp.on_completion(c)
+    return cp
+
+
+def _first_denoise(cp, rid):
+    return [t for t in cp.graphs[rid].ready_tasks()
+            if t.kind == "denoise"][0]
+
+
+def test_packs_refuse_guided_members_and_cfg_layouts():
+    cp = _cp_with([_request("a"), _request("b", guidance=4.0),
+                   _request("c", guidance=4.0)])
+    ta, tb, tc = (_first_denoise(cp, r) for r in "abc")
+    # a guided member poisons the pack even against an unguided twin
+    assert not cp.apply(PackedDispatch((ta.id, tb.id),
+                                       ExecutionLayout((0, 1))))
+    # two guided requests with the SAME signature still refuse: the
+    # batched executor has no per-member merge semantics
+    assert not cp.apply(PackedDispatch((tb.id, tc.id),
+                                       ExecutionLayout((0, 1))))
+    # a cfg>1 pack layout is refused outright, guided or not
+    assert not cp.apply(PackedDispatch((ta.id,), SPLIT))
+    # the same members pack fine once the shape objections are gone
+    cp2 = _cp_with([_request("a"), _request("b")])
+    ta, tb = (_first_denoise(cp2, r) for r in "ab")
+    assert cp2.apply(PackedDispatch((ta.id, tb.id),
+                                    ExecutionLayout((0, 1))))
+
+
+def test_scheduler_rejects_malformed_shapes():
+    """Shape validity: cfg must divide the rank count (layout
+    invariant) and a split needs a guided request (_shape_ok)."""
+    with pytest.raises(AssertionError):
+        ExecutionLayout((0, 1, 2), cfg=2)       # does not divide
+    cp = _cp_with([_request("a"), _request("g", guidance=4.0)])
+    ta = _first_denoise(cp, "a")
+    tg = _first_denoise(cp, "g")
+    # unguided request on a split shape has no uncond branch to run
+    assert not cp.apply(Dispatch(ta.id, SPLIT))
+    # well-formed split dispatch of the guided request is accepted
+    assert cp.apply(Dispatch(tg.id, SPLIT))
+
+
+# ---------------------------------------------------------------------------
+# hierarchical all_to_all / all_reduce (deterministic; hypothesis-free)
+# ---------------------------------------------------------------------------
+
+def _run_ranks(ranks, fn):
+    errs = []
+
+    def wrap(r):
+        try:
+            fn(r)
+        except Exception as e:   # noqa: BLE001
+            errs.append((r, e))
+    ts = [threading.Thread(target=wrap, args=(r,)) for r in ranks]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+    assert not any(t.is_alive() for t in ts), "deadlock"
+    if errs:
+        raise errs[0][1]
+
+
+def _collect(comm, ranks, issue):
+    desc = comm.register_group(ranks)
+    out = {}
+
+    def fn(r):
+        out[r] = issue(desc, r)
+    _run_ranks(ranks, fn)
+    return out
+
+
+@pytest.mark.parametrize("ranks", [(0, 3, 1, 4), (5, 0, 2), (0, 1, 3)])
+def test_hierarchical_all_to_all_matches_flat(ranks):
+    """Spanning-group all_to_all (merge-exchange substrate): each host
+    block crosses the fabric once, and every received shard is bit-exact
+    versus the flat exchange — including a host shrunken to one
+    survivor ((0, 1, 3): rank 2 dead, DESIGN.md §13)."""
+    topo = ClusterTopology(num_hosts=2, ranks_per_host=3)
+    size = len(ranks)
+    shards = {r: [(np.arange(6).reshape(2, 3) + 100 * r + j)
+                  .astype(np.float16) for j in range(size)]
+              for r in ranks}
+    flat = GroupFreeComm(6)
+    hier = GroupFreeComm(6, topology=topo)
+    a = _collect(flat, ranks,
+                 lambda d, r: flat.all_to_all(d, r, shards[r]))
+    b = _collect(hier, ranks,
+                 lambda d, r: hier.all_to_all(d, r, shards[r]))
+    for r in ranks:
+        for pa, pb in zip(a[r], b[r]):
+            assert pa.tobytes() == pb.tobytes()
+    # correctness, not just flat-equivalence: rank r's j-th received
+    # shard is what group member j sent toward r's own group index
+    for i, r in enumerate(ranks):
+        for j, p in enumerate(ranks):
+            assert np.array_equal(b[r][j], shards[p][i])
+    assert hier.stats["hierarchical"] == len(ranks)
+    assert hier.violations == []
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "mean"])
+def test_hierarchical_all_reduce_matches_flat(op):
+    """Spanning-group all_reduce gathers parts hierarchically but
+    combines locally in group order — the fp32 association order (and
+    so every bit) matches the flat path."""
+    topo = ClusterTopology(num_hosts=2, ranks_per_host=3)
+    ranks = (4, 0, 2, 5)
+    rng = np.random.default_rng(3)
+    arrs = {r: rng.normal(size=(3, 4)).astype(np.float32) for r in ranks}
+    flat = GroupFreeComm(6)
+    hier = GroupFreeComm(6, topology=topo)
+    a = _collect(flat, ranks,
+                 lambda d, r: flat.all_reduce(d, r, arrs[r], op=op))
+    b = _collect(hier, ranks,
+                 lambda d, r: hier.all_reduce(d, r, arrs[r], op=op))
+    ref = {"sum": np.stack([arrs[r] for r in ranks]).sum(0),
+           "max": np.stack([arrs[r] for r in ranks]).max(0),
+           "mean": np.stack([arrs[r] for r in ranks]).mean(0)}[op]
+    for r in ranks:
+        assert a[r].tobytes() == b[r].tobytes()
+        assert b[r].tobytes() == ref.tobytes()
+    assert hier.stats["hierarchical"] == len(ranks)
+
+
+def test_host_local_group_stays_flat():
+    """A group confined to one host never takes the two-stage path."""
+    topo = ClusterTopology(num_hosts=2, ranks_per_host=3)
+    ranks = (0, 2, 1)
+    shards = {r: [np.full((2,), r * 10 + j, np.float32)
+                  for j in range(3)] for r in ranks}
+    hier = GroupFreeComm(6, topology=topo)
+    _collect(hier, ranks,
+             lambda d, r: hier.all_to_all(d, r, shards[r]))
+    _collect(hier, ranks,
+             lambda d, r: hier.all_reduce(d, r, shards[r][0]))
+    assert hier.stats["hierarchical"] == 0
