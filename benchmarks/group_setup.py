@@ -66,12 +66,23 @@ for size in (2, 4, 8):
         cache.bind("all_gather", d2, (1024,), jnp.float32) # cache hit
     out[f"cache_hit_size{size}_us"] = (time.perf_counter() - t0) / reps * 1e6
 
-# GFC descriptor registration (the paper's ~60us number)
+# GFC descriptor registration (the paper's ~60us number), with each
+# call ALSO sampled through the telemetry plane (DESIGN.md §15) so the
+# table can report the setup-latency distribution, not just the mean
+from repro.core.telemetry import Telemetry
+tel = Telemetry()
+comm.telemetry = tel
 t0 = time.perf_counter()
 reps = 2000
 for i in range(reps):
     comm.register_group((i % 8, (i + 3) % 8))
 out["gfc_register_us"] = (time.perf_counter() - t0) / reps * 1e6
+comm.telemetry = None
+pct = tel.gfc_percentiles()
+out["gfc_register_p50_us"] = pct["p50_us"]
+out["gfc_register_p90_us"] = pct["p90_us"]
+out["gfc_register_p99_us"] = pct["p99_us"]
+out["gfc_register_hist"] = tel.gfc_histogram()
 
 # warm collective through a bound executable
 d = comm.register_group((0, 1, 2, 3))
@@ -111,6 +122,14 @@ def rows(data: dict) -> list[tuple[str, float, str]]:
                     "descriptor_bind_same_size"))
     out.append(("group_setup.gfc_register", data["gfc_register_us"],
                 "paper_60us"))
+    hist = data.get("gfc_register_hist", {})
+    nonzero = ";".join(f"{k}={v}" for k, v in hist.items() if v)
+    out.append(("group_setup.gfc_register_p50",
+                data.get("gfc_register_p50_us", float("nan")),
+                "telemetry_histogram"))
+    out.append(("group_setup.gfc_register_p99",
+                data.get("gfc_register_p99_us", float("nan")),
+                nonzero or "telemetry_histogram"))
     out.append(("group_setup.warm_collective", data["warm_collective_us"],
                 "steady_state"))
     return out

@@ -3,7 +3,11 @@
 Legacy (fixed-pipeline, static full-machine SP) vs GF-DiT policies
 (FCFS-SP1, SRTF-SP1, SRTF-SPmax, EDF) on the short and foreground-burst
 traces for both the image and video models.  Metrics: throughput, mean
-latency, P95 latency, SLO attainment (failures count as violations).
+latency, P95 latency, SLO attainment (failures count as violations) —
+plus, from the telemetry plane (DESIGN.md §15), per-policy
+``rank_utilization`` (mean busy fraction over the makespan) and
+``goodput_per_rank`` (completions per rank-second), recorded for every
+workload slice into ``results/policies_e2e.json``.
 
 Also runs the many-small-images burst workload (DESIGN.md §9 step
 packing): ``packing`` and ``elastic-pack`` co-batch same-shape denoise
@@ -67,6 +71,21 @@ STEPS = 25
 MH_TOPO = ClusterTopology(num_hosts=2, ranks_per_host=4)
 
 
+def _tel():
+    from repro.core.telemetry import Telemetry
+    return Telemetry()
+
+
+def _tel_metrics(cp, m: dict) -> dict:
+    """Merge the telemetry plane's per-policy efficiency numbers
+    (DESIGN.md §15) into one workload-slice metrics dict: mean rank
+    utilization over the makespan and goodput per rank-second."""
+    s = cp.telemetry.summary()
+    m["rank_utilization"] = s["rank_utilization"]
+    m["goodput_per_rank"] = s["goodput_per_rank"]
+    return m
+
+
 def _trace(model: str, workload: str):
     cost = CostModel()
     if workload == "short":
@@ -122,7 +141,7 @@ def _run_mixed(out: dict):
     for pol in POLICIES:
         cost = CostModel()
         cp = ControlPlane(NUM_RANKS, make_policy(pol, NUM_RANKS), cost,
-                          SimBackend(cost, jitter=0.05))
+                          SimBackend(cost, jitter=0.05), telemetry=_tel())
         trace = mixed_burst_trace(CostModel(), duration=240, load=1.0,
                                   num_ranks=NUM_RANKS, steps=STEPS,
                                   seed=13)
@@ -136,8 +155,8 @@ def _run_mixed(out: dict):
             "dit-video": 12 * standalone_service_time(
                 "dit-video", "S", base, max(STEPS // 3, 4)),
         }
-        out[f"mixed|burst|{pol}"] = _metrics_with_timeout(
-            cp, timeouts)
+        out[f"mixed|burst|{pol}"] = _tel_metrics(
+            cp, _metrics_with_timeout(cp, timeouts))
 
 
 def _run_small_burst(out: dict):
@@ -150,7 +169,7 @@ def _run_small_burst(out: dict):
     for pol in ("elastic", "elastic-pack", "packing", "edf"):
         cost = CostModel()
         cp = ControlPlane(NUM_RANKS, make_policy(pol, NUM_RANKS), cost,
-                          SimBackend(cost, jitter=0.05))
+                          SimBackend(cost, jitter=0.05), telemetry=_tel())
         trace = small_image_burst_trace(CostModel(), duration=45,
                                         load=2.0, num_ranks=NUM_RANKS,
                                         steps=12, seed=17)
@@ -159,7 +178,7 @@ def _run_small_burst(out: dict):
         cp.run()
         timeout = 12 * standalone_service_time("dit-image", "S",
                                                CostModel(), 12)
-        m = _metrics_with_timeout(cp, timeout)
+        m = _tel_metrics(cp, _metrics_with_timeout(cp, timeout))
         packs = [e for e in cp.events if e["ev"] == "packed_dispatch"]
         m["packs"] = len(packs)
         m["max_pack_batch"] = max((e["batch"] for e in packs), default=0)
@@ -191,7 +210,7 @@ def _run_cache(out: dict):
             ElasticPolicy(candidate_degrees=list(CACHE_MIN_DEGREE),
                           cache_affinity=affinity),
             cost, SimBackend(cost, jitter=0.05),
-            cache_interval=interval)
+            cache_interval=interval, telemetry=_tel())
         trace = cache_trace(CostModel(), duration=240, load=1.6,
                             num_ranks=NUM_RANKS, steps=STEPS, seed=29)
         for r in trace:
@@ -199,7 +218,7 @@ def _run_cache(out: dict):
         cp.run()
         timeout = 12 * standalone_service_time("dit-image", "M",
                                                CostModel(), STEPS)
-        m = _metrics_with_timeout(cp, timeout)
+        m = _tel_metrics(cp, _metrics_with_timeout(cp, timeout))
         m["cache_hits"] = sum(
             1 for e in cp.events if e["ev"] == "dispatch"
             and str(e.get("cache", "")).startswith("hit"))
@@ -227,7 +246,8 @@ def _run_multi_host(out: dict):
     for pol in ("elastic", "elastic-blind", "edf"):
         cost = CostModel()
         cp = ControlPlane(MH_TOPO, make_policy(pol, MH_TOPO.num_ranks),
-                          cost, SimBackend(cost, jitter=0.05))
+                          cost, SimBackend(cost, jitter=0.05),
+                          telemetry=_tel())
         trace = multi_host_trace(CostModel(), duration=240, load=1.0,
                                  num_ranks=MH_TOPO.num_ranks,
                                  steps=STEPS, seed=23)
@@ -236,7 +256,7 @@ def _run_multi_host(out: dict):
         cp.run()
         timeout = 12 * standalone_service_time("dit-image", "M",
                                                CostModel(), STEPS)
-        m = _metrics_with_timeout(cp, timeout)
+        m = _tel_metrics(cp, _metrics_with_timeout(cp, timeout))
         spans: dict[int, int] = {}
         for e in cp.events:
             if e["ev"] == "dispatch" and e["kind"] == "denoise":
@@ -260,7 +280,8 @@ def _run_hybrid(out: dict):
     for pol in ("elastic", "elastic-hybrid"):
         cost = CostModel()
         cp = ControlPlane(MH_TOPO, make_policy(pol, MH_TOPO.num_ranks),
-                          cost, SimBackend(cost, jitter=0.05))
+                          cost, SimBackend(cost, jitter=0.05),
+                          telemetry=_tel())
         trace = hybrid_trace(CostModel(), duration=240, load=0.9,
                              num_ranks=MH_TOPO.num_ranks, steps=STEPS,
                              seed=37)
@@ -274,7 +295,7 @@ def _run_hybrid(out: dict):
             "dit-video": 12 * standalone_service_time(
                 "dit-video", "S", base, STEPS),
         }
-        m = _metrics_with_timeout(cp, timeouts)
+        m = _tel_metrics(cp, _metrics_with_timeout(cp, timeouts))
         shapes: dict[str, int] = {}
         for e in cp.events:
             if e["ev"] == "dispatch" and e["kind"] == "denoise":
@@ -323,13 +344,13 @@ def _run_chaos(out: dict):
                           make_policy("elastic", MH_TOPO.num_ranks),
                           cost, SimBackend(cost, jitter=0.05),
                           injector=inj, snapshot_interval=snap,
-                          failure_recovery=recovery)
+                          failure_recovery=recovery, telemetry=_tel())
         for r in _trace():
             cp.submit(r, convert_request(r, DIT_IMAGE))
         cp.run()
         timeout = 12 * standalone_service_time("dit-image", "M",
                                                CostModel(), STEPS)
-        m = _metrics_with_timeout(cp, timeout)
+        m = _tel_metrics(cp, _metrics_with_timeout(cp, timeout))
         for ev in ("host_down", "host_up", "failout", "rollback",
                    "request_failed"):
             m[ev + "s"] = sum(1 for e in cp.events if e["ev"] == ev)
@@ -364,7 +385,8 @@ def run(only: str | None = None) -> dict:
             for pol in POLICIES:
                 cost = CostModel()
                 cp = ControlPlane(NUM_RANKS, make_policy(pol, NUM_RANKS),
-                                  cost, SimBackend(cost, jitter=0.05))
+                                  cost, SimBackend(cost, jitter=0.05),
+                                  telemetry=_tel())
                 trace = _trace(model, workload)
                 for r in trace:
                     cp.submit(r, convert_request(r, model_cfg))
@@ -375,8 +397,8 @@ def run(only: str | None = None) -> dict:
                     standalone_service_time
                 timeout = 12 * standalone_service_time(
                     model, "M", CostModel(), STEPS)
-                out[f"{model}|{workload}|{pol}"] = _metrics_with_timeout(
-                    cp, timeout)
+                out[f"{model}|{workload}|{pol}"] = _tel_metrics(
+                    cp, _metrics_with_timeout(cp, timeout))
     RESULTS.mkdir(exist_ok=True)
     (RESULTS / "policies_e2e.json").write_text(json.dumps(out, indent=1))
     return out

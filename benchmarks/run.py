@@ -20,7 +20,7 @@ def main() -> None:
     from benchmarks import (arrival_scaling, gfc_collectives, group_setup,
                             migration_overhead, overhead_fcfs_sp4,
                             policies_e2e, roofline, sim_fidelity,
-                            stage_scaling)
+                            stage_scaling, telemetry_suite)
     suites = [
         ("group_setup(Table1)", group_setup),
         ("policies_e2e(Fig6)", policies_e2e),
@@ -31,6 +31,7 @@ def main() -> None:
         ("migration_overhead(S5.3)", migration_overhead),
         ("overhead_fcfs_sp4(Fig8)", overhead_fcfs_sp4),
         ("roofline_kernels(deliverable_g)", roofline),
+        ("telemetry(S15)", telemetry_suite),
     ]
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default=None,

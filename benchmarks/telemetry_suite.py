@@ -1,0 +1,87 @@
+"""Telemetry suite (DESIGN.md §15): the cross-backend identity gate.
+
+Serves the hybrid-parallelism and failure-domain demos with telemetry
+instruments attached on BOTH execution backends and gates on the new
+invariant alongside ``trace_signature``: every clock-independent
+telemetry stream — per-rank state sequences, policy decision records
+(with their staged explanations), and per-request lifecycle structure —
+must agree byte-for-byte between the virtual-clock simulator and the
+wall-clock thread runtime.  Clock-dependent streams (loop counters,
+overlay spans, GFC latency samples) are exercised but excluded from the
+comparison by construction.
+
+The wall legs' Perfetto/Chrome traces are exported into
+``benchmarks/results/`` (``hybrid_trace.json``, ``failure_trace.json``)
+— CI uploads that directory as an artifact, so every run ships
+loadable ``ui.perfetto.dev`` timelines.  A gate failure raises, which
+``benchmarks/run.py`` turns into a non-zero exit.
+
+The elastic demo's telemetry identity is gated in tier-1 pytest
+(tests/test_elastic_backends.py), so this suite covers the two demos
+tier-1 does not serve end-to-end.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results"
+
+
+def _leg(name: str, demo_result: dict) -> tuple[dict, list[str]]:
+    problems = []
+    if not demo_result["trace_match"]:
+        problems.append(f"{name}: sim/wall trace signatures differ")
+    if not demo_result["telemetry_match"]:
+        problems.append(f"{name}: clock-independent telemetry differs")
+    tel = demo_result["wall"]["telemetry_obj"]
+    tel.perfetto(str(RESULTS / f"{name}_trace.json"))
+    s = tel.summary()
+    return {
+        "trace_match": demo_result["trace_match"],
+        "telemetry_match": demo_result["telemetry_match"],
+        "decisions": len(tel.decisions),
+        "explained": sum(1 for d in tel.decisions
+                         if d.get("explanation") is not None),
+        "makespan_s": s["makespan_s"],
+        "rank_utilization": s["rank_utilization"],
+        "goodput_per_rank": s["goodput_per_rank"],
+        "completed": s["completed"],
+        "counters": dict(tel.counters),
+    }, problems
+
+
+def run() -> dict:
+    from repro.serving import failure_demo, hybrid_demo
+    RESULTS.mkdir(exist_ok=True)
+    out, problems = {}, []
+    leg, probs = _leg("hybrid", hybrid_demo.run_demo())
+    out["hybrid"] = leg
+    problems += probs
+    leg, probs = _leg("failure", failure_demo.run_demo())
+    out["failure"] = leg
+    problems += probs
+    (RESULTS / "telemetry_suite.json").write_text(
+        json.dumps(out, indent=1, default=str))
+    if problems:
+        raise RuntimeError("; ".join(problems))
+    return out
+
+
+def rows(data: dict) -> list[tuple[str, float, str]]:
+    out = []
+    for name in ("hybrid", "failure"):
+        d = data[name]
+        derived = (f"telemetry_match={d['telemetry_match']};"
+                   f"util={d['rank_utilization']:.3f};"
+                   f"goodput_per_rank={d['goodput_per_rank']:.4f};"
+                   f"decisions={d['decisions']}")
+        out.append((f"telemetry.{name}_demo", d["makespan_s"] * 1e6,
+                    derived))
+    return out
+
+
+if __name__ == "__main__":
+    d = run()
+    for name, us, derived in rows(d):
+        print(f"{name},{us:.1f},{derived}")

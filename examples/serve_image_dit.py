@@ -23,6 +23,12 @@ runs cond/uncond branches — batched through one group, or split as a
 shape-keyed cost model prices cheaper; composes with ``--use-pallas``
 and ``--cache-interval`` (guided steps bypass the cache; unguided
 requests in the same mix still hit it).
+``--emit-trace PATH`` attaches the telemetry plane (DESIGN.md §15) and
+writes a Perfetto/Chrome ``trace.json`` of the whole run — per-rank
+busy/migrating timelines, per-request lifecycle spans, and policy
+decision instants — loadable in chrome://tracing or ui.perfetto.dev;
+it also prints an end-of-run utilization and decision summary table.
+Composes with every flag above.
 """
 import argparse
 
@@ -69,6 +75,10 @@ def main():
                     help="serve guided requests (classifier-free "
                          "guidance) under the hybrid shape-searching "
                          "policy (DESIGN.md §14)")
+    ap.add_argument("--emit-trace", metavar="PATH", default=None,
+                    help="attach the telemetry plane and write a "
+                         "Perfetto/Chrome trace.json of the run here "
+                         "(DESIGN.md §15)")
     args = ap.parse_args()
 
     if args.cfg_split:
@@ -82,10 +92,15 @@ def main():
     cfg = DIT_IMAGE.reduced()
     if args.use_pallas:
         cfg = cfg.with_(use_pallas=True)
+    telemetry = None
+    if args.emit_trace:
+        from repro.core.telemetry import Telemetry
+        telemetry = Telemetry()
     engine = ServingEngine(cfg,
                            _policy(args.policy, 4, args.min_degree),
                            num_ranks=4,
-                           cache_interval=args.cache_interval)
+                           cache_interval=args.cache_interval,
+                           telemetry=telemetry)
 
     classes = {"S": 128, "M": 192, "L": 256}
     requests = []
@@ -137,6 +152,26 @@ def main():
                         and ev.get("cache") == "refresh")
         print(f"feature cache: {hits} hit steps (all-gather skipped), "
               f"{refreshes} refresh steps")
+    if telemetry is not None:
+        telemetry.perfetto(args.emit_trace)
+        s = telemetry.summary()
+        print(f"\ntelemetry summary (trace -> {args.emit_trace}):")
+        print(f"  makespan: {s['makespan_s']:.2f}s   "
+              f"rank utilization: {s['rank_utilization']:.1%}   "
+              f"goodput/rank: {s['goodput_per_rank']:.4f} req/rank-s")
+        print("  rank | utilization")
+        for r, u in sorted(s["utilization_per_rank"].items()):
+            print(f"  {r:>4} | {'#' * int(u * 40):<40} {u:.1%}")
+        print("  decisions by action: " + ", ".join(
+            f"{k} x{v}" for k, v in sorted(s["actions"].items())))
+        whys = {}
+        for d in telemetry.decisions:
+            ex = d.get("explanation")
+            if ex is not None:
+                whys[ex["why"]] = whys.get(ex["why"], 0) + 1
+        if whys:
+            print("  explained decisions: " + ", ".join(
+                f"{k} x{v}" for k, v in sorted(whys.items())))
     engine.shutdown()
 
 

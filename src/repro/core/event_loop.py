@@ -114,6 +114,11 @@ class EventLoop:
     def run(self, until: float = math.inf, max_events: int = 10 ** 7):
         plane, clock = self.plane, self.clock
         backend = plane.backend
+        # loop-health counters (DESIGN.md §15): clock-DEPENDENT by
+        # construction — the wall clock polls through many more
+        # iterations than the virtual clock jumps — so they live in the
+        # counter stream, never in the identity projection
+        tel = getattr(plane, "telemetry", None)
         for _ in range(max_events):
             plane.now = max(plane.now, clock.now())
             if plane.now >= until:
@@ -129,6 +134,10 @@ class EventLoop:
             completions = clock.wait(backend, plane.next_timed())
             if completions is None:
                 break                   # event sources exhausted
+            if tel is not None:
+                tel.counter("loop_iterations")
+                if completions:
+                    tel.counter("completions", len(completions))
             for c in completions:
                 plane.on_completion(c)
         return plane

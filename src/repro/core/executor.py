@@ -158,20 +158,30 @@ class ThreadBackend:
         cache's plane-stamped effects (DESIGN.md §11) — migrate the warm
         snapshot on a same-degree layout change, or re-home/allocate the
         snapshot slots a refresh gather will fill."""
+        tel = getattr(self.plane, "telemetry", None) \
+            if hasattr(self, "plane") else None
         for aid in task.inputs:
             art = graph.artifacts[aid]
             if art.data is not None and \
                     layout_moved(art.layout, layout):
+                t0 = time.monotonic()
                 entries = plan_migration(art.fields, art.layout, layout)
                 execute_migration(self.comm, art, layout, entries)
+                if tel is not None:
+                    tel.span(layout.ranks[0], t0, time.monotonic(),
+                             "migrate", art.nbytes)
         stamp = task.meta.get("cache")
         if stamp is not None:
             cart = graph.artifacts[stamp["art"]]
             if stamp["migrate"] and cart.data is not None and \
                     cart.layout is not None and \
                     cart.layout.ranks != layout.ranks:
+                t0 = time.monotonic()
                 entries = plan_migration(cart.fields, cart.layout, layout)
                 execute_migration(self.comm, cart, layout, entries)
+                if tel is not None:
+                    tel.span(layout.ranks[0], t0, time.monotonic(),
+                             "migrate-cache", cart.nbytes)
             if cart.data is None:
                 cart.data = {}
             for r in layout.ranks:

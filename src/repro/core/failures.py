@@ -310,6 +310,9 @@ def host_down(plane, host: int) -> None:
     plane.free_ranks -= ranks
     plane.events.append({"t": plane.now, "ev": "host_down", "host": host,
                          "ranks": sorted(ranks)})
+    if plane.telemetry is not None:
+        plane.telemetry.ranks_dead(plane.now, ranks)
+        plane.telemetry.counter("host_down")
     # 2. pins whose boundary would wait forever on dead ranks
     for rid in sorted(plane.pinned):
         if set(plane.pinned[rid].ranks) & ranks:
@@ -374,6 +377,11 @@ def host_up(plane, host: int) -> None:
     plane.free_ranks |= ranks - held
     plane.events.append({"t": plane.now, "ev": "host_up", "host": host,
                          "ranks": sorted(ranks)})
+    if plane.telemetry is not None:
+        # held ranks (a stale dispatch still draining) go idle at their
+        # drain completion, like any other completion-freed rank
+        plane.telemetry.ranks_idle(plane.now, ranks - held)
+        plane.telemetry.counter("host_up")
 
 
 def repair_request(plane, rid: str) -> bool:
@@ -437,6 +445,13 @@ def repair_request(plane, rid: str) -> bool:
                          "step": resume,
                          "snapshot": -1 if restored is None else restored,
                          "lost": sorted(lost)})
+    if plane.telemetry is not None:
+        # artifact ids are a process-global counter (not run-stable), so
+        # the identity projection keeps the count and drops the list
+        plane.telemetry.request_event(
+            plane.now, rid, "rollback", step=resume,
+            snapshot=-1 if restored is None else restored,
+            n_lost=len(lost), lost=sorted(lost))
     return True
 
 

@@ -166,6 +166,12 @@ class GroupFreeComm:
         self.stats = {"registrations": 0, "collectives": 0,
                       "bytes_staged": 0, "reg_seconds": 0.0,
                       "hierarchical": 0}
+        # telemetry plane (DESIGN.md §15): set by the serving engine (or
+        # a benchmark) to collect per-registration latency samples and
+        # the wall collective-overlay spans.  Instruments only APPEND to
+        # telemetry lists — GIL-atomic, safe from worker threads (the
+        # hierarchical planner registers sub-groups under `_cv`).
+        self.telemetry = None
 
     # ------------------------------------------------------------------
     # group registration: METADATA ONLY (the paper's ~60 us operation)
@@ -174,7 +180,10 @@ class GroupFreeComm:
         t0 = time.perf_counter()
         desc = GroupDescriptor(gid=next(self._gids), ranks=tuple(ranks))
         self.stats["registrations"] += 1
-        self.stats["reg_seconds"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self.stats["reg_seconds"] += dt
+        if self.telemetry is not None:
+            self.telemetry.gfc_register(dt)
         return desc
 
     def register_shape(self, ranks: tuple[int, ...],
@@ -396,8 +405,27 @@ class GroupFreeComm:
     # ------------------------------------------------------------------
     # collectives (issued by every member rank)
     # ------------------------------------------------------------------
+    def _timed(self, op: str, desc: GroupDescriptor, rank: int,
+               fn, *args):
+        """Wall collective-overlay instrument (DESIGN.md §15): times one
+        rank's passage through a collective in absolute monotonic time.
+        Disabled path is one None check — no lambda, no timestamp."""
+        tel = self.telemetry
+        if tel is None:
+            return fn(*args)
+        t0 = time.monotonic()
+        try:
+            return fn(*args)
+        finally:
+            tel.span(rank, t0, time.monotonic(), op, desc.size)
+
     def all_gather(self, desc: GroupDescriptor, rank: int,
                    shard: np.ndarray, axis: int = 0) -> np.ndarray:
+        return self._timed("all_gather", desc, rank, self._all_gather,
+                           desc, rank, shard, axis)
+
+    def _all_gather(self, desc: GroupDescriptor, rank: int,
+                    shard: np.ndarray, axis: int = 0) -> np.ndarray:
         shard = np.asarray(shard)
         if self._spans_hosts(desc):
             return self._all_gather_hier(desc, rank, shard, axis)
@@ -410,6 +438,11 @@ class GroupFreeComm:
 
     def all_to_all(self, desc: GroupDescriptor, rank: int,
                    shards: list[np.ndarray]) -> list[np.ndarray]:
+        return self._timed("all_to_all", desc, rank, self._all_to_all,
+                           desc, rank, shards)
+
+    def _all_to_all(self, desc: GroupDescriptor, rank: int,
+                    shards: list[np.ndarray]) -> list[np.ndarray]:
         assert len(shards) == desc.size
         my_idx = desc.local_index(rank)
         if self._spans_hosts(desc):
@@ -429,6 +462,11 @@ class GroupFreeComm:
 
     def all_reduce(self, desc: GroupDescriptor, rank: int,
                    x: np.ndarray, op: str = "sum") -> np.ndarray:
+        return self._timed("all_reduce", desc, rank, self._all_reduce,
+                           desc, rank, x, op)
+
+    def _all_reduce(self, desc: GroupDescriptor, rank: int,
+                    x: np.ndarray, op: str = "sum") -> np.ndarray:
         if self._spans_hosts(desc):
             # hierarchical parts-gather, then the SAME local combine as
             # the flat path — np.stack in desc.ranks order — so the fp32
@@ -450,6 +488,12 @@ class GroupFreeComm:
 
     def broadcast(self, desc: GroupDescriptor, rank: int,
                   x: Optional[np.ndarray], root_local: int = 0) -> np.ndarray:
+        return self._timed("broadcast", desc, rank, self._broadcast,
+                           desc, rank, x, root_local)
+
+    def _broadcast(self, desc: GroupDescriptor, rank: int,
+                   x: Optional[np.ndarray],
+                   root_local: int = 0) -> np.ndarray:
         epoch = self._epoch.get((rank, desc.gid), 0)
         root_rank = desc.ranks[root_local]
         if rank == root_rank:
@@ -464,6 +508,9 @@ class GroupFreeComm:
 
     def send(self, desc: GroupDescriptor, rank: int, x: np.ndarray):
         """P2P send over a logical pair group (migration path, §5.3)."""
+        return self._timed("send", desc, rank, self._send, desc, rank, x)
+
+    def _send(self, desc: GroupDescriptor, rank: int, x: np.ndarray):
         assert desc.size == 2 and rank in desc.ranks
         epoch = self._epoch.get((rank, desc.gid), 0)
         self._stage_put(desc, epoch, rank, np.asarray(x))
@@ -471,6 +518,9 @@ class GroupFreeComm:
         self._prune(desc, epoch)
 
     def recv(self, desc: GroupDescriptor, rank: int) -> np.ndarray:
+        return self._timed("recv", desc, rank, self._recv, desc, rank)
+
+    def _recv(self, desc: GroupDescriptor, rank: int) -> np.ndarray:
         assert desc.size == 2 and rank in desc.ranks
         epoch = self._epoch.get((rank, desc.gid), 0)
         peer = desc.ranks[0] if desc.ranks[1] == rank else desc.ranks[1]

@@ -786,6 +786,19 @@ class ElasticPolicy(Policy):
                         continue
                 # drop the minority hosts first: the shrunk pin
                 # should reduce span whenever it can (DESIGN.md §10)
+                if view.telemetry is not None:
+                    # decision explanation (DESIGN.md §15): the beaten
+                    # alternatives are structural; clock-derived numbers
+                    # ride the auto-dropped "metrics" sub-dict
+                    view.telemetry.stage("reallocate", rid, {
+                        "why": "shrink", "from_degree": lay.degree,
+                        "to_degree": tgt,
+                        "alternatives": [
+                            {"choice": "hold-degree"},
+                            {"choice": "preempt"}],
+                        "metrics": {"queue_depth": queue_depth,
+                                    "relief": relief,
+                                    "free": len(free)}})
                 actions.append(Reallocate(
                     rid, ExecutionLayout(
                         _shrink_ranks(lay.ranks, tgt, topo))))
@@ -815,6 +828,15 @@ class ElasticPolicy(Policy):
             for t, lay in victims:
                 if lack <= 0:
                     break
+                if view.telemetry is not None:
+                    view.telemetry.stage("preempt", t.id, {
+                        "why": "slo-demand",
+                        "victim_degree": lay.degree,
+                        "alternatives": [
+                            {"choice": "shrink",
+                             "note": "no free boundary to pin"},
+                            {"choice": "wait-for-boundary"}],
+                        "metrics": {"demand": demand, "lack": lack}})
                 actions.append(Preempt(t.id))
                 reclaiming += lay.degree
                 lack -= lay.degree
@@ -843,16 +865,22 @@ class ElasticPolicy(Policy):
                 # the machine for it starves still-winnable requests.
                 # The rescue test prices the span the grown layout would
                 # actually touch (DESIGN.md §10).
-                want = None
+                want, alts = None, []
                 for d in cands:
                     if d <= lay.degree or d - lay.degree > len(free):
                         continue
                     ext = _grow_ranks(free, d - lay.degree, topo,
                                       lay.ranks)
                     span_d = topo.span_of(lay.ranks + ext) if topo else 1
-                    if view.now + self._remaining(view, req, g, d,
-                                                  span_d) \
-                            <= req.deadline:
+                    eta_d = view.now + self._remaining(view, req, g, d,
+                                                       span_d)
+                    if view.telemetry is not None:
+                        alts.append({"degree": d,
+                                     "metrics": {
+                                         "eta": eta_d,
+                                         "rescues":
+                                         eta_d <= req.deadline}})
+                    if eta_d <= req.deadline:
                         want = d
                         break
             else:
@@ -863,8 +891,15 @@ class ElasticPolicy(Policy):
                 bigger = [d for d in cands
                           if lay.degree < d <= lay.degree + len(free)]
                 want = bigger[-1] if bigger else None
+                alts = [{"degree": d} for d in bigger]
             if want is None or want <= lay.degree:
                 continue
+            if view.telemetry is not None:
+                view.telemetry.stage("reallocate", rid, {
+                    "why": ("grow-rescue" if req.deadline is not None
+                            else "grow-soak"),
+                    "from_degree": lay.degree, "to_degree": want,
+                    "alternatives": alts})
             extra = _grow_ranks(free, want - lay.degree, topo, lay.ranks)
             free = [r for r in free if r not in set(extra)]
             actions.append(Reallocate(rid, ExecutionLayout(
@@ -916,6 +951,13 @@ class ElasticPolicy(Policy):
                     if move >= gain:
                         continue
                 free = [r for r in free if r not in set(cand)]
+                if view.telemetry is not None:
+                    view.telemetry.stage("reallocate", rid, {
+                        "why": "repin-span",
+                        "from_span": topo.span_of(lay.ranks),
+                        "to_span": topo.span_of(cand),
+                        "pending_steps": pending,
+                        "alternatives": [{"choice": "stay-spanning"}]})
                 actions.append(Reallocate(rid, ExecutionLayout(cand)))
 
         # ---- 3c. hybrid: reshape running guided work (DESIGN.md §14) -
@@ -947,10 +989,18 @@ class ElasticPolicy(Policy):
                 cur = getattr(lay, "cfg", 1)
                 alt = 2 if cur == 1 else 1
                 span = topo.span_of(lay.ranks) if topo else 1
-                if self._remaining(view, req, g, lay.degree, span,
-                                   cfg=alt) \
-                        < self._remaining(view, req, g, lay.degree,
-                                          span, cfg=cur):
+                rem_alt = self._remaining(view, req, g, lay.degree,
+                                          span, cfg=alt)
+                rem_cur = self._remaining(view, req, g, lay.degree,
+                                          span, cfg=cur)
+                if rem_alt < rem_cur:
+                    if view.telemetry is not None:
+                        view.telemetry.stage("reallocate", rid, {
+                            "why": "reshape-cfg", "from_cfg": cur,
+                            "to_cfg": alt, "degree": lay.degree,
+                            "alternatives": [{"cfg": cur}],
+                            "metrics": {"remaining_cur": rem_cur,
+                                        "remaining_alt": rem_alt}})
                     actions.append(Reallocate(rid, ExecutionLayout(
                         lay.ranks, cfg=alt)))
 
@@ -978,16 +1028,22 @@ class ElasticPolicy(Policy):
                                   pk["members"], (t, req, g)):
                     pk["members"].append((t, req, g))
                     granted[req.id] = granted.get(req.id, 0) + pk["k"]
+                    if view.telemetry is not None:
+                        view.telemetry.stage("dispatch", t.id, {
+                            "why": "pack-join", "degree": pk["k"],
+                            "pack_size": len(pk["members"]),
+                            "alternatives": [{"choice": "solo-ranks"}]})
                     return True
             return False
 
-        def dispatch(t, req, g, k, cfg: int = 1) -> bool:
+        def dispatch(t, req, g, k, cfg: int = 1,
+                     why: str = "sized") -> bool:
             # callers attempt try_join first; by this point the task
             # needs its own ranks (locality-aware under a topology)
             nonlocal free
             if k <= 0 or k > len(free):
                 return False
-            ranks = None
+            ranks, warm_seat = None, False
             if t.kind == "denoise" and k > 1 and cfg == 1:
                 # cache affinity (DESIGN.md §11): re-seat a warm request
                 # on the exact rank set its snapshot lives on — the next
@@ -995,11 +1051,18 @@ class ElasticPolicy(Policy):
                 ent = self._warm(view, req.id)
                 if ent is not None and ent.layout.degree == k and \
                         set(ent.layout.ranks) <= set(free):
-                    ranks = ent.layout.ranks
+                    ranks, warm_seat = ent.layout.ranks, True
             if ranks is None:
                 ranks = _pick_shape_ranks(free, k, cfg, topo)
                 if ranks is None:
                     return False
+            if view.telemetry is not None:
+                view.telemetry.stage("dispatch", t.id, {
+                    "why": why, "degree": k, "cfg": cfg,
+                    "warm_seat": warm_seat,
+                    "alternatives": [
+                        {"degree": d, "feasible": d <= len(free)}
+                        for d in cands]})
             free = [r for r in free if r not in set(ranks)]
             granted[req.id] = granted.get(req.id, 0) + k
             if self.pack and t.kind == "denoise" and \
@@ -1015,7 +1078,7 @@ class ElasticPolicy(Policy):
         for t, req, g in slo_ready:
             if t.kind in ("encode", "decode"):
                 if free:
-                    dispatch(t, req, g, 1)
+                    dispatch(t, req, g, 1, why="io-step")
                 continue
             if try_join(t, req, g):
                 continue
@@ -1028,13 +1091,13 @@ class ElasticPolicy(Policy):
                                        set(granted), peer_idx,
                                        running_reqs):
                 continue
-            if not dispatch(t, req, g, need, ncfg):
+            if not dispatch(t, req, g, need, ncfg, why="slo-sized"):
                 if reclaiming:
                     continue        # preempted ranks arrive at a boundary
                 feas = [d for d in cands if d <= len(free)]
                 if not feas:
                     continue
-                dispatch(t, req, g, feas[-1])
+                dispatch(t, req, g, feas[-1], why="slo-fallback")
 
         slo_reserve = 0
         for rid, req in sorted(view.requests.items()):
@@ -1052,7 +1115,7 @@ class ElasticPolicy(Policy):
         for t, req, g in be_ready:
             if t.kind in ("encode", "decode"):
                 if budget >= 1 and free:
-                    dispatch(t, req, g, 1)
+                    dispatch(t, req, g, 1, why="io-step")
                     budget -= 1
                 continue
             # a best-effort step may ride along on an open pack even with
@@ -1079,7 +1142,7 @@ class ElasticPolicy(Policy):
                 k = feas[-1] if feas else 0
             if k <= 0:
                 continue
-            if dispatch(t, req, g, k):
+            if dispatch(t, req, g, k, why="best-effort"):
                 budget -= k
 
         # flush open packs (a pack of one is a plain dispatch)

@@ -47,6 +47,7 @@ from typing import Optional, Union
 from repro.core import failures as failure_domain
 from repro.core.cost_model import CostModel
 from repro.core.event_loop import EventLoop, VirtualClock
+from repro.core.migration import layout_moved
 from repro.core.trajectory import (ClusterTopology, ExecutionLayout,
                                    Request, RequestGraph, TrajectoryTask,
                                    as_topology)
@@ -152,6 +153,10 @@ class SchedulerView:
     # `free_ranks` already excludes them; policies sizing layouts against
     # the machine should use `num_alive`, not `num_ranks`.
     dead_ranks: frozenset = frozenset()
+    # telemetry plane (DESIGN.md §15): policies stage decision
+    # explanations here (`view.telemetry.stage(...)`); None when
+    # telemetry is disabled — policies must guard on it
+    telemetry: Optional[object] = None
 
     @property
     def num_alive(self) -> int:
@@ -184,7 +189,8 @@ class ControlPlane:
                  dispatch_overhead: float = 0.0, num_ranks=None,
                  cache_interval: Optional[int] = None,
                  injector=None, snapshot_interval: Optional[int] = None,
-                 snapshot_dir=None, failure_recovery: bool = True):
+                 snapshot_dir=None, failure_recovery: bool = True,
+                 telemetry=None):
         # `topology` accepts a ClusterTopology or a bare rank count
         # (back-compat shim: ControlPlane(num_ranks=N) — positional or
         # keyword — synthesizes a one-host topology with identical
@@ -235,6 +241,14 @@ class ControlPlane:
         self.snapshots = (failure_domain.SnapshotStore(
             snapshot_interval, snapshot_dir)
             if snapshot_interval else None)
+        # telemetry plane (DESIGN.md §15): None disables every
+        # instrument — the decision trace (`self.events`) is never
+        # touched by telemetry, so signatures are byte-identical either
+        # way.  The cache plane shares the same instance for counters.
+        self.telemetry = telemetry
+        self.cache.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.attach(self.num_ranks, self.topology)
         backend.attach(self)
 
     def _cache_event(self, rec: dict):
@@ -256,6 +270,8 @@ class ControlPlane:
         self.released.add(request.id)
         self.events.append({"t": self.now, "ev": "arrival",
                             "req": request.id})
+        if self.telemetry is not None:
+            self.telemetry.request_event(self.now, request.id, "queued")
 
     def release_arrivals(self):
         """Admit every submitted request whose arrival has come due."""
@@ -322,7 +338,8 @@ class ControlPlane:
                              topology=self.topology,
                              cache_residency=self.cache.residency_view(),
                              cache_interval=self.cache.interval,
-                             dead_ranks=frozenset(self.dead_ranks))
+                             dead_ranks=frozenset(self.dead_ranks),
+                             telemetry=self.telemetry)
 
     # ------------------------------------------------------------------
     # action application (validated; invalid actions are skipped)
@@ -343,7 +360,8 @@ class ControlPlane:
         return cfg == 2 and getattr(req, "guidance", None) is not None
 
     def _mark_running(self, task: TrajectoryTask, layout: ExecutionLayout,
-                      extra_ev: Optional[dict] = None) -> int:
+                      extra_ev: Optional[dict] = None,
+                      graph: Optional[RequestGraph] = None) -> int:
         """Shared dispatch bookkeeping (solo and packed): task state,
         dispatch-sequence bump, running registry, trace event.  Returns
         the dispatch sequence number of THIS dispatch."""
@@ -368,6 +386,29 @@ class ControlPlane:
         if extra_ev:
             ev.update(extra_ev)
         self.events.append(ev)
+        tel = self.telemetry
+        if tel is not None:
+            # migrating marker (DESIGN.md §15): "this dispatch moves
+            # input bytes" is a pure function of plane state BEFORE the
+            # backend runs, so both backends mark the same transitions
+            # (actual durations live in the wall overlay stream)
+            mig = bool(stamp and stamp.get("migrate")) or (
+                graph is not None and any(
+                    layout_moved(graph.artifacts[aid].layout, layout)
+                    for aid in task.inputs))
+            tel.record_action("dispatch", ev, key=task.id, migrating=mig)
+            tel.request_event(self.now, task.request_id, "step_start",
+                              kind=task.kind, step=task.step_index,
+                              ranks=tuple(layout.ranks),
+                              cfg=getattr(layout, "cfg", 1),
+                              cache=ev.get("cache"))
+            for r in layout.ranks:
+                if mig:
+                    tel.rank_state(self.now, r, "migrating",
+                                   req=task.request_id)
+                tel.rank_state(self.now, r, "busy", req=task.request_id,
+                               kind=task.kind, step=task.step_index,
+                               pack=ev.get("pack"))
         return task.meta["_seq"]
 
     def _dispatch(self, task: TrajectoryTask, layout: ExecutionLayout,
@@ -376,7 +417,8 @@ class ControlPlane:
         # backend sees the task: both backends act on the plane's call
         self.cache.stamp(task, layout, graph)
         self._mark_running(task, layout,
-                           {"realloc": True} if via_pin else None)
+                           {"realloc": True} if via_pin else None,
+                           graph=graph)
         self.free_ranks -= set(layout.ranks)
         self.backend.dispatch(task, layout, graph, self.now)
 
@@ -448,7 +490,8 @@ class ControlPlane:
             self.pinned.pop(req.id, None)
             seqs[t.id] = self._mark_running(
                 t, a.layout, {"pack": pack_id,
-                              "pack_members": list(membership)})
+                              "pack_members": list(membership)},
+                graph=g)
             self._pack_of[t.id] = pack_id
         self.free_ranks -= set(a.layout.ranks)
         self.packs[pack_id] = {
@@ -482,6 +525,14 @@ class ControlPlane:
         if getattr(a.new_layout, "cfg", 1) > 1:
             ev["cfg"] = a.new_layout.cfg       # reshape (DESIGN.md §14)
         self.events.append(ev)
+        if self.telemetry is not None:
+            self.telemetry.record_action("reallocate", ev,
+                                         key=a.request_id)
+            self.telemetry.request_event(self.now, a.request_id,
+                                         "reallocate",
+                                         ranks=tuple(a.new_layout.ranks),
+                                         cfg=getattr(a.new_layout,
+                                                     "cfg", 1))
         return True
 
     def _apply_preempt(self, a: Preempt) -> bool:
@@ -516,6 +567,15 @@ class ControlPlane:
             if pack_id:
                 ev["pack"] = pack_id
             self.events.append(ev)
+            if self.telemetry is not None:
+                # a pack-wide eviction attaches the policy's staged
+                # explanation to the member it actually named
+                self.telemetry.record_action(
+                    "preempt", ev,
+                    key=tid if tid == a.task_id else None)
+                self.telemetry.request_event(
+                    self.now, task.request_id, "preempt",
+                    kind=task.kind, step=task.step_index)
         return True
 
     def _apply_cancel(self, a: Cancel) -> bool:
@@ -528,8 +588,11 @@ class ControlPlane:
         for tid, (task, _) in list(self.running.items()):
             if task.request_id == a.request_id:
                 self.preempting[tid] = "drop"
-        self.events.append({"t": self.now, "ev": "cancel",
-                            "req": a.request_id})
+        ev = {"t": self.now, "ev": "cancel", "req": a.request_id}
+        self.events.append(ev)
+        if self.telemetry is not None:
+            self.telemetry.record_action("cancel", ev)
+            self.telemetry.request_event(self.now, a.request_id, "cancel")
         return True
 
     def apply(self, action: Action, view: Optional[SchedulerView] = None
@@ -571,6 +634,10 @@ class ControlPlane:
         """Invoke the policy and apply its actions.  Called by the event
         loop after every arrival, completion, preempt-requeue, and
         reallocation boundary."""
+        if self.telemetry is not None:
+            # staged explanations live one schedule point: anything the
+            # plane rejected must not leak onto a later application
+            self.telemetry.begin_schedule()
         self._autodispatch_pinned()
         view = self._view()
         if not view.ready and not view.running:
@@ -610,6 +677,19 @@ class ControlPlane:
                 tid, c.finish_time, c.duration,
                 failed_ranks=c.failed_ranks,
                 seq=rec["seqs"][tid]), observe=False)
+        if self.telemetry is not None and c.duration > 0:
+            # predicted-vs-observed for the BATCHED cell, priced before
+            # the observation updates it (DESIGN.md §15)
+            predicted = self.cost.estimate_packed(
+                rec["model"], "denoise", rec["tokens"],
+                rec["layout"].degree, len(rec["members"]),
+                span=rec["span"], cached=rec.get("cached", False))
+            self.telemetry.observe_cost(
+                CostModel._pack_key(rec["model"], "denoise",
+                                    rec["tokens"], rec["layout"].degree,
+                                    len(rec["members"]), rec["span"],
+                                    rec.get("cached", False)),
+                predicted, c.duration)
         self.cost.observe_packed(rec["model"], "denoise", rec["tokens"],
                                  rec["layout"].degree, len(rec["members"]),
                                  c.duration, span=rec["span"],
@@ -625,6 +705,15 @@ class ControlPlane:
         task, layout = self.running.pop(c.task_id)
         self.now = max(self.now, c.finish_time)
         self.free_ranks |= set(layout.ranks) - self.dead_ranks
+        tel = self.telemetry
+        if tel is not None:
+            tel.ranks_idle(self.now, set(layout.ranks) - self.dead_ranks)
+            tel.request_event(
+                self.now, task.request_id, "step_end", kind=task.kind,
+                step=task.step_index,
+                outcome=(mode if mode is not None else
+                         "collective-failure" if c.failed_ranks
+                         else "done"))
         graph = self.graphs[task.request_id]
         if mode is not None:
             # preempted, cancelled, or failed-out mid-flight: the device
@@ -703,12 +792,21 @@ class ControlPlane:
                     self.requests[task.request_id], "guidance",
                     None) is not None:
                 cfg = max(getattr(layout, "cfg", 1), 1)
-            self.cost.observe(self.requests[task.request_id].model,
-                              task.kind, task.meta.get("tokens", 4096),
-                              layout.degree, c.duration,
-                              span=layout.span(self.topology),
-                              cached=bool(stamp
-                                          and stamp["mode"] == "hit"),
+            model = self.requests[task.request_id].model
+            tokens = task.meta.get("tokens", 4096)
+            span = layout.span(self.topology)
+            cached = bool(stamp and stamp["mode"] == "hit")
+            if tel is not None and c.duration > 0:
+                # accuracy sample BEFORE the observation moves the cell
+                predicted = self.cost.estimate(
+                    model, task.kind, tokens, layout.degree, span=span,
+                    cached=cached, cfg=cfg)
+                tel.observe_cost(
+                    CostModel._key(model, task.kind, tokens,
+                                   layout.degree, span, cached, cfg),
+                    predicted, c.duration)
+            self.cost.observe(model, task.kind, tokens, layout.degree,
+                              c.duration, span=span, cached=cached,
                               cfg=cfg)
         req = self.requests[task.request_id]
         if graph.is_done() and req.done_time is None:
@@ -719,6 +817,8 @@ class ControlPlane:
                 self.snapshots.drop(req.id)
             self.events.append({"t": self.now, "ev": "request_done",
                                 "req": req.id})
+            if tel is not None:
+                tel.request_event(self.now, req.id, "done")
 
     def _fail_request(self, rid: str, why: str):
         """Terminal request failure: release every plane-held resource and
@@ -733,6 +833,8 @@ class ControlPlane:
             self.snapshots.drop(rid)
         self.events.append({"t": self.now, "ev": "request_failed",
                             "req": rid, "why": why})
+        if self.telemetry is not None:
+            self.telemetry.request_event(self.now, rid, "failed", why=why)
 
     def fail_task(self, task_id: str, requeue: bool = True):
         """Worker failure: the trajectory task graph is the unit of
@@ -748,6 +850,9 @@ class ControlPlane:
                 tid in self.running
                 for tid in self.packs[pack_id]["members"]):
             self.free_ranks |= set(layout.ranks) - self.dead_ranks
+            if self.telemetry is not None:
+                self.telemetry.ranks_idle(
+                    self.now, set(layout.ranks) - self.dead_ranks)
         if requeue:
             task.state = "pending"
             task.layout = None

@@ -136,6 +136,7 @@ class SimBackend:
         if self.jitter:
             dur *= 1.0 + self.jitter * (self._rand() - 0.5)
         # migration latency when the input artifact lives in another layout
+        bytes0 = self.migrated_bytes
         mig = self._cache_effects(task, graph, layout)
         for aid in task.inputs:
             art = graph.artifacts[aid]
@@ -147,6 +148,14 @@ class SimBackend:
         # migrates before stamping t_dispatch): calibration must price the
         # STEP — migration is priced separately at every dispatch, and
         # folding it in would double-count it in future estimates
+        tel = getattr(self.plane, "telemetry", None)
+        if tel is not None and mig > 0:
+            # priced-migration counter (the sim's counterpart of the wall
+            # overlay's measured migrate spans — clock-dependent stream)
+            tel.counter("sim_migrations")
+            tel.span(layout.ranks[0], now + self.dispatch_overhead,
+                     now + self.dispatch_overhead + mig, "migrate",
+                     self.migrated_bytes - bytes0)
         finish = now + self.dispatch_overhead + mig + dur
         c = Completion(task.id, finish, dur,
                        seq=task.meta.get("_seq", 0))

@@ -1,0 +1,400 @@
+"""Runtime telemetry plane (DESIGN.md §15).
+
+One :class:`Telemetry` instance observes a single serving run — either
+backend — and derives every observability product the runtime offers:
+
+* **rank state timelines** — idle / busy / migrating / collective / dead
+  transitions per rank, with utilization and goodput-per-rank summaries;
+* **request lifecycle spans** — queued → each denoise step at its shape
+  → reallocations / preemptions / rollbacks → decode, exportable as a
+  Chrome/Perfetto ``trace.json``;
+* **decision records** — every applied control-plane action, stamped
+  with the policy's staged explanation (the priced alternatives the
+  chosen shape beat);
+* **cost-model accuracy** — a predicted-vs-observed stream per
+  shape-keyed cost cell with a rolling relative error;
+* **GFC formation counters** — per-registration latency samples and a
+  setup-latency histogram (the paper's ~60 µs group-setup claim).
+
+Two contracts govern everything here (DESIGN.md §15):
+
+1. **Zero overhead when disabled.**  The runtime holds ``telemetry``
+   references that default to ``None``; every instrument site is a
+   single ``if tel is not None`` guard.  Telemetry NEVER writes to
+   ``ControlPlane.events`` — the decision trace (and therefore every
+   ``trace_signature``) is byte-identical whether telemetry is attached
+   or not.
+
+2. **Clock-independent cross-backend identity.**  Identity-bearing
+   streams (rank state sequences, decision records, lifecycle span
+   structure) are recorded ONLY from control-plane-shared code at plane
+   sequence points, so a sim run and a wall run of the same workload
+   produce identical :meth:`clock_independent` projections — a second
+   cross-backend gate alongside ``trace_signature``.  Clock-dependent
+   data (timestamps, prices, loop counters, the wall-only collective
+   overlay, cost accuracy) is kept in separate streams and excluded
+   from the projection: the projection drops every float, every ``t``
+   and ``task`` field (task ids are a process-global counter), every
+   ``metrics`` sub-record (the staging convention for volatile
+   numbers), and flattens pack ids to a bool.
+
+Thread-safety: the control plane drives all identity streams from the
+event-loop thread.  Wall-backend worker threads only ever *append* to
+per-stream lists (``gfc_register``, ``span``) — GIL-atomic, no locks.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+#: rank states (DESIGN.md §15 taxonomy).  ``collective`` appears only in
+#: the wall backend's overlay stream (the simulator never enters GFC),
+#: which is excluded from the identity projection by construction.
+RANK_STATES = ("idle", "busy", "migrating", "collective", "dead")
+
+#: keys dropped from the identity projection (see module docstring)
+_VOLATILE_KEYS = frozenset({"t", "task", "metrics", "lost"})
+
+#: log2-spaced GFC setup-latency histogram bucket upper bounds (µs)
+GFC_BUCKETS_US = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 4096,
+                  float("inf"))
+
+
+def _sanitize(v):
+    """Recursive clock-independent projection of one record value."""
+    if isinstance(v, float):
+        return None
+    if isinstance(v, dict):
+        out = {}
+        for k, x in v.items():
+            if k in _VOLATILE_KEYS:
+                continue
+            if k == "pack":
+                out[k] = bool(x)
+                continue
+            s = _sanitize(x)
+            if s is not None:
+                out[k] = s
+        return out
+    if isinstance(v, (list, tuple, set, frozenset)):
+        items = sorted(v) if isinstance(v, (set, frozenset)) else v
+        return tuple(s for s in (_sanitize(x) for x in items)
+                     if s is not None)
+    return v
+
+
+class Telemetry:
+    """Event bus for one serving run.  Construct, pass to
+    ``ControlPlane(..., telemetry=tel)`` (or ``ServingEngine``), read the
+    products afterwards.  One instance observes ONE plane."""
+
+    def __init__(self):
+        # wall anchor: the engine sets this to its WallClock.t0 so the
+        # overlay streams (recorded in absolute monotonic time from
+        # worker threads) align with plane-relative timestamps
+        self.t0: Optional[float] = None
+        self.topology = None
+        self.num_ranks: Optional[int] = None
+        # identity-bearing streams (plane-thread only)
+        self.rank_states: dict[int, list] = {}   # r -> [(t, state, info)]
+        self.request_order: list[str] = []
+        self.lifecycle: dict[str, list] = {}     # rid -> [(t, phase, info)]
+        self.decisions: list[dict] = []
+        self._staged: dict[tuple, dict] = {}
+        # clock-dependent streams
+        self.cost_stream: list[dict] = []
+        self.cost_cells: dict[str, dict] = {}
+        self.counters: dict[str, int] = {}
+        self.gfc_register_s: list[float] = []    # worker-thread appends
+        self.overlay: dict[int, list] = {}       # r -> [(t, dur, op, size)]
+
+    # ------------------------------------------------------------------
+    # wiring
+    # ------------------------------------------------------------------
+    def attach(self, num_ranks: int, topology=None):
+        """Called once by the control plane; all ranks start idle."""
+        self.num_ranks = num_ranks
+        self.topology = topology
+        for r in range(num_ranks):
+            self.rank_states.setdefault(r, [(0.0, "idle", {})])
+
+    # ------------------------------------------------------------------
+    # rank state timeline (identity-bearing; plane thread only)
+    # ------------------------------------------------------------------
+    def rank_state(self, t: float, rank: int, state: str, **info):
+        seq = self.rank_states.setdefault(rank, [(0.0, "idle", {})])
+        # idempotent states: a pack completion fans out per member, each
+        # freeing the shared rank set — one idle transition, not N
+        if state in ("idle", "dead") and seq[-1][1] == state:
+            return
+        seq.append((t, state, info))
+
+    def ranks_idle(self, t: float, ranks):
+        for r in sorted(ranks):
+            self.rank_state(t, r, "idle")
+
+    def ranks_dead(self, t: float, ranks):
+        for r in sorted(ranks):
+            self.rank_state(t, r, "dead")
+
+    # ------------------------------------------------------------------
+    # request lifecycle (identity-bearing; plane thread only)
+    # ------------------------------------------------------------------
+    def request_event(self, t: float, rid: str, phase: str, **info):
+        if rid not in self.lifecycle:
+            self.lifecycle[rid] = []
+            self.request_order.append(rid)
+        self.lifecycle[rid].append((t, phase, info))
+
+    # ------------------------------------------------------------------
+    # decision records + staged explanations (identity-bearing)
+    # ------------------------------------------------------------------
+    def begin_schedule(self):
+        """Called at every schedule point: explanations staged for
+        actions the plane rejected (or the policy reconsidered) must not
+        leak onto later, unrelated applications."""
+        self._staged.clear()
+
+    def stage(self, kind: str, key, record: dict):
+        """Policy-side: stage the explanation for an action about to be
+        emitted — ``kind`` in {dispatch, reallocate, preempt}, ``key``
+        the action's task/request id.  Volatile numbers belong under the
+        record's ``metrics`` sub-dict (dropped from the identity
+        projection); structure (why / chosen / alternatives, listed in
+        deterministic candidate order, NOT price order) is identity-
+        bearing."""
+        self._staged[(kind, key)] = record
+
+    def record_action(self, action: str, ev: dict, *, key=None,
+                      migrating: bool = False):
+        """Plane-side, at action-APPLY time (the wall loop runs many
+        more schedule points than the sim — applied actions are the
+        stream both backends provably share)."""
+        rec = {"action": action, "t": ev.get("t"), "req": ev.get("req")}
+        for k in ("task", "kind", "step", "ranks", "cfg", "cache", "pack",
+                  "realloc"):
+            if ev.get(k) is not None:
+                rec[k] = ev[k]
+        if migrating:
+            rec["migrating"] = True
+        rec["explanation"] = self._staged.pop((action, key), None) \
+            if key is not None else None
+        self.decisions.append(rec)
+        return rec
+
+    # ------------------------------------------------------------------
+    # cost-model accuracy (clock-dependent)
+    # ------------------------------------------------------------------
+    def observe_cost(self, key: str, predicted: float, observed: float):
+        rel = abs(predicted - observed) / observed if observed else 0.0
+        self.cost_stream.append({"key": key, "predicted": predicted,
+                                 "observed": observed, "rel_err": rel})
+        cell = self.cost_cells.setdefault(
+            key, {"n": 0, "rel_err": rel, "sum_rel_err": 0.0})
+        cell["n"] += 1
+        cell["sum_rel_err"] += rel
+        cell["rel_err"] = 0.5 * cell["rel_err"] + 0.5 * rel   # rolling EMA
+
+    # ------------------------------------------------------------------
+    # counters + wall overlays (clock-dependent)
+    # ------------------------------------------------------------------
+    def counter(self, name: str, inc: int = 1):
+        self.counters[name] = self.counters.get(name, 0) + inc
+
+    def gfc_register(self, seconds: float):
+        self.gfc_register_s.append(seconds)     # GIL-atomic append
+
+    def span(self, rank: int, t_start: float, t_end: float, op: str,
+             size: int = 0):
+        """Wall-only overlay: a collective / p2p / migration interval in
+        absolute monotonic time (re-anchored to ``t0`` when set)."""
+        base = self.t0 or 0.0
+        self.overlay.setdefault(rank, []).append(
+            (t_start - base, t_end - t_start, op, size))
+
+    # ------------------------------------------------------------------
+    # products
+    # ------------------------------------------------------------------
+    def clock_independent(self) -> dict:
+        """The cross-backend identity projection (DESIGN.md §15): rank
+        state sequences, per-request decision records, and lifecycle
+        span structure, grouped per request by arrival order (the global
+        interleaving of events on disjoint rank sets is backend-
+        dependent; per-request and per-rank orders are not)."""
+        order = {rid: i for i, rid in enumerate(self.request_order)}
+        decisions: dict[int, list] = {}
+        for d in self.decisions:
+            decisions.setdefault(order.get(d.get("req"), -1),
+                                 []).append(_sanitize(d))
+        lifecycle: dict[int, list] = {}
+        for rid, seq in self.lifecycle.items():
+            lifecycle[order[rid]] = [(phase, _sanitize(info))
+                                     for _, phase, info in seq]
+        ranks = {r: [(state, _sanitize(info)) for _, state, info in seq]
+                 for r, seq in self.rank_states.items()}
+        return {
+            "rank_states": {r: ranks[r] for r in sorted(ranks)},
+            "decisions": {i: decisions[i] for i in sorted(decisions)},
+            "lifecycle": {i: lifecycle[i] for i in sorted(lifecycle)},
+        }
+
+    def _makespan(self) -> float:
+        ts = [t for seq in self.rank_states.values() for t, _, _ in seq]
+        ts += [t for seq in self.lifecycle.values() for t, _, _ in seq]
+        return max(ts, default=0.0)
+
+    def busy_seconds(self) -> dict[int, float]:
+        """Per-rank time spent busy/migrating (interval end = the next
+        transition; a run quiesces with every live rank idle)."""
+        end = self._makespan()
+        out = {}
+        for r, seq in self.rank_states.items():
+            busy = 0.0
+            for (t, state, _), nxt in zip(seq, seq[1:] + [(end, "", {})]):
+                if state in ("busy", "migrating"):
+                    busy += max(nxt[0] - t, 0.0)
+            out[r] = busy
+        return out
+
+    def gfc_histogram(self) -> dict:
+        """Setup-latency histogram over ``register_group`` samples:
+        bucket label = inclusive upper bound in µs."""
+        counts = [0] * len(GFC_BUCKETS_US)
+        for s in self.gfc_register_s:
+            us = s * 1e6
+            for i, ub in enumerate(GFC_BUCKETS_US):
+                if us <= ub:
+                    counts[i] += 1
+                    break
+        return {("inf" if ub == float("inf") else f"{ub}us"): c
+                for ub, c in zip(GFC_BUCKETS_US, counts)}
+
+    def gfc_percentiles(self) -> dict:
+        xs = sorted(self.gfc_register_s)
+        if not xs:
+            return {"n": 0}
+        pick = lambda q: xs[min(int(q * (len(xs) - 1)), len(xs) - 1)]  # noqa: E731
+        return {"n": len(xs), "p50_us": pick(0.50) * 1e6,
+                "p90_us": pick(0.90) * 1e6, "p99_us": pick(0.99) * 1e6}
+
+    def summary(self) -> dict:
+        """Derived end-of-run aggregates (all clock-dependent)."""
+        makespan = self._makespan()
+        busy = self.busy_seconds()
+        n = self.num_ranks or max(len(busy), 1)
+        util = {r: (busy[r] / makespan if makespan else 0.0)
+                for r in sorted(busy)}
+        completed = sum(
+            1 for seq in self.lifecycle.values()
+            if any(phase == "done" for _, phase, _ in seq))
+        actions: dict[str, int] = {}
+        for d in self.decisions:
+            actions[d["action"]] = actions.get(d["action"], 0) + 1
+        cells = {k: {"n": c["n"], "rel_err": c["rel_err"],
+                     "mean_rel_err": c["sum_rel_err"] / c["n"]}
+                 for k, c in self.cost_cells.items()}
+        return {
+            "makespan_s": makespan,
+            "rank_utilization": (sum(util.values()) / len(util)
+                                 if util else 0.0),
+            "utilization_per_rank": util,
+            "goodput_per_rank": (completed / (n * makespan)
+                                 if makespan else 0.0),
+            "completed": completed,
+            "actions": actions,
+            "cost_cells": cells,
+            "gfc": {**self.gfc_percentiles(),
+                    "histogram": self.gfc_histogram()},
+            "counters": dict(self.counters),
+        }
+
+    # ------------------------------------------------------------------
+    # Perfetto / Chrome trace export
+    # ------------------------------------------------------------------
+    def perfetto(self, path=None) -> dict:
+        """Chrome/Perfetto ``trace.json``: pid = host, tid = rank, X
+        slices for busy/dead rank intervals plus the wall collective
+        overlay; the control plane gets its own process with one thread
+        per request (lifecycle spans) and instant decision events."""
+        topo = self.topology
+        host_of = topo.host_of if topo is not None else (lambda r: 0)
+        events: list[dict] = []
+        end = self._makespan()
+        us = lambda t: round(t * 1e6, 3)    # noqa: E731
+        hosts = sorted({host_of(r) for r in self.rank_states}) or [0]
+        for h in hosts:
+            events.append({"ph": "M", "pid": h, "tid": 0,
+                           "name": "process_name",
+                           "args": {"name": f"host{h}"}})
+        for r in sorted(self.rank_states):
+            events.append({"ph": "M", "pid": host_of(r), "tid": r,
+                           "name": "thread_name",
+                           "args": {"name": f"rank{r}"}})
+        for r, seq in self.rank_states.items():
+            for (t, state, info), nxt in zip(seq, seq[1:]
+                                             + [(end, "", {})]):
+                if state == "idle":
+                    continue
+                if state == "busy":
+                    name = (f"{info.get('req', '?')} "
+                            f"{info.get('kind', '?')}"
+                            f"[{info.get('step', 0)}]")
+                elif state == "migrating":
+                    name = "migrate-in"
+                else:
+                    name = state.upper()
+                events.append({"ph": "X", "pid": host_of(r), "tid": r,
+                               "ts": us(t),
+                               "dur": max(us(nxt[0]) - us(t), 0.0),
+                               "name": name, "cat": state,
+                               "args": dict(info)})
+        for r, spans in self.overlay.items():
+            for t, dur, op, size in spans:
+                events.append({"ph": "X", "pid": host_of(r), "tid": r,
+                               "ts": us(t), "dur": us(dur), "name": op,
+                               "cat": "collective",
+                               "args": {"size": size}})
+        cp_pid = hosts[-1] + 1
+        events.append({"ph": "M", "pid": cp_pid, "tid": 0,
+                       "name": "process_name",
+                       "args": {"name": "control-plane"}})
+        for d in self.decisions:
+            events.append({"ph": "i", "s": "p", "pid": cp_pid, "tid": 0,
+                           "ts": us(d.get("t") or 0.0),
+                           "name": f"{d['action']} {d.get('req', '')}",
+                           "cat": "decision",
+                           "args": {k: v for k, v in d.items()
+                                    if k != "t" and v is not None}})
+        for i, rid in enumerate(self.request_order):
+            tid = i + 1
+            events.append({"ph": "M", "pid": cp_pid, "tid": tid,
+                           "name": "thread_name", "args": {"name": rid}})
+            seq = self.lifecycle[rid]
+            t_first, t_last = seq[0][0], seq[-1][0]
+            events.append({"ph": "X", "pid": cp_pid, "tid": tid,
+                           "ts": us(t_first),
+                           "dur": max(us(t_last) - us(t_first), 0.0),
+                           "name": rid, "cat": "request", "args": {}})
+            open_steps: dict[tuple, float] = {}
+            for t, phase, info in seq:
+                key = (info.get("kind"), info.get("step"))
+                if phase == "step_start":
+                    open_steps[key] = t
+                elif phase == "step_end" and key in open_steps:
+                    t_open = open_steps.pop(key)
+                    events.append({
+                        "ph": "X", "pid": cp_pid, "tid": tid,
+                        "ts": us(t_open),
+                        "dur": max(us(t) - us(t_open), 0.0),
+                        "name": f"{key[0]}[{key[1]}]", "cat": "step",
+                        "args": dict(info)})
+                elif phase not in ("step_start",):
+                    events.append({"ph": "i", "s": "t", "pid": cp_pid,
+                                   "tid": tid, "ts": us(t), "name": phase,
+                                   "cat": "lifecycle",
+                                   "args": dict(info)})
+        trace = {"traceEvents": events, "displayTimeUnit": "ms"}
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(trace, f)
+        return trace

@@ -89,6 +89,10 @@ class FeatureCachePlane:
         self._interval = interval
         self._emit = emit
         self.entries: dict[str, CacheEntry] = {}
+        # telemetry counters (DESIGN.md §15); the owning ControlPlane
+        # shares its instance.  Counters only — the stamp decisions
+        # themselves ride the plane's dispatch decision records.
+        self.telemetry = None
 
     # ------------------------------------------------------------------
     @property
@@ -110,9 +114,12 @@ class FeatureCachePlane:
         The artifact's bytes may linger rank-side, but nothing reads
         them without a plane-stamped hit, and the next refresh
         overwrites them."""
-        if self.entries.pop(request_id, None) is not None and self._emit:
-            self._emit({"ev": "cache_invalidate", "req": request_id,
-                        "why": reason})
+        if self.entries.pop(request_id, None) is not None:
+            if self.telemetry is not None:
+                self.telemetry.counter(f"cache_invalidate.{reason}")
+            if self._emit:
+                self._emit({"ev": "cache_invalidate", "req": request_id,
+                            "why": reason})
 
     def invalidate_ranks(self, ranks, reason: str):
         """Drop every residency whose warm rank-set intersects ``ranks``
@@ -196,6 +203,9 @@ class FeatureCachePlane:
             self.entries[rid] = replace(self.entries[rid], layout=layout)
         stamp = {"mode": mode, "migrate": migrate, "art": aid}
         task.meta["cache"] = stamp
+        if self.telemetry is not None:
+            self.telemetry.counter(
+                f"cache_{mode}" + ("_mig" if migrate else ""))
         return stamp
 
     # ------------------------------------------------------------------

@@ -141,27 +141,36 @@ def check_margins(cost: CostModel) -> dict:
     }
 
 
-def run_wall(cfg, cost: CostModel, reqs: list[Request]) -> dict:
+def run_wall(cfg, cost: CostModel, reqs: list[Request],
+             telemetry=None) -> dict:
     """Thread backend: real JAX compute, wall clock."""
-    eng = ServingEngine(cfg, ElasticPolicy(), NUM_RANKS, cost=cost)
+    eng = ServingEngine(cfg, ElasticPolicy(), NUM_RANKS, cost=cost,
+                        telemetry=telemetry)
     metrics = eng.serve(reqs, timeout=240)
     out = {
         "metrics": metrics,
         "events": list(eng.cp.events),
         "signature": trace_signature(eng.cp.events),
         "pixels": {r.id: eng.result_pixels(r) for r in reqs},
+        # clock-independent projection for the cross-backend telemetry
+        # gate (DESIGN.md §15); the live object rides along for
+        # Perfetto export / summaries
+        "telemetry": (telemetry.clock_independent()
+                      if telemetry is not None else None),
+        "telemetry_obj": telemetry,
     }
     eng.shutdown()
     return out
 
 
-def run_sim(cost: CostModel, cfg, reqs: list[Request]) -> dict:
+def run_sim(cost: CostModel, cfg, reqs: list[Request],
+            telemetry=None) -> dict:
     """Simulator backend: same policy, same calibrated costs, virtual
     clock."""
     sim_cost = CostModel(table=dict(cost.table),
                          calibration=dict(cost.calibration))
     cp = ControlPlane(NUM_RANKS, ElasticPolicy(), sim_cost,
-                      SimBackend(sim_cost))
+                      SimBackend(sim_cost), telemetry=telemetry)
     for r in reqs:
         r = dataclasses.replace(r, task_ids=[])
         cp.submit(r, convert_request(r, cfg))
@@ -170,6 +179,9 @@ def run_sim(cost: CostModel, cfg, reqs: list[Request]) -> dict:
         "metrics": cp.metrics(),
         "events": list(cp.events),
         "signature": trace_signature(cp.events),
+        "telemetry": (telemetry.clock_independent()
+                      if telemetry is not None else None),
+        "telemetry_obj": telemetry,
     }
 
 
@@ -193,12 +205,16 @@ def run_demo(cfg=None, retries: int = 2) -> dict:
                        calibration=dict(cost.calibration))
     margins = check_margins(frozen)
     reqs = scenario_requests(frozen)
-    sim = run_sim(frozen, cfg, reqs)
+    from repro.core.telemetry import Telemetry
+    sim = run_sim(frozen, cfg, reqs, telemetry=Telemetry())
     attempts = 0
     for attempts in range(1, retries + 2):
         live = CostModel(table=dict(frozen.table))
-        wall = run_wall(cfg, live, reqs)
-        if wall["signature"] == sim["signature"]:
+        # fresh instrument per attempt: a noise-perturbed leg must not
+        # leave stale streams behind for the comparison
+        wall = run_wall(cfg, live, reqs, telemetry=Telemetry())
+        if wall["signature"] == sim["signature"] \
+                and wall["telemetry"] == sim["telemetry"]:
             break
     return {
         "margins": margins,
@@ -206,4 +222,7 @@ def run_demo(cfg=None, retries: int = 2) -> dict:
         "sim": sim,
         "attempts": attempts,
         "trace_match": wall["signature"] == sim["signature"],
+        # every clock-independent telemetry field agrees across backends
+        # (rank-state sequences, decision records, lifecycle structure)
+        "telemetry_match": wall["telemetry"] == sim["telemetry"],
     }

@@ -30,7 +30,8 @@ class ServingEngine:
                  cost: Optional[CostModel] = None, seed: int = 0,
                  cache_interval: Optional[int] = None,
                  injector=None, snapshot_interval: Optional[int] = None,
-                 snapshot_dir=None, failure_recovery: bool = True):
+                 snapshot_dir=None, failure_recovery: bool = True,
+                 telemetry=None):
         # `num_ranks` accepts a bare rank count (back-compat: synthesizes
         # a one-host topology) or a ClusterTopology (DESIGN.md §10);
         # spanning GFC groups then run hierarchical collectives.
@@ -43,6 +44,10 @@ class ServingEngine:
         self.topology = topo
         self.pipeline = DiTPipeline(cfg, seed=seed)
         self.comm = GroupFreeComm(topo.num_ranks, topology=topo)
+        # telemetry plane (DESIGN.md §15): one instance observes the
+        # whole stack — control plane decisions/timelines, GFC
+        # registration latency, and the worker collective overlay
+        self.comm.telemetry = telemetry
         self.backend = ThreadBackend(self.pipeline, topo.num_ranks,
                                      comm=self.comm)
         self.cp = ControlPlane(topo, policy, cost or CostModel(),
@@ -51,7 +56,8 @@ class ServingEngine:
                                injector=injector,
                                snapshot_interval=snapshot_interval,
                                snapshot_dir=snapshot_dir,
-                               failure_recovery=failure_recovery)
+                               failure_recovery=failure_recovery,
+                               telemetry=telemetry)
 
     # ------------------------------------------------------------------
     def serve(self, requests: list[Request], *, time_scale: float = 1.0,
@@ -76,6 +82,10 @@ class ServingEngine:
         # early arrivals do not release late
         clock = WallClock()
         self.backend.t0 = clock.t0
+        if self.cp.telemetry is not None:
+            # anchor the wall overlay streams (recorded in absolute
+            # monotonic time from worker threads) to plane-relative time
+            self.cp.telemetry.t0 = clock.t0
         for r, g in graphs:
             self.cp.submit(r, g)
         EventLoop(self.cp, clock).run(until=timeout)

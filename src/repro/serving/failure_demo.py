@@ -124,7 +124,8 @@ def recovery_events(events: list[dict]) -> list[tuple]:
                            "request_failed")]
 
 
-def run_wall(cfg, cost: CostModel, reqs, t_fail=None) -> dict:
+def run_wall(cfg, cost: CostModel, reqs, t_fail=None,
+             telemetry=None) -> dict:
     """Thread backend: real JAX compute, checkpoint-backed snapshots on
     a temp directory, wall clock.  ``t_fail=None`` is the undisturbed
     control leg (same snapshot cadence, no failure)."""
@@ -134,7 +135,7 @@ def run_wall(cfg, cost: CostModel, reqs, t_fail=None) -> dict:
         eng = ServingEngine(cfg, FailureScriptPolicy(), TOPO,
                             cost=CostModel(table=dict(cost.table)),
                             injector=inj, snapshot_interval=SNAP_INTERVAL,
-                            snapshot_dir=snap_dir)
+                            snapshot_dir=snap_dir, telemetry=telemetry)
         metrics = eng.serve(reqs, timeout=240)
         out = {
             "metrics": metrics,
@@ -143,19 +144,22 @@ def run_wall(cfg, cost: CostModel, reqs, t_fail=None) -> dict:
             "recovery": recovery_events(eng.cp.events),
             "timeouts": list(eng.backend.timeouts),
             "pixels": {r.id: eng.result_pixels(r) for r in reqs},
+            "telemetry": (telemetry.clock_independent()
+                          if telemetry is not None else None),
+            "telemetry_obj": telemetry,
         }
         eng.shutdown()
     return out
 
 
-def run_sim(cfg, cost: CostModel, reqs, t_fail) -> dict:
+def run_sim(cfg, cost: CostModel, reqs, t_fail, telemetry=None) -> dict:
     """Simulator backend: same script policy, same frozen costs, same
     failure script, virtual clock (metadata-only snapshots)."""
     sim_cost = CostModel(table=dict(cost.table))
     inj = FailureInjector([HostDown(t_fail, 0)])
     cp = ControlPlane(TOPO, FailureScriptPolicy(), sim_cost,
                       SimBackend(sim_cost), injector=inj,
-                      snapshot_interval=SNAP_INTERVAL)
+                      snapshot_interval=SNAP_INTERVAL, telemetry=telemetry)
     for r in reqs:
         r = dataclasses.replace(r, task_ids=[])
         cp.submit(r, convert_request(r, cfg))
@@ -165,6 +169,9 @@ def run_sim(cfg, cost: CostModel, reqs, t_fail) -> dict:
         "events": list(cp.events),
         "signature": trace_signature(cp.events),
         "recovery": recovery_events(cp.events),
+        "telemetry": (telemetry.clock_independent()
+                      if telemetry is not None else None),
+        "telemetry_obj": telemetry,
     }
 
 
@@ -180,15 +187,19 @@ def run_demo(cfg=None, retries: int = 2) -> dict:
     if cfg is None:
         from repro.configs.dit_models import DIT_IMAGE
         cfg = DIT_IMAGE.reduced()
+    from repro.core.telemetry import Telemetry
     cost = calibrate(cfg)
     frozen = CostModel(table=dict(cost.table))
     t_fail = fail_time(frozen)
     reqs = [_request("victim")]
-    sim = run_sim(cfg, frozen, reqs, t_fail)
+    sim = run_sim(cfg, frozen, reqs, t_fail, telemetry=Telemetry())
     attempts = 0
     for attempts in range(1, retries + 2):
-        wall = run_wall(cfg, frozen, reqs, t_fail)
-        if wall["signature"] == sim["signature"]:
+        # fresh instrument per attempt: a noise-perturbed leg must not
+        # leave stale streams behind for the comparison
+        wall = run_wall(cfg, frozen, reqs, t_fail, telemetry=Telemetry())
+        if wall["signature"] == sim["signature"] \
+                and wall["telemetry"] == sim["telemetry"]:
             break
     control = run_wall(cfg, frozen, reqs, t_fail=None)
     rid = reqs[0].id
@@ -200,6 +211,7 @@ def run_demo(cfg=None, retries: int = 2) -> dict:
         "attempts": attempts,
         "t_fail": t_fail,
         "trace_match": wall["signature"] == sim["signature"],
+        "telemetry_match": wall["telemetry"] == sim["telemetry"],
         "recovery": wall["recovery"],
         # the request resumed from its snapshot, not from step 0
         "resumed_step": rolled[0]["step"] if rolled else None,

@@ -115,11 +115,12 @@ def shape_timeline(events: list[dict]) -> list[tuple]:
     return out
 
 
-def run_wall(cfg, reqs: list[Request], tail: ExecutionLayout) -> dict:
+def run_wall(cfg, reqs: list[Request], tail: ExecutionLayout,
+             telemetry=None) -> dict:
     """Thread backend: real JAX compute — branch groups, merge
     exchange, and the reshape migration all execute."""
     eng = ServingEngine(cfg, ShapeScriptPolicy(tail), TOPO,
-                        cost=CostModel())
+                        cost=CostModel(), telemetry=telemetry)
     metrics = eng.serve(reqs, timeout=240)
     out = {
         "metrics": metrics,
@@ -127,17 +128,21 @@ def run_wall(cfg, reqs: list[Request], tail: ExecutionLayout) -> dict:
         "signature": trace_signature(eng.cp.events),
         "timeline": shape_timeline(eng.cp.events),
         "pixels": {r.id: eng.result_pixels(r) for r in reqs},
+        "telemetry": (telemetry.clock_independent()
+                      if telemetry is not None else None),
+        "telemetry_obj": telemetry,
     }
     eng.shutdown()
     return out
 
 
-def run_sim(cfg, reqs: list[Request], tail: ExecutionLayout) -> dict:
+def run_sim(cfg, reqs: list[Request], tail: ExecutionLayout,
+            telemetry=None) -> dict:
     """Simulator backend: same script, shape-keyed pricing (the cfg2
     steps price the split cell + merge term), virtual clock."""
     cost = CostModel()
     cp = ControlPlane(TOPO, ShapeScriptPolicy(tail), cost,
-                      SimBackend(cost))
+                      SimBackend(cost), telemetry=telemetry)
     for r in reqs:
         r = dataclasses.replace(r, task_ids=[])
         cp.submit(r, convert_request(r, cfg))
@@ -148,6 +153,9 @@ def run_sim(cfg, reqs: list[Request], tail: ExecutionLayout) -> dict:
         "signature": trace_signature(cp.events),
         "timeline": shape_timeline(cp.events),
         "migrated_bytes": cp.backend.migrated_bytes,
+        "telemetry": (telemetry.clock_independent()
+                      if telemetry is not None else None),
+        "telemetry_obj": telemetry,
     }
 
 
@@ -183,9 +191,10 @@ def run_demo(cfg=None) -> dict:
     if cfg is None:
         from repro.configs.dit_models import DIT_IMAGE
         cfg = DIT_IMAGE.reduced()
+    from repro.core.telemetry import Telemetry
     reqs = scenario_requests()
-    sim = run_sim(cfg, reqs, SPLIT)
-    wall = run_wall(cfg, reqs, SPLIT)
+    sim = run_sim(cfg, reqs, SPLIT, telemetry=Telemetry())
+    wall = run_wall(cfg, reqs, SPLIT, telemetry=Telemetry())
     control = run_wall(cfg, reqs, NARROW)
     px_match = all(
         wall["pixels"][r.id] is not None
@@ -197,12 +206,20 @@ def run_demo(cfg=None) -> dict:
         "sim": sim,
         "control": control,
         "trace_match": wall["signature"] == sim["signature"],
+        "telemetry_match": wall["telemetry"] == sim["telemetry"],
         "pixels_match": px_match,
         "scalar_identical": scalar_search_off_identical(cfg),
     }
 
 
-def main():
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--emit-trace", metavar="PATH", default=None,
+                    help="write the wall leg's Perfetto/Chrome "
+                         "trace.json here (chrome://tracing or "
+                         "ui.perfetto.dev)")
+    args = ap.parse_args(argv)
     res = run_demo()
     print("shape timeline (wall):")
     for step, shape in res["wall"]["timeline"]:
@@ -211,11 +228,16 @@ def main():
     for step, shape in res["control"]["timeline"]:
         print(f"  step {step}: {shape}")
     print(f"sim/wall trace signatures identical: {res['trace_match']}")
+    print("sim/wall clock-independent telemetry: "
+          f"{res['telemetry_match']}")
     print(f"split pixels == batched-CFG control: {res['pixels_match']}")
     print("shape-search-off == scalar elastic:  "
           f"{res['scalar_identical']}")
+    if args.emit_trace:
+        res["wall"]["telemetry_obj"].perfetto(args.emit_trace)
+        print(f"wall Perfetto trace written to {args.emit_trace}")
     if not (res["trace_match"] and res["pixels_match"]
-            and res["scalar_identical"]):
+            and res["scalar_identical"] and res["telemetry_match"]):
         raise SystemExit(1)
 
 

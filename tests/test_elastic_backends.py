@@ -50,6 +50,16 @@ def test_traces_identical_across_backends(demo):
         demo["wall"]["signature"], demo["sim"]["signature"])
 
 
+def test_telemetry_identical_across_backends(demo):
+    """Every clock-independent telemetry field — rank state sequences,
+    decision records with explanations, lifecycle structure — must agree
+    between the virtual-clock simulator and the thread runtime
+    (DESIGN.md §15 identity rule)."""
+    assert demo["telemetry_match"]
+    assert demo["wall"]["telemetry"] == demo["sim"]["telemetry"]
+    assert demo["wall"]["telemetry"]["decisions"]  # non-vacuous
+
+
 def test_preempted_request_output_still_correct(demo):
     """The preempted + migrated + reallocated request must produce the
     same pixels as an undisturbed fixed-SP1 run (inputs intact through

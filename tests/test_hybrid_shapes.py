@@ -145,6 +145,21 @@ def test_demo_sim_wall_traces_identical(demo):
                                         (3, "cfg2x sp2")]
 
 
+def test_demo_sim_wall_telemetry_identical(demo):
+    """Clock-independent telemetry — rank timelines, decision records
+    (cfg/degree structure included), lifecycle spans — agrees across
+    backends for the shape-reshaping run (DESIGN.md §15)."""
+    assert demo["telemetry_match"]
+    assert demo["wall"]["telemetry"] == demo["sim"]["telemetry"]
+    flat = [d for recs in demo["wall"]["telemetry"]["decisions"].values()
+            for d in recs]
+    # the scripted mid-flight reshape shows up as a reallocate decision
+    # whose structural record carries the new cfg dimension
+    reshapes = [d for d in flat
+                if d["action"] == "reallocate" and d.get("cfg") == 2]
+    assert reshapes, flat
+
+
 def test_demo_shape_search_off_is_scalar(demo):
     """ElasticPolicy(hybrid=True) on an unguided workload is
     byte-identical to scalar ElasticPolicy()."""

@@ -1,0 +1,282 @@
+"""Telemetry plane tests (DESIGN.md §15).
+
+Covers the two §15 contracts on the simulator backend — the disabled
+path leaves control-plane traces byte-identical (modulo process-global
+ids), and the enabled path's streams are well-formed — plus the
+Perfetto export shape, the GFC latency histogram, and the
+``ControlPlane.metrics()`` edge cases (empty run, all-failed run, and
+the unfinished-counts-as-violation SLO rule the serving timeout path
+relies on).  Cross-backend telemetry identity on REAL serving runs is
+gated in tests/test_elastic_backends.py / tests/test_hybrid_shapes.py
+and benchmarks/telemetry_suite.py.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+import pytest
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.core.cost_model import CostModel
+from repro.core.policies import make_policy
+from repro.core.scheduler import ControlPlane, trace_signature
+from repro.core.simulator import SimBackend
+from repro.core.telemetry import (RANK_STATES, Telemetry, _sanitize)
+from repro.core.trajectory import ClusterTopology, Request
+from repro.diffusion.adapters import convert_request
+
+CFG = DIT_IMAGE.reduced()
+TOPO = ClusterTopology(num_hosts=2, ranks_per_host=2)
+
+
+def _request(i: int, deadline=None) -> Request:
+    return Request(id=f"r{i}", model="dit-image", height=128, width=128,
+                   frames=1, steps=4, arrival=i * 0.2, deadline=deadline)
+
+
+def _run(telemetry=None, n: int = 6, jitter: float = 0.0,
+         until: float = float("inf")) -> ControlPlane:
+    cost = CostModel()
+    cp = ControlPlane(TOPO, make_policy("elastic", TOPO.num_ranks), cost,
+                      SimBackend(cost, jitter=jitter),
+                      telemetry=telemetry)
+    for i in range(n):
+        r = _request(i, deadline=i * 0.2 + 30.0)
+        cp.submit(r, convert_request(r, CFG))
+    cp.run(until=until)
+    return cp
+
+
+def _strip_ids(events):
+    """Task/artifact ids come from process-global counters, so two runs
+    in one process never match raw; everything else must."""
+    out = []
+    for e in events:
+        e = dict(e)
+        for k in ("task", "tasks", "victims", "lost"):
+            e.pop(k, None)
+        out.append(e)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# contract 1: zero perturbation when disabled (and when enabled)
+# ---------------------------------------------------------------------------
+
+def test_telemetry_does_not_perturb_the_trace():
+    off = _run(telemetry=None)
+    on = _run(telemetry=Telemetry())
+    assert trace_signature(off.events) == trace_signature(on.events)
+    assert _strip_ids(off.events) == _strip_ids(on.events)
+
+
+def test_disabled_plane_has_no_telemetry_state():
+    cp = _run(telemetry=None)
+    assert cp.telemetry is None
+    assert cp.cache.telemetry is None
+
+
+# ---------------------------------------------------------------------------
+# stream shape
+# ---------------------------------------------------------------------------
+
+def test_rank_timelines_well_formed():
+    tel = Telemetry()
+    _run(telemetry=tel)
+    assert sorted(tel.rank_states) == list(range(TOPO.num_ranks))
+    for r, seq in tel.rank_states.items():
+        t0, s0, _ = seq[0]
+        assert (t0, s0) == (0.0, "idle")
+        times = [t for t, _, _ in seq]
+        assert times == sorted(times)
+        states = [s for _, s, _ in seq]
+        assert set(states) <= set(RANK_STATES)
+        # consecutive idle/dead entries are deduped
+        for a, b in zip(states, states[1:]):
+            assert not (a == b and a in ("idle", "dead"))
+
+
+def test_utilization_and_goodput_bounds():
+    tel = Telemetry()
+    cp = _run(telemetry=tel)
+    s = tel.summary()
+    assert 0.0 < s["rank_utilization"] <= 1.0
+    for u in s["utilization_per_rank"].values():
+        assert 0.0 <= u <= 1.0
+    assert s["completed"] == cp.metrics()["completed"]
+    assert s["goodput_per_rank"] == pytest.approx(
+        s["completed"] / (TOPO.num_ranks * s["makespan_s"]))
+
+
+def test_decisions_match_dispatches_and_carry_explanations():
+    tel = Telemetry()
+    cp = _run(telemetry=tel)
+    dispatches = [e for e in cp.events if e["ev"] == "dispatch"]
+    recs = [d for d in tel.decisions if d["action"] == "dispatch"]
+    assert len(recs) == len(dispatches)
+    # ElasticPolicy stages an explanation for every dispatch it emits
+    for d in recs:
+        ex = d["explanation"]
+        assert ex is not None and "why" in ex
+        assert all(isinstance(a, dict) for a in ex.get("alternatives", []))
+
+
+def test_lifecycle_spans_pair_and_terminate():
+    tel = Telemetry()
+    _run(telemetry=tel)
+    for rid, seq in tel.lifecycle.items():
+        phases = [p for _, p, _ in seq]
+        assert phases[0] == "queued"
+        assert phases[-1] == "done"
+        assert phases.count("step_start") == phases.count("step_end")
+
+
+def test_cost_accuracy_stream():
+    tel = Telemetry()
+    _run(telemetry=tel)                 # jitter-free: estimates are exact
+    assert tel.cost_stream
+    assert all(s["rel_err"] == 0.0 for s in tel.cost_stream)
+    tel2 = Telemetry()
+    _run(telemetry=tel2, jitter=0.2)    # jittered: observed != predicted
+    assert any(s["rel_err"] > 0.0 for s in tel2.cost_stream)
+    for cell in tel2.cost_cells.values():
+        assert cell["n"] >= 1 and cell["rel_err"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# identity projection
+# ---------------------------------------------------------------------------
+
+def test_sanitize_drops_volatile_fields():
+    rec = {"t": 1.25, "task": "task-9", "kind": "denoise", "step": 3,
+           "metrics": {"eta": 0.5}, "lost": ["a-1"], "pack": "p-7",
+           "ranks": [0, 1], "score": 0.125}
+    san = _sanitize(rec)
+    assert san == {"kind": "denoise", "step": 3, "pack": True,
+                   "ranks": (0, 1)}
+
+
+def test_clock_independent_projection_is_json_stable():
+    tel = Telemetry()
+    _run(telemetry=tel)
+    ci = tel.clock_independent()
+    assert set(ci) == {"rank_states", "decisions", "lifecycle"}
+    # round-trips through repr-equality (no floats, no ids anywhere)
+    flat = repr(ci)
+    assert "task-" not in flat
+    assert not any(ch in flat for ch in ("e-0", "e+0"))
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export
+# ---------------------------------------------------------------------------
+
+def test_perfetto_export_valid(tmp_path):
+    tel = Telemetry()
+    _run(telemetry=tel)
+    path = tmp_path / "trace.json"
+    tel.perfetto(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert evs
+    phases = {e["ph"] for e in evs}
+    assert "M" in phases and "X" in phases
+    meta_names = {e["name"] for e in evs if e["ph"] == "M"}
+    assert {"process_name", "thread_name"} <= meta_names
+    hosts = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert any(h.startswith("host") for h in hosts)
+    for e in evs:
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0 and math.isfinite(e["ts"])
+    # rank slices: pid = host of the rank, tid = rank
+    rank_x = [e for e in evs if e["ph"] == "X"
+              and e["pid"] <= TOPO.num_hosts - 1]
+    assert rank_x
+    for e in rank_x:
+        assert e["pid"] == TOPO.host_of(e["tid"])
+
+
+# ---------------------------------------------------------------------------
+# GFC histogram + staging
+# ---------------------------------------------------------------------------
+
+def test_gfc_histogram_and_percentiles():
+    tel = Telemetry()
+    for us in (3, 3, 3, 50, 900):
+        tel.gfc_register(us * 1e-6)
+    hist = tel.gfc_histogram()
+    assert sum(hist.values()) == 5
+    assert hist["4us"] == 3          # 3us samples land in the (2,4] bucket
+    pct = tel.gfc_percentiles()
+    assert pct["n"] == 5
+    assert pct["p50_us"] == pytest.approx(3.0)
+    # floor-index selection: p99 of 5 samples is the 4th order statistic
+    assert pct["p99_us"] == pytest.approx(50.0)
+    tel.gfc_register(900e-6)  # a 6th sample pushes p99 to the tail
+    assert tel.gfc_percentiles()["p99_us"] == pytest.approx(900.0)
+    assert tel.summary()["gfc"]["n"] == 6
+
+
+def test_staged_explanations_cleared_per_schedule_point():
+    tel = Telemetry()
+    tel.stage("dispatch", "t-1", {"why": "stale"})
+    tel.begin_schedule()                     # new schedule point: cleared
+    ev = {"t": 0.0, "ev": "dispatch", "task": "t-1", "req": "r",
+          "kind": "denoise", "step": 0, "ranks": [0]}
+    tel.record_action("dispatch", ev, key="t-1")
+    assert tel.decisions[-1]["explanation"] is None
+
+
+# ---------------------------------------------------------------------------
+# ControlPlane.metrics() edge cases
+# ---------------------------------------------------------------------------
+
+def _empty_plane():
+    cost = CostModel()
+    return ControlPlane(TOPO, make_policy("elastic", TOPO.num_ranks),
+                        cost, SimBackend(cost))
+
+
+def test_metrics_empty_run():
+    cp = _empty_plane()
+    cp.run()
+    m = cp.metrics()
+    assert m["completed"] == 0 and m["failed"] == 0
+    assert m["slo_attainment"] == 1.0
+    assert m["throughput_rps"] == 0.0 and m["makespan_s"] == 0.0
+    assert math.isnan(m["mean_latency_s"])
+    assert math.isnan(m["p95_latency_s"])
+
+
+def test_metrics_all_failed_run():
+    cp = _empty_plane()
+    for i in range(3):
+        r = _request(i, deadline=i * 0.2 + 30.0)
+        cp.submit(r, convert_request(r, CFG))
+    for rid in list(cp.requests):
+        cp._fail_request(rid, "test")
+    m = cp.metrics()
+    assert m["completed"] == 0 and m["failed"] == 3
+    assert m["slo_attainment"] == 0.0
+    assert m["throughput_rps"] == 0.0
+    assert math.isnan(m["mean_latency_s"])
+
+
+def test_metrics_unfinished_counts_as_slo_violation():
+    # the serve-timeout path (engine.serve) relies on this §6.1 rule:
+    # an unfinished request is BOTH a failure and an SLO violation,
+    # even when its deadline has not yet passed
+    cp = _run(n=4, until=0.5)           # cut the virtual clock mid-run
+    m = cp.metrics()
+    unfinished = sum(1 for r in cp.requests.values()
+                     if r.done_time is None)
+    assert unfinished >= 1
+    done_late = sum(1 for r in cp.requests.values()
+                    if r.done_time is not None and r.deadline is not None
+                    and r.done_time > r.deadline)
+    expect = 1.0 - (unfinished + done_late) / len(cp.requests)
+    assert m["slo_attainment"] == pytest.approx(expect)
+    assert m["failed"] == unfinished
