@@ -7,20 +7,45 @@ feature-cache workloads), and the cross-backend fidelity suite
 (sim_fidelity).  ``--suite`` substring-filters the listing for a quick
 single-suite run, e.g. ``--suite fidelity`` or ``--suite policies``.
 
-Prints ``name,us_per_call,derived`` CSV per the harness contract.
+Prints ``name,us_per_call,derived`` CSV per the harness contract, and
+appends every suite's headline rows to the consolidated perf-trajectory
+file ``benchmarks/results/trajectory.json`` — one entry per orchestrator
+invocation, keyed by UTC timestamp, so the bench history accumulates
+across runs (CI uploads it as an artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results"
+TRAJECTORY = RESULTS / "trajectory.json"
+
+
+def _append_trajectory(entry: dict) -> None:
+    """Best-effort append to the consolidated history (a corrupt or
+    missing file starts a fresh history, never fails the bench run)."""
+    try:
+        history = json.loads(TRAJECTORY.read_text())
+        if not isinstance(history, list):
+            history = []
+    except (OSError, ValueError):
+        history = []
+    history.append(entry)
+    RESULTS.mkdir(exist_ok=True)
+    TRAJECTORY.write_text(json.dumps(history, indent=1, default=str))
 
 
 def main() -> None:
     from benchmarks import (arrival_scaling, gfc_collectives, group_setup,
                             migration_overhead, overhead_fcfs_sp4,
                             policies_e2e, roofline, sim_fidelity,
-                            stage_scaling, telemetry_suite)
+                            stage_scaling, telemetry_scale,
+                            telemetry_suite)
     suites = [
         ("group_setup(Table1)", group_setup),
         ("policies_e2e(Fig6)", policies_e2e),
@@ -32,6 +57,7 @@ def main() -> None:
         ("overhead_fcfs_sp4(Fig8)", overhead_fcfs_sp4),
         ("roofline_kernels(deliverable_g)", roofline),
         ("telemetry(S15)", telemetry_suite),
+        ("telemetry_scale(S16)", telemetry_scale),
     ]
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default=None,
@@ -46,15 +72,25 @@ def main() -> None:
             sys.exit(2)
     print("name,us_per_call,derived")
     failures = 0
+    entry = {"utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+             "suites": {}}
     for label, mod in suites:
         try:
             data = mod.run()
-            for name, us, derived in mod.rows(data):
+            suite_rows = list(mod.rows(data))
+            for name, us, derived in suite_rows:
                 print(f"{name},{us:.1f},{derived}")
+            entry["suites"][label] = [
+                {"name": name, "us_per_call": us, "derived": derived}
+                for name, us, derived in suite_rows]
         except Exception as e:   # noqa: BLE001
             failures += 1
             print(f"{label},nan,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+            entry["suites"][label] = [
+                {"name": label, "us_per_call": None,
+                 "derived": f"ERROR:{type(e).__name__}:{e}"}]
+    _append_trajectory(entry)
     if failures:
         sys.exit(1)
 

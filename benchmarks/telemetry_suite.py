@@ -51,6 +51,64 @@ def _leg(name: str, demo_result: dict) -> tuple[dict, list[str]]:
     }, problems
 
 
+def _streamed_leg() -> tuple[dict, list[str]]:
+    """Streaming sinks (DESIGN.md §16) on a small sim workload at FULL
+    retention: serving with a JsonlSink + RollupSink attached must leave
+    the control-plane trace byte-identical to a sink-free run, export a
+    non-empty ``.jsonl``, and the rollup's busy accounting must agree
+    with the in-memory instrument exactly."""
+    from repro.configs.dit_models import DIT_IMAGE
+    from repro.core.cost_model import CostModel
+    from repro.core.policies import make_policy
+    from repro.core.scheduler import ControlPlane, trace_signature
+    from repro.core.simulator import SimBackend
+    from repro.core.telemetry import Telemetry
+    from repro.core.telemetry_sinks import JsonlSink, RollupSink
+    from repro.core.trajectory import ClusterTopology, Request
+    from repro.diffusion.adapters import convert_request
+
+    cfg = DIT_IMAGE.reduced()
+    topo = ClusterTopology(num_hosts=2, ranks_per_host=2)
+
+    def serve(tel):
+        cost = CostModel()
+        cp = ControlPlane(topo, make_policy("elastic", topo.num_ranks),
+                          cost, SimBackend(cost), telemetry=tel)
+        for i in range(8):
+            r = Request(id=f"s{i}", model="dit-image", height=128,
+                        width=128, frames=1, steps=4, arrival=i * 0.2,
+                        deadline=i * 0.2 + 30.0)
+            cp.submit(r, convert_request(r, cfg))
+        cp.run()
+        tel.close_sinks()
+        return cp
+
+    cp_bare = serve(Telemetry())
+    path = RESULTS / "telemetry_suite_stream.jsonl"
+    jsonl, rollup = JsonlSink(path), RollupSink(window_s=0.25)
+    tel = Telemetry(sinks=[jsonl, rollup])
+    cp_sink = serve(tel)
+
+    problems = []
+    if trace_signature(cp_bare.events) != trace_signature(cp_sink.events):
+        problems.append("streamed: sinks changed the control-plane trace")
+    if jsonl.lines_written == 0 or not path.exists():
+        problems.append("streamed: JsonlSink exported nothing")
+    busy_tel = tel.busy_seconds()
+    busy_roll = rollup.busy_seconds()
+    drift = max(abs(busy_tel.get(r, 0.0) - busy_roll.get(r, 0.0))
+                for r in set(busy_tel) | set(busy_roll))
+    if drift > 1e-9:
+        problems.append(f"streamed: rollup busy drift {drift}")
+    return {
+        "trace_match": not problems,
+        "jsonl_lines": jsonl.lines_written,
+        "jsonl_bytes": path.stat().st_size if path.exists() else 0,
+        "rollup_windows": len(rollup.windows),
+        "busy_drift_s": drift,
+    }, problems
+
+
 def run() -> dict:
     from repro.serving import failure_demo, hybrid_demo
     RESULTS.mkdir(exist_ok=True)
@@ -60,6 +118,9 @@ def run() -> dict:
     problems += probs
     leg, probs = _leg("failure", failure_demo.run_demo())
     out["failure"] = leg
+    problems += probs
+    leg, probs = _streamed_leg()
+    out["streamed"] = leg
     problems += probs
     (RESULTS / "telemetry_suite.json").write_text(
         json.dumps(out, indent=1, default=str))
@@ -78,6 +139,11 @@ def rows(data: dict) -> list[tuple[str, float, str]]:
                    f"decisions={d['decisions']}")
         out.append((f"telemetry.{name}_demo", d["makespan_s"] * 1e6,
                     derived))
+    s = data["streamed"]
+    out.append(("telemetry.streamed", float(s["jsonl_lines"]),
+                f"trace_match={s['trace_match']};"
+                f"jsonl_bytes={s['jsonl_bytes']};"
+                f"windows={s['rollup_windows']}"))
     return out
 
 

@@ -29,6 +29,17 @@ busy/migrating timelines, per-request lifecycle spans, and policy
 decision instants — loadable in chrome://tracing or ui.perfetto.dev;
 it also prints an end-of-run utilization and decision summary table.
 Composes with every flag above.
+``--stream-telemetry PATH`` additionally streams telemetry OUT of the
+process as it happens (DESIGN.md §16): retained events export
+incrementally to ``PATH`` as JSONL through a :class:`JsonlSink`, the
+full stream folds into bounded-memory :class:`RollupSink` windows, and
+live SLO burn-rate / goodput monitors emit ``alert`` events into the
+same stream.  ``--sample-rate P`` (default 1.0 = keep everything)
+bounds raw in-memory retention: request spans are head-sampled at rate
+``P`` with per-request coherence, while decisions, failures, and
+rollbacks are always kept.  Implies telemetry; composes with
+``--emit-trace`` (when sampled, the Perfetto trace backfills counter
+tracks from the rollup windows).
 """
 import argparse
 
@@ -79,7 +90,18 @@ def main():
                     help="attach the telemetry plane and write a "
                          "Perfetto/Chrome trace.json of the run here "
                          "(DESIGN.md §15)")
+    ap.add_argument("--stream-telemetry", metavar="PATH", default=None,
+                    help="stream retained telemetry events to PATH as "
+                         "JSONL and fold the full stream into rollup "
+                         "windows + SLO monitors (DESIGN.md §16); "
+                         "implies telemetry")
+    ap.add_argument("--sample-rate", type=float, default=1.0,
+                    help="head-sampling rate for raw request-span "
+                         "retention (DESIGN.md §16); 1.0 keeps every "
+                         "event, decisions/failures are always kept")
     args = ap.parse_args()
+    if not 0.0 <= args.sample_rate <= 1.0:
+        raise SystemExit("--sample-rate must be in [0, 1]")
 
     if args.cfg_split:
         if args.policy == "edf":
@@ -93,9 +115,21 @@ def main():
     if args.use_pallas:
         cfg = cfg.with_(use_pallas=True)
     telemetry = None
-    if args.emit_trace:
+    stream_sinks = []
+    rollup = None
+    if args.emit_trace or args.stream_telemetry or args.sample_rate < 1.0:
         from repro.core.telemetry import Telemetry
-        telemetry = Telemetry()
+        from repro.core.telemetry_sinks import SamplingPolicy
+        if args.stream_telemetry:
+            from repro.core.slo_monitor import (GoodputMonitor,
+                                                SloBurnRateMonitor)
+            from repro.core.telemetry_sinks import JsonlSink, RollupSink
+            rollup = RollupSink(window_s=2.0)
+            stream_sinks = [JsonlSink(args.stream_telemetry), rollup,
+                            SloBurnRateMonitor(), GoodputMonitor()]
+        sampling = (SamplingPolicy(rate=args.sample_rate)
+                    if args.sample_rate < 1.0 else None)
+        telemetry = Telemetry(sinks=stream_sinks, sampling=sampling)
     engine = ServingEngine(cfg,
                            _policy(args.policy, 4, args.min_degree),
                            num_ranks=4,
@@ -153,9 +187,11 @@ def main():
         print(f"feature cache: {hits} hit steps (all-gather skipped), "
               f"{refreshes} refresh steps")
     if telemetry is not None:
-        telemetry.perfetto(args.emit_trace)
+        if args.emit_trace:
+            telemetry.perfetto(args.emit_trace)
         s = telemetry.summary()
-        print(f"\ntelemetry summary (trace -> {args.emit_trace}):")
+        dest = args.emit_trace or "(in-memory)"
+        print(f"\ntelemetry summary (trace -> {dest}):")
         print(f"  makespan: {s['makespan_s']:.2f}s   "
               f"rank utilization: {s['rank_utilization']:.1%}   "
               f"goodput/rank: {s['goodput_per_rank']:.4f} req/rank-s")
@@ -172,6 +208,13 @@ def main():
         if whys:
             print("  explained decisions: " + ", ".join(
                 f"{k} x{v}" for k, v in sorted(whys.items())))
+        if args.stream_telemetry:
+            jsonl = stream_sinks[0]
+            print(f"  streamed {jsonl.lines_written} retained events -> "
+                  f"{args.stream_telemetry} "
+                  f"(sample_rate={args.sample_rate}, "
+                  f"{len(rollup.windows)} rollup windows, "
+                  f"{len(telemetry.alerts)} alerts)")
     engine.shutdown()
 
 

@@ -836,7 +836,13 @@ class ElasticPolicy(Policy):
                             {"choice": "shrink",
                              "note": "no free boundary to pin"},
                             {"choice": "wait-for-boundary"}],
-                        "metrics": {"demand": demand, "lack": lack}})
+                        # view.alerts is READ-ONLY context (§16): the
+                        # live monitor state rides the explanation's
+                        # volatile metrics — observing it never branches
+                        # the decision, so traces stay backend- and
+                        # monitor-independent
+                        "metrics": {"demand": demand, "lack": lack,
+                                    "alerts_active": len(view.alerts)}})
                 actions.append(Preempt(t.id))
                 reclaiming += lay.degree
                 lack -= lay.degree

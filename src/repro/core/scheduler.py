@@ -157,6 +157,13 @@ class SchedulerView:
     # explanations here (`view.telemetry.stage(...)`); None when
     # telemetry is disabled — policies must guard on it
     telemetry: Optional[object] = None
+    # live SLO monitor alerts (DESIGN.md §16): structured alert records
+    # emitted by attached burn-rate/goodput monitors, newest last.
+    # READ-ONLY this PR — policies may observe them (e.g. stage them in
+    # an explanation) but acting on them belongs to the admission-
+    # control arc (ROADMAP); no shipped policy branches on this field,
+    # which keeps traces byte-identical with monitors attached.
+    alerts: tuple = ()
 
     @property
     def num_alive(self) -> int:
@@ -209,6 +216,14 @@ class ControlPlane:
         self.dispatch_overhead = dispatch_overhead
         self.graphs: dict[str, RequestGraph] = {}
         self.requests: dict[str, Request] = {}
+        # active set for _view(): RELEASED requests not yet done/failed/
+        # cancelled, in (arrival, submit) order (dict preserves
+        # insertion; the arrivals heap breaks ties by submit sequence).
+        # Scanning all graphs ever submitted per schedule point is
+        # O(total requests) — quadratic over an open-loop run where the
+        # whole trace is submitted upfront (benchmarks/telemetry_scale.py
+        # streams ~2e4 requests through one plane).
+        self._unfinished: dict[str, None] = {}
         self.running: dict[str, tuple[TrajectoryTask, ExecutionLayout]] = {}
         self.free_ranks: set[int] = set(range(self.num_ranks))
         self.now = 0.0
@@ -268,6 +283,8 @@ class ControlPlane:
 
     def _release(self, request: Request):
         self.released.add(request.id)
+        if not request.failed:      # cancelled-before-arrival stays out
+            self._unfinished[request.id] = None
         self.events.append({"t": self.now, "ev": "arrival",
                             "req": request.id})
         if self.telemetry is not None:
@@ -320,14 +337,18 @@ class ControlPlane:
     # ------------------------------------------------------------------
     def _view(self) -> SchedulerView:
         ready = []
-        for rid, g in self.graphs.items():
-            if rid not in self.released:
-                continue
+        # iterate the released-unfinished active set, not all graphs
+        # ever submitted — same contents (done/failed/cancelled requests
+        # never yield ready tasks; unreleased ones are filtered out) and
+        # the same order for arrival-sorted submission
+        for rid in self._unfinished:
             req = self.requests[rid]
             if req.failed:
                 continue
+            g = self.graphs[rid]
             for t in g.ready_tasks():
                 ready.append((t, req, g))
+        tel = self.telemetry
         return SchedulerView(now=self.now, ready=ready,
                              free_ranks=sorted(self.free_ranks),
                              num_ranks=self.num_ranks, cost=self.cost,
@@ -339,7 +360,9 @@ class ControlPlane:
                              cache_residency=self.cache.residency_view(),
                              cache_interval=self.cache.interval,
                              dead_ranks=frozenset(self.dead_ranks),
-                             telemetry=self.telemetry)
+                             telemetry=tel,
+                             alerts=(tuple(tel.alerts)
+                                     if tel is not None else ()))
 
     # ------------------------------------------------------------------
     # action application (validated; invalid actions are skipped)
@@ -583,6 +606,7 @@ class ControlPlane:
         if req is None or req.failed or req.done_time is not None:
             return False
         req.failed = True
+        self._unfinished.pop(a.request_id, None)
         self.pinned.pop(a.request_id, None)
         self.cache.invalidate(a.request_id, "cancel")
         for tid, (task, _) in list(self.running.items()):
@@ -689,7 +713,7 @@ class ControlPlane:
                                     rec["tokens"], rec["layout"].degree,
                                     len(rec["members"]), rec["span"],
                                     rec.get("cached", False)),
-                predicted, c.duration)
+                predicted, c.duration, t=self.now)
         self.cost.observe_packed(rec["model"], "denoise", rec["tokens"],
                                  rec["layout"].degree, len(rec["members"]),
                                  c.duration, span=rec["span"],
@@ -804,13 +828,15 @@ class ControlPlane:
                 tel.observe_cost(
                     CostModel._key(model, task.kind, tokens,
                                    layout.degree, span, cached, cfg),
-                    predicted, c.duration)
+                    predicted, c.duration, t=self.now,
+                    req=task.request_id)
             self.cost.observe(model, task.kind, tokens, layout.degree,
                               c.duration, span=span, cached=cached,
                               cfg=cfg)
         req = self.requests[task.request_id]
         if graph.is_done() and req.done_time is None:
             req.done_time = c.finish_time
+            self._unfinished.pop(req.id, None)
             self.pinned.pop(req.id, None)
             self.cache.invalidate(req.id, "done")
             if self.snapshots is not None:
@@ -818,7 +844,15 @@ class ControlPlane:
             self.events.append({"t": self.now, "ev": "request_done",
                                 "req": req.id})
             if tel is not None:
-                tel.request_event(self.now, req.id, "done")
+                # outcome under `metrics` (§15 staging convention): the
+                # SLO verdict and latency are clock-dependent, so they
+                # ride outside the identity projection
+                tel.request_event(
+                    self.now, req.id, "done",
+                    metrics={"violation": bool(
+                        req.deadline is not None
+                        and req.done_time > req.deadline),
+                        "latency": req.done_time - req.arrival})
 
     def _fail_request(self, rid: str, why: str):
         """Terminal request failure: release every plane-held resource and
@@ -827,6 +861,7 @@ class ControlPlane:
         if req is None or req.failed or req.done_time is not None:
             return
         req.failed = True
+        self._unfinished.pop(rid, None)
         self.pinned.pop(rid, None)
         self.cache.invalidate(rid, "request-failed")
         if self.snapshots is not None:
@@ -834,7 +869,9 @@ class ControlPlane:
         self.events.append({"t": self.now, "ev": "request_failed",
                             "req": rid, "why": why})
         if self.telemetry is not None:
-            self.telemetry.request_event(self.now, rid, "failed", why=why)
+            self.telemetry.request_event(
+                self.now, rid, "failed", why=why,
+                metrics={"violation": True})   # unfinished == miss (§6.1)
 
     def fail_task(self, task_id: str, requeue: bool = True):
         """Worker failure: the trajectory task graph is the unit of
@@ -858,6 +895,7 @@ class ControlPlane:
             task.layout = None
         else:
             self.requests[task.request_id].failed = True
+            self._unfinished.pop(task.request_id, None)
 
     # ------------------------------------------------------------------
     def run(self, until: float = float("inf"), max_events: int = 10 ** 7):

@@ -41,11 +41,45 @@ Two contracts govern everything here (DESIGN.md §15):
 Thread-safety: the control plane drives all identity streams from the
 event-loop thread.  Wall-backend worker threads only ever *append* to
 per-stream lists (``gfc_register``, ``span``) — GIL-atomic, no locks.
+Sink fan-out (which worker threads can also reach) is serialized by a
+re-entrant lock.
+
+§16 additions (streaming at fleet scale): every instrument site also
+fans its raw record out to attached
+:class:`~repro.core.telemetry_sinks.TelemetrySink` objects
+(``full_stream`` sinks see everything; raw exporters see only what the
+:class:`~repro.core.telemetry_sinks.SamplingPolicy` retains), a
+failing sink is detached — logged once, ``sink_detached`` counter
+bumped — without ever failing the run, and under an active sampling
+policy the in-memory streams go bounded: lifecycle spans only for
+sampled-in requests, rank timelines collapsed to run-length-encoded
+``mixed`` segments (busy seconds still tracked exactly, so
+utilization answers stay precise), decisions/alerts/failures always
+retained.  ``SamplingPolicy(rate=1.0)`` (or no policy) is
+byte-identical to the §15 instrument.
 """
 from __future__ import annotations
 
 import json
+import logging
+import threading
 from typing import Optional
+
+from repro.core.telemetry_sinks import RollupSink
+
+log = logging.getLogger(__name__)
+
+
+def _raw_info(info: dict) -> dict:
+    """Raw-record projection of an instrument site's ``**info``: the
+    envelope owns the ``"kind"`` key (record kind), so a task-kind info
+    field is renamed ``"kind_"`` (never mutating the caller's dict —
+    it is also stored verbatim in the in-memory streams)."""
+    if "kind" not in info:
+        return info
+    out = dict(info)
+    out["kind_"] = out.pop("kind")
+    return out
 
 #: rank states (DESIGN.md §15 taxonomy).  ``collective`` appears only in
 #: the wall backend's overlay stream (the simulator never enters GFC),
@@ -88,7 +122,7 @@ class Telemetry:
     ``ControlPlane(..., telemetry=tel)`` (or ``ServingEngine``), read the
     products afterwards.  One instance observes ONE plane."""
 
-    def __init__(self):
+    def __init__(self, sinks=None, sampling=None):
         # wall anchor: the engine sets this to its WallClock.t0 so the
         # overlay streams (recorded in absolute monotonic time from
         # worker threads) align with plane-relative timestamps
@@ -107,6 +141,18 @@ class Telemetry:
         self.counters: dict[str, int] = {}
         self.gfc_register_s: list[float] = []    # worker-thread appends
         self.overlay: dict[int, list] = {}       # r -> [(t, dur, op, size)]
+        # §16 streaming: sinks + sampling governor + alert stream
+        self.sampling = sampling
+        self._sampled = sampling is not None and not sampling.full
+        self.sinks: list = []
+        self.alerts: list[dict] = []
+        self._sink_lock = threading.RLock()
+        self._t_last = 0.0                       # stream high-water mark
+        # exact busy accounting when timelines go RLE under sampling
+        self._rank_open: dict[int, tuple] = {}   # r -> (t, state)
+        self._busy_acc: dict[int, float] = {}
+        for s in (sinks or ()):
+            self.attach_sink(s)
 
     # ------------------------------------------------------------------
     # wiring
@@ -119,15 +165,105 @@ class Telemetry:
             self.rank_states.setdefault(r, [(0.0, "idle", {})])
 
     # ------------------------------------------------------------------
+    # sink fan-out (§16): isolation is the contract — a raising sink is
+    # detached (logged once, `sink_detached` counter bumped) and the run
+    # keeps serving
+    # ------------------------------------------------------------------
+    def attach_sink(self, sink):
+        sink.bind(self)
+        self.sinks.append(sink)
+        return sink
+
+    def _drop_sink(self, sink, exc) -> None:
+        try:
+            self.sinks.remove(sink)
+        except ValueError:
+            pass
+        self.counter("sink_detached")
+        log.warning("telemetry sink %s detached after error: %r",
+                    type(sink).__name__, exc, exc_info=True)
+
+    def _fan_out(self, rec: dict, kept: bool = True) -> None:
+        """Forward one raw record: full-stream sinks always, raw
+        exporters only when the sampling verdict retained it."""
+        if not self.sinks:
+            return
+        with self._sink_lock:       # re-entrant: monitors emit alerts
+            for sink in list(self.sinks):
+                if kept or sink.full_stream:
+                    try:
+                        sink.on_event(rec)
+                    except Exception as exc:    # noqa: BLE001 — isolate
+                        self._drop_sink(sink, exc)
+
+    def flush_sinks(self) -> None:
+        with self._sink_lock:
+            for sink in list(self.sinks):
+                try:
+                    sink.flush()
+                except Exception as exc:        # noqa: BLE001 — isolate
+                    self._drop_sink(sink, exc)
+
+    def close_sinks(self) -> None:
+        with self._sink_lock:
+            for sink in list(self.sinks):
+                try:
+                    sink.close()
+                except Exception as exc:        # noqa: BLE001 — isolate
+                    self._drop_sink(sink, exc)
+
+    # ------------------------------------------------------------------
+    # alerts (§16): monitors re-enter the stream here; always retained
+    # ------------------------------------------------------------------
+    def alert(self, monitor: str, t: float, **fields) -> dict:
+        rec = {"kind": "alert", "monitor": monitor, "t": t, **fields}
+        self.alerts.append(rec)
+        self.counter("alerts")
+        self._fan_out(rec, True)
+        return rec
+
+    # ------------------------------------------------------------------
     # rank state timeline (identity-bearing; plane thread only)
     # ------------------------------------------------------------------
     def rank_state(self, t: float, rank: int, state: str, **info):
         seq = self.rank_states.setdefault(rank, [(0.0, "idle", {})])
-        # idempotent states: a pack completion fans out per member, each
-        # freeing the shared rank set — one idle transition, not N
-        if state in ("idle", "dead") and seq[-1][1] == state:
+        if t > self._t_last:
+            self._t_last = t
+        if not self._sampled:
+            # idempotent states: a pack completion fans out per member,
+            # each freeing the shared rank set — one idle transition,
+            # not N
+            if state in ("idle", "dead") and seq[-1][1] == state:
+                return
+            seq.append((t, state, info))
+            if self.sinks:
+                self._fan_out({"kind": "rank_state", "t": t, "rank": rank,
+                               "state": state, **_raw_info(info)}, True)
             return
-        seq.append((t, state, info))
+        # sampling active: dedup against the true open state (the stored
+        # sequence may end in an RLE segment), accumulate busy seconds
+        # exactly, and retain either the detail tuple (sampled-in) or a
+        # merged `mixed` run-length segment (sampled-out)
+        t_open, open_state = self._rank_open.get(rank, (0.0, "idle"))
+        if state in ("idle", "dead") and open_state == state:
+            return
+        if open_state in ("busy", "migrating"):
+            self._busy_acc[rank] = self._busy_acc.get(rank, 0.0) \
+                + max(t - t_open, 0.0)
+        self._rank_open[rank] = (t, state)
+        rec = {"kind": "rank_state", "t": t, "rank": rank,
+               "state": state, **_raw_info(info)}
+        kept = self.sampling.keep(rec)
+        if kept:
+            seq.append((t, state, info))
+        else:
+            last = seq[-1]
+            if last[1] == "mixed":
+                last[2]["n"] += 1
+                last[2]["t_end"] = t
+            else:
+                seq.append((t, "mixed", {"n": 1, "t_end": t}))
+        self._fan_out(rec, kept)
 
     def ranks_idle(self, t: float, ranks):
         for r in sorted(ranks):
@@ -141,10 +277,37 @@ class Telemetry:
     # request lifecycle (identity-bearing; plane thread only)
     # ------------------------------------------------------------------
     def request_event(self, t: float, rid: str, phase: str, **info):
-        if rid not in self.lifecycle:
-            self.lifecycle[rid] = []
-            self.request_order.append(rid)
-        self.lifecycle[rid].append((t, phase, info))
+        if t > self._t_last:
+            self._t_last = t
+        if not self._sampled:
+            if rid not in self.lifecycle:
+                self.lifecycle[rid] = []
+                self.request_order.append(rid)
+            self.lifecycle[rid].append((t, phase, info))
+            if self.sinks:
+                self._fan_out({"kind": "request", "t": t, "req": rid,
+                               "phase": phase, **_raw_info(info)}, True)
+            return
+        # sampling active: outcome counters stay exact (summary()-grade
+        # answers must not depend on which requests were sampled in)
+        if phase == "done":
+            self.counters["requests_done"] = \
+                self.counters.get("requests_done", 0) + 1
+            if (info.get("metrics") or {}).get("violation"):
+                self.counters["slo_violations"] = \
+                    self.counters.get("slo_violations", 0) + 1
+        elif phase == "failed":
+            self.counters["requests_failed"] = \
+                self.counters.get("requests_failed", 0) + 1
+        rec = {"kind": "request", "t": t, "req": rid, "phase": phase,
+               **_raw_info(info)}
+        kept = self.sampling.keep(rec)
+        if kept:
+            if rid not in self.lifecycle:
+                self.lifecycle[rid] = []
+                self.request_order.append(rid)
+            self.lifecycle[rid].append((t, phase, info))
+        self._fan_out(rec, kept)
 
     # ------------------------------------------------------------------
     # decision records + staged explanations (identity-bearing)
@@ -180,37 +343,75 @@ class Telemetry:
         rec["explanation"] = self._staged.pop((action, key), None) \
             if key is not None else None
         self.decisions.append(rec)
+        t = rec.get("t")
+        if t is not None and t > self._t_last:
+            self._t_last = t
+        if self.sinks:
+            drec = _raw_info(rec)       # decision's task-kind -> kind_
+            if drec is rec:
+                drec = dict(rec)
+            drec["kind"] = "decision"
+            self._fan_out(drec, True)   # decisions are always retained
         return rec
 
     # ------------------------------------------------------------------
     # cost-model accuracy (clock-dependent)
     # ------------------------------------------------------------------
-    def observe_cost(self, key: str, predicted: float, observed: float):
+    def observe_cost(self, key: str, predicted: float, observed: float,
+                     *, t: Optional[float] = None,
+                     req: Optional[str] = None):
         rel = abs(predicted - observed) / observed if observed else 0.0
-        self.cost_stream.append({"key": key, "predicted": predicted,
-                                 "observed": observed, "rel_err": rel})
+        kept = True
+        if self._sampled:       # per-request coherence: samples follow
+            kept = self.sampling.keep({"kind": "cost", "req": req})
+        if kept:
+            self.cost_stream.append({"key": key, "predicted": predicted,
+                                     "observed": observed, "rel_err": rel})
+        # the per-cell aggregate stays exact regardless of sampling
         cell = self.cost_cells.setdefault(
             key, {"n": 0, "rel_err": rel, "sum_rel_err": 0.0})
         cell["n"] += 1
         cell["sum_rel_err"] += rel
         cell["rel_err"] = 0.5 * cell["rel_err"] + 0.5 * rel   # rolling EMA
+        if self.sinks:
+            self._fan_out({"kind": "cost",
+                           "t": self._t_last if t is None else t,
+                           "req": req, "key": key, "predicted": predicted,
+                           "observed": observed, "rel_err": rel}, kept)
 
     # ------------------------------------------------------------------
     # counters + wall overlays (clock-dependent)
     # ------------------------------------------------------------------
     def counter(self, name: str, inc: int = 1):
         self.counters[name] = self.counters.get(name, 0) + inc
+        if self.sinks:
+            # counters are pure aggregates: rollups carry them, so raw
+            # exporters drop them under sampling (keep() says False)
+            self._fan_out({"kind": "counter", "t": self._t_last,
+                           "name": name, "inc": inc},
+                          not self._sampled)
 
     def gfc_register(self, seconds: float):
         self.gfc_register_s.append(seconds)     # GIL-atomic append
+        if self.sinks:
+            self._fan_out({"kind": "gfc", "t": self._t_last,
+                           "s": seconds}, True)
 
     def span(self, rank: int, t_start: float, t_end: float, op: str,
              size: int = 0):
         """Wall-only overlay: a collective / p2p / migration interval in
         absolute monotonic time (re-anchored to ``t0`` when set)."""
         base = self.t0 or 0.0
-        self.overlay.setdefault(rank, []).append(
-            (t_start - base, t_end - t_start, op, size))
+        kept = True
+        if self._sampled:
+            kept = self.sampling.keep({"kind": "span", "rank": rank})
+        if kept:
+            self.overlay.setdefault(rank, []).append(
+                (t_start - base, t_end - t_start, op, size))
+        if self.sinks:
+            self._fan_out({"kind": "span", "t": t_start - base,
+                           "rank": rank, "dur": t_end - t_start,
+                           "op": op, "size": size}, kept)
 
     # ------------------------------------------------------------------
     # products
@@ -239,13 +440,27 @@ class Telemetry:
         }
 
     def _makespan(self) -> float:
+        if self._sampled:
+            # retained streams are partial: the high-water mark (tracked
+            # on EVERY event, kept or not) is the true makespan
+            return self._t_last
         ts = [t for seq in self.rank_states.values() for t, _, _ in seq]
         ts += [t for seq in self.lifecycle.values() for t, _, _ in seq]
         return max(ts, default=0.0)
 
     def busy_seconds(self) -> dict[int, float]:
         """Per-rank time spent busy/migrating (interval end = the next
-        transition; a run quiesces with every live rank idle)."""
+        transition; a run quiesces with every live rank idle).  Under
+        sampling the incremental accumulator is EXACT even though the
+        retained timeline is run-length encoded."""
+        if self._sampled:
+            end = self._makespan()
+            out = {r: 0.0 for r in self.rank_states}
+            out.update(self._busy_acc)
+            for r, (t_open, state) in self._rank_open.items():
+                if state in ("busy", "migrating") and end > t_open:
+                    out[r] = out.get(r, 0.0) + end - t_open
+            return out
         end = self._makespan()
         out = {}
         for r, seq in self.rank_states.items():
@@ -284,9 +499,24 @@ class Telemetry:
         n = self.num_ranks or max(len(busy), 1)
         util = {r: (busy[r] / makespan if makespan else 0.0)
                 for r in sorted(busy)}
-        completed = sum(
-            1 for seq in self.lifecycle.values()
-            if any(phase == "done" for _, phase, _ in seq))
+        if self._sampled:
+            # lifecycle retention is partial: outcome counters (bumped
+            # on every event regardless of sampling) carry the truth
+            completed = self.counters.get("requests_done", 0)
+            failed = self.counters.get("requests_failed", 0)
+            violations = self.counters.get("slo_violations", 0) + failed
+        else:
+            completed = failed = violations = 0
+            for seq in self.lifecycle.values():
+                for _, phase, info in seq:
+                    if phase == "done":
+                        completed += 1
+                        if (info.get("metrics") or {}).get("violation"):
+                            violations += 1
+                    elif phase == "failed":
+                        failed += 1
+                        violations += 1     # unfinished == violation §6.1
+        finished = completed + failed
         actions: dict[str, int] = {}
         for d in self.decisions:
             actions[d["action"]] = actions.get(d["action"], 0) + 1
@@ -301,6 +531,8 @@ class Telemetry:
             "goodput_per_rank": (completed / (n * makespan)
                                  if makespan else 0.0),
             "completed": completed,
+            "failed": failed,
+            "violation_rate": violations / finished if finished else 0.0,
             "actions": actions,
             "cost_cells": cells,
             "gfc": {**self.gfc_percentiles(),
@@ -335,17 +567,22 @@ class Telemetry:
                                              + [(end, "", {})]):
                 if state == "idle":
                     continue
+                t_next = nxt[0]
                 if state == "busy":
                     name = (f"{info.get('req', '?')} "
                             f"{info.get('kind', '?')}"
                             f"[{info.get('step', 0)}]")
                 elif state == "migrating":
                     name = "migrate-in"
+                elif state == "mixed":
+                    # RLE aggregate of sampled-out transitions (§16)
+                    name = f"~{info.get('n', 1)} sampled-out"
+                    t_next = info.get("t_end", t_next)
                 else:
                     name = state.upper()
                 events.append({"ph": "X", "pid": host_of(r), "tid": r,
                                "ts": us(t),
-                               "dur": max(us(nxt[0]) - us(t), 0.0),
+                               "dur": max(us(t_next) - us(t), 0.0),
                                "name": name, "cat": state,
                                "args": dict(info)})
         for r, spans in self.overlay.items():
@@ -393,6 +630,27 @@ class Telemetry:
                                    "tid": tid, "ts": us(t), "name": phase,
                                    "cat": "lifecycle",
                                    "args": dict(info)})
+        if self._sampled:
+            # raw spans were sampled out: emit counter tracks from the
+            # attached rollup windows so the trace still carries the
+            # fleet-level signal (§16 satellite)
+            for sink in self.sinks:
+                if isinstance(sink, RollupSink):
+                    for row in sink.timeseries():
+                        for m in ("utilization", "violation_rate",
+                                  "completed"):
+                            events.append({"ph": "C", "pid": cp_pid,
+                                           "tid": 0, "ts": us(row["t0"]),
+                                           "name": f"rollup/{m}",
+                                           "args": {m: row[m]}})
+                    break
+        for a in self.alerts:
+            events.append({"ph": "i", "s": "g", "pid": cp_pid, "tid": 0,
+                           "ts": us(a.get("t") or 0.0),
+                           "name": f"ALERT {a['monitor']}",
+                           "cat": "alert",
+                           "args": {k: v for k, v in a.items()
+                                    if k not in ("kind", "t")}})
         trace = {"traceEvents": events, "displayTimeUnit": "ms"}
         if path is not None:
             with open(path, "w") as f:

@@ -302,6 +302,39 @@ def hybrid_trace(cost: CostModel, *, duration: float = 240.0,
     return out
 
 
+def open_loop_trace(cost: CostModel, *, n_requests: int = 20000,
+                    load: float = 0.7, num_ranks: int = 16,
+                    steps: int = 6, seed: int = 43, degree: int = 8,
+                    alpha: float = 1.25) -> list[Request]:
+    """Fleet-scale open-loop stream (DESIGN.md §16): a fixed-count
+    Poisson stream of M-class images whose deadlines are calibrated
+    against degree-``degree`` service — EDF then serves the stream as
+    ``num_ranks/degree`` concurrent wide requests, so every step fans
+    out ~2x``degree`` rank-timeline transitions.  That event volume is
+    the point: this is the stress input for the telemetry streaming
+    layer (benchmarks/telemetry_scale.py), sized so full in-memory
+    retention is measurably unreasonable and sampling's always-keep
+    floor (one decision per dispatch) still leaves a >=10x reduction.
+    ``load`` just under capacity keeps the backlog bounded while queue
+    fluctuations under tight ``alpha`` still produce a real (~10-30%)
+    SLO violation rate for the burn-rate monitors to chew on."""
+    rand = _lcg(seed)
+    t_d = standalone_service_time("dit-image", "M", cost, steps,
+                                  degree=degree)
+    rate = load * max(num_ranks / degree, 1.0) / t_d
+    out: list[Request] = []
+    t = 0.0
+    for _ in range(n_requests):
+        t += -math.log(max(rand(), 1e-9)) / rate
+        r = make_request("dit-image", "M", t, cost, steps)
+        # no fixed allowance: at these sizes the standard allowance
+        # dwarfs the degree gap and EDF happily serves at degree 1-2,
+        # defeating the fan-out this trace exists to generate
+        r.deadline = r.arrival + alpha * t_d
+        out.append(r)
+    return out
+
+
 def foreground_burst_trace(model: str, cost: CostModel, *,
                            duration: float = 120.0, load: float = 0.5,
                            num_ranks: int = 4, steps: int = 50,

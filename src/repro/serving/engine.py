@@ -104,6 +104,11 @@ class ServingEngine:
                 timeout, len(unfinished), ", ".join(unfinished))
             for rid in unfinished:
                 self.cp._fail_request(rid, "serve-timeout")
+        if self.cp.telemetry is not None:
+            # end-of-run watermark: whatever the sinks still buffer is
+            # flushed out-of-process before the caller reads metrics
+            # (DESIGN.md §16); sinks stay attached for post-run exports
+            self.cp.telemetry.flush_sinks()
         m = self.cp.metrics()
         m["timed_out_requests"] = unfinished
         return m
@@ -119,3 +124,5 @@ class ServingEngine:
 
     def shutdown(self):
         self.backend.shutdown()
+        if self.cp.telemetry is not None:
+            self.cp.telemetry.close_sinks()

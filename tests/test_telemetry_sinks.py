@@ -1,0 +1,387 @@
+"""Streaming telemetry tests (DESIGN.md §16).
+
+Covers the four §16 contracts on the simulator backend:
+
+* **fan-out** — every instrument site forwards raw records to attached
+  sinks (full-stream sinks see everything, raw exporters only the
+  retained stream) without perturbing the control-plane trace;
+* **failure isolation** — a raising sink (including a ``JsonlSink``
+  pointed at an unwritable path) is detached, logged once, counted,
+  and the serving run completes untouched;
+* **sampling** — head sampling is request-coherent (a sampled-in
+  request keeps its WHOLE span), deterministic across processes and
+  backends (FNV-1a, not ``hash``), always keeps decisions and
+  failures, and ``rate=1.0`` is byte-identical to the §15 instrument;
+* **rollups + monitors** — the bounded-memory aggregates reproduce
+  full-retention answers exactly on an un-sampled stream, burn-rate
+  monitors fire with hysteresis, and alerts surface read-only in
+  ``SchedulerView.alerts`` and in the Perfetto export alongside the
+  rollup counter tracks.
+
+The fleet-scale versions of these gates (10x retention reduction, 2%
+rollup accuracy at 2e4 requests) run in benchmarks/telemetry_scale.py.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.configs.dit_models import DIT_IMAGE
+from repro.core.cost_model import CostModel
+from repro.core.policies import make_policy
+from repro.core.scheduler import ControlPlane, trace_signature
+from repro.core.simulator import SimBackend
+from repro.core.slo_monitor import GoodputMonitor, SloBurnRateMonitor
+from repro.core.telemetry import Telemetry
+from repro.core.telemetry_sinks import (ALWAYS_KEEP_PHASES, CountingSink,
+                                        JsonlSink, RollupSink,
+                                        SamplingPolicy, TelemetrySink,
+                                        _fnv1a, _mix64)
+from repro.core.trajectory import ClusterTopology, Request
+from repro.diffusion.adapters import convert_request
+
+CFG = DIT_IMAGE.reduced()
+TOPO = ClusterTopology(num_hosts=2, ranks_per_host=2)
+
+
+def _request(i: int, deadline=None) -> Request:
+    return Request(id=f"r{i}", model="dit-image", height=128, width=128,
+                   frames=1, steps=4, arrival=i * 0.2, deadline=deadline)
+
+
+def _run(telemetry, n: int = 8) -> ControlPlane:
+    cost = CostModel()
+    cp = ControlPlane(TOPO, make_policy("elastic", TOPO.num_ranks), cost,
+                      SimBackend(cost), telemetry=telemetry)
+    for i in range(n):
+        r = _request(i, deadline=i * 0.2 + 30.0)
+        cp.submit(r, convert_request(r, CFG))
+    cp.run()
+    telemetry.close_sinks()
+    return cp
+
+
+# ---------------------------------------------------------------------------
+# fan-out
+# ---------------------------------------------------------------------------
+
+def test_fanout_reaches_sinks():
+    counting = CountingSink()
+    _run(Telemetry(sinks=[counting]))
+    assert counting.events > 0
+    for kind in ("rank_state", "request", "decision"):
+        assert counting.by_kind.get(kind, 0) > 0, counting.by_kind
+
+
+def test_jsonl_sink_exports_valid_lines(tmp_path):
+    path = tmp_path / "stream.jsonl"
+    jsonl = JsonlSink(path, flush_every=16)
+    _run(Telemetry(sinks=[jsonl]))
+    lines = path.read_text().splitlines()
+    assert jsonl.lines_written == len(lines) > 0
+    kinds = set()
+    for line in lines:
+        rec = json.loads(line)
+        assert "kind" in rec
+        kinds.add(rec["kind"])
+    assert {"rank_state", "request", "decision"} <= kinds
+
+
+def test_sinks_do_not_perturb_the_trace(tmp_path):
+    bare = _run(Telemetry())
+    streamed = _run(Telemetry(sinks=[
+        JsonlSink(tmp_path / "s.jsonl"), RollupSink(window_s=2.0),
+        CountingSink(), SloBurnRateMonitor(), GoodputMonitor()]))
+    assert trace_signature(bare.events) == trace_signature(streamed.events)
+
+
+# ---------------------------------------------------------------------------
+# failure isolation
+# ---------------------------------------------------------------------------
+
+class _BoomSink(TelemetrySink):
+    full_stream = True
+
+    def __init__(self, after: int = 5):
+        self.seen = 0
+        self.after = after
+
+    def on_event(self, rec: dict) -> None:
+        self.seen += 1
+        if self.seen >= self.after:
+            raise RuntimeError("sink deliberately exploding")
+
+
+def test_raising_sink_is_detached_and_run_completes():
+    boom, counting = _BoomSink(after=5), CountingSink()
+    tel = Telemetry(sinks=[boom, counting])
+    cp = _run(tel)
+    assert cp.metrics()["completed"] == 8          # serving unaffected
+    assert boom not in tel.sinks                   # detached...
+    assert counting in tel.sinks                   # ...alone
+    assert boom.seen == 5                          # nothing after detach
+    assert tel.counters.get("sink_detached") == 1
+    assert counting.events > 0
+
+
+def test_bad_path_jsonl_sink_is_isolated(tmp_path):
+    # a directory that does not exist: the lazy open raises inside the
+    # fan-out on the first flush, which must detach the sink only
+    bad = JsonlSink(tmp_path / "no-such-dir" / "s.jsonl", flush_every=1)
+    good = JsonlSink(tmp_path / "ok.jsonl", flush_every=1)
+    tel = Telemetry(sinks=[bad, good])
+    cp = _run(tel)
+    assert cp.metrics()["completed"] == 8
+    assert bad not in tel.sinks and good in tel.sinks
+    assert tel.counters.get("sink_detached") == 1
+    assert good.lines_written > 0
+
+
+# ---------------------------------------------------------------------------
+# sampling: coherence, determinism, always-keep
+# ---------------------------------------------------------------------------
+
+def _split_verdicts(n: int = 8, rate: float = 0.5, seed: int = 0):
+    pol = SamplingPolicy(rate=rate, seed=seed)
+    kept = {f"r{i}" for i in range(n) if pol.sample_request(f"r{i}")}
+    return kept, {f"r{i}" for i in range(n)} - kept
+
+
+def test_workload_splits_under_default_seed():
+    # the coherence tests below are vacuous if every request lands on
+    # one side of the verdict; pin the split for the r0..r7 id space
+    kept, dropped = _split_verdicts()
+    assert kept and dropped, (kept, dropped)
+
+
+def test_sampled_in_request_keeps_its_whole_span():
+    full = Telemetry()
+    _run(full)
+    sampled = Telemetry(sampling=SamplingPolicy(rate=0.5, seed=0))
+    _run(sampled)
+    kept, dropped = _split_verdicts()
+    for rid in kept:
+        # per-request coherence: the retained span is the FULL span
+        assert [(p, i) for _, p, i in sampled.lifecycle[rid]] == \
+               [(p, i) for _, p, i in full.lifecycle[rid]], rid
+    for rid in dropped:
+        phases = [p for _, p, _ in sampled.lifecycle.get(rid, [])]
+        assert all(p in ALWAYS_KEEP_PHASES for p in phases), (rid, phases)
+
+
+def test_decisions_and_makespan_survive_sampling():
+    full = Telemetry()
+    _run(full)
+    sampled = Telemetry(sampling=SamplingPolicy(rate=0.0, seed=0))
+    _run(sampled)
+    assert len(sampled.decisions) == len(full.decisions) > 0
+    assert sampled.summary()["makespan_s"] == \
+        pytest.approx(full.summary()["makespan_s"])
+
+
+def test_failed_requests_always_retained():
+    tel = Telemetry(sampling=SamplingPolicy(rate=0.0, seed=0))
+    tel.request_event(1.0, "doomed", "queued")      # sampled out
+    tel.request_event(2.0, "doomed", "failed", metrics={"violation": True})
+    phases = [p for _, p, _ in tel.lifecycle.get("doomed", [])]
+    assert phases == ["failed"]
+
+
+def test_busy_seconds_exact_under_sampling():
+    """The RLE-collapsed timeline still answers utilization EXACTLY:
+    the incremental busy accumulator tracks every transition, kept or
+    not."""
+    full = Telemetry()
+    _run(full)
+    sampled = Telemetry(sampling=SamplingPolicy(rate=0.1, seed=0))
+    _run(sampled)
+    bf, bs = full.busy_seconds(), sampled.busy_seconds()
+    assert set(bf) == set(bs)
+    for r in bf:
+        assert bs[r] == pytest.approx(bf[r], abs=1e-9), r
+    # and the retained timeline actually collapsed
+    states = {s for seq in sampled.rank_states.values()
+              for _, s, _ in seq}
+    assert "mixed" in states
+
+
+def test_kept_set_is_deterministic_and_seed_keyed():
+    a = SamplingPolicy(rate=0.3, seed=7)
+    b = SamplingPolicy(rate=0.3, seed=7)
+    ids = [f"req-{i}" for i in range(400)]
+    va = [a.sample_request(r) for r in ids]
+    vb = [b.sample_request(r) for r in ids]
+    assert va == vb                     # pure function of (seed, id)
+    # verdict is the documented mixed-FNV-1a threshold test, NOT
+    # hash(): hash() is randomized per process, which would break
+    # cross-process and cross-backend kept-set identity
+    thr = int(0.3 * (1 << 32))
+    assert va == [(_mix64(_fnv1a(f"7:{r}")) & 0xFFFFFFFF) < thr
+                  for r in ids]
+    c = SamplingPolicy(rate=0.3, seed=8)
+    assert [c.sample_request(r) for r in ids] != va
+    frac = sum(va) / len(va)
+    assert 0.15 < frac < 0.45           # rate is honored statistically
+
+
+def test_same_seed_same_kept_set_across_runs():
+    """Two independent serving runs (fresh plane, fresh policy state —
+    the same workload either backend would serve) retain the identical
+    request kept-set."""
+    t1 = Telemetry(sampling=SamplingPolicy(rate=0.5, seed=3))
+    t2 = Telemetry(sampling=SamplingPolicy(rate=0.5, seed=3))
+    _run(t1)
+    _run(t2)
+    assert set(t1.lifecycle) == set(t2.lifecycle)
+    assert t1.clock_independent() == t2.clock_independent()
+
+
+def test_rate_one_is_byte_identical_to_the_bare_instrument():
+    bare = Telemetry()
+    gated = Telemetry(sampling=SamplingPolicy(rate=1.0, seed=0))
+    _run(bare)
+    _run(gated)
+    assert gated.rank_states == bare.rank_states
+    assert gated.lifecycle == bare.lifecycle
+    # task ids come from a process-global counter, so two runs in one
+    # process never match on that key; everything else must
+    strip = lambda ds: [{k: v for k, v in d.items() if k != "task"}  # noqa: E731
+                        for d in ds]
+    assert strip(gated.decisions) == strip(bare.decisions)
+    assert gated.clock_independent() == bare.clock_independent()
+    assert gated.summary() == bare.summary()
+
+
+def test_counters_dropped_from_raw_export_under_sampling(tmp_path):
+    path = tmp_path / "s.jsonl"
+    tel = Telemetry(sinks=[JsonlSink(path, flush_every=8),
+                           RollupSink(window_s=2.0)],
+                    sampling=SamplingPolicy(rate=0.5, seed=0))
+    _run(tel)
+    kinds = {json.loads(x)["kind"] for x in path.read_text().splitlines()}
+    assert "counter" not in kinds       # aggregable: rollups carry them
+    rollup = tel.sinks[1]
+    counted = {}
+    for w in rollup.windows.values():
+        for k, v in w["counters"].items():
+            counted[k] = counted.get(k, 0) + v
+    assert counted.get("completions", 0) == \
+        tel.counters.get("completions", 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# rollups
+# ---------------------------------------------------------------------------
+
+def test_rollup_reproduces_full_summary_exactly():
+    rollup = RollupSink(window_s=0.25)
+    tel = Telemetry(sinks=[rollup])
+    _run(tel)
+    s_full, s_roll = tel.summary(), rollup.summary(TOPO.num_ranks)
+    assert s_roll["completed"] == s_full["completed"] == 8
+    assert s_roll["failed"] == s_full["failed"] == 0
+    assert s_roll["violation_rate"] == s_full["violation_rate"]
+    assert s_roll["makespan_s"] == pytest.approx(s_full["makespan_s"])
+    assert s_roll["rank_utilization"] == \
+        pytest.approx(s_full["rank_utilization"], abs=1e-9)
+    assert sum(s_roll["decisions_by_why"].values()) == len(tel.decisions)
+    assert len(rollup.windows) >= 2     # actually windowed
+
+
+def test_rollup_memory_is_windows_not_events():
+    rollup = RollupSink(window_s=5.0)
+    for i in range(5000):
+        t = (i % 50) * 0.1              # 5 s of stream time
+        rollup.on_event({"kind": "request", "t": t, "req": f"q{i}",
+                         "phase": "done", "metrics": {"latency": 0.5}})
+    assert len(rollup.windows) <= 2
+    assert not rollup._req_start        # open-interval maps stay bounded
+
+
+# ---------------------------------------------------------------------------
+# monitors + alert surfaces
+# ---------------------------------------------------------------------------
+
+def _finish(tel, t, rid, violated):
+    tel.request_event(t, rid, "done", metrics={"violation": violated})
+
+
+def test_burn_rate_monitor_fires_with_hysteresis():
+    mon = SloBurnRateMonitor(window_s=10.0, budget=0.05, threshold=2.0,
+                             min_events=5)
+    tel = Telemetry(sinks=[mon])
+    for i in range(5):                  # 100% violation burn = 20x
+        _finish(tel, 0.1 * i, f"v{i}", True)
+    assert mon.alerts_fired == 1
+    assert len(tel.alerts) == 1
+    a = tel.alerts[0]
+    assert a["monitor"] == "slo-burn" and a["value"] >= 2.0
+    for i in range(3):                  # sustained breach: still armed off
+        _finish(tel, 1.0 + 0.1 * i, f"w{i}", True)
+    assert mon.alerts_fired == 1
+    for i in range(40):                 # recovery: the breach ages out
+        _finish(tel, 20.0 + 0.1 * i, f"c{i}", False)
+    assert mon.alerts_fired == 1 and mon._armed
+    for i in range(40):                 # second breach -> second alert
+        _finish(tel, 40.0 + 0.1 * i, f"x{i}", True)
+    assert mon.alerts_fired == 2 and len(tel.alerts) == 2
+
+
+def test_goodput_monitor_warms_up_then_fires():
+    mon = GoodputMonitor(window_s=5.0, floor=0.5, min_events=1)
+    tel = Telemetry(sinks=[mon])
+    tel.num_ranks = 1
+    _finish(tel, 1.0, "a", False)       # inside warm-up: no alert
+    assert mon.alerts_fired == 0
+    _finish(tel, 6.0, "b", False)       # warmed up, 2/5 < 0.5 floor
+    assert mon.alerts_fired == 1
+    assert tel.alerts[0]["monitor"] == "goodput-floor"
+
+
+def test_alerts_surface_read_only_in_scheduler_view():
+    mon = SloBurnRateMonitor(window_s=30.0, budget=0.01, threshold=1.0,
+                             min_events=1)
+    tel = Telemetry(sinks=[mon])
+    cost = CostModel()
+    cp = ControlPlane(TOPO, make_policy("elastic", TOPO.num_ranks), cost,
+                      SimBackend(cost), telemetry=tel)
+    assert cp._view().alerts == ()
+    _finish(tel, 1.0, "r0", True)       # monitor fires into the stream
+    view = cp._view()
+    assert len(view.alerts) == 1
+    assert view.alerts[0]["monitor"] == "slo-burn"
+    assert isinstance(view.alerts, tuple)   # read-only surface
+
+
+# ---------------------------------------------------------------------------
+# perfetto under sampling
+# ---------------------------------------------------------------------------
+
+def test_perfetto_backfills_counter_tracks_from_rollups():
+    rollup = RollupSink(window_s=0.25)
+    # an impossible goodput floor: fires as soon as the window warms up
+    mon = GoodputMonitor(window_s=0.5, floor=1e9, min_events=1)
+    tel = Telemetry(sinks=[rollup, mon],
+                    sampling=SamplingPolicy(rate=0.1, seed=0))
+    _run(tel)
+    trace = tel.perfetto()
+    counters = [e for e in trace["traceEvents"] if e["ph"] == "C"]
+    names = {e["name"] for e in counters}
+    assert {"rollup/utilization", "rollup/violation_rate",
+            "rollup/completed"} <= names
+    assert len(counters) >= 3 * len(rollup.windows) > 0
+    # sampled-out timeline intervals render as RLE aggregate slices
+    assert any(e.get("cat") == "mixed"
+               for e in trace["traceEvents"] if e["ph"] == "X")
+    # the impossible-floor monitor fired: alerts ride along as
+    # global instants
+    assert any(e.get("cat") == "alert"
+               for e in trace["traceEvents"] if e["ph"] == "i")
+
+
+def test_perfetto_without_sampling_has_no_rollup_tracks():
+    tel = Telemetry(sinks=[RollupSink(window_s=2.0)])
+    _run(tel)
+    assert not [e for e in tel.perfetto()["traceEvents"]
+                if e["ph"] == "C"]
